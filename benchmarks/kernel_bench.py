@@ -1,0 +1,35 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness +
+call overhead; the BlockSpec tiling targets the TPU MXU — see DESIGN.md)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import native_deconv, split_filters
+from repro.kernels.ops import sd_deconv_kernel
+
+
+def run(report):
+    report.section("Pallas sd_deconv kernel vs XLA native deconv "
+                   "(interpret mode, CPU)")
+    report.header(["shape", "K/s", "xla_ms", "pallas_ms", "allclose"])
+    key = jax.random.PRNGKey(0)
+    for (h, cin, cout, k, s) in [(16, 64, 32, 5, 2), (32, 32, 16, 4, 2),
+                                 (8, 128, 64, 3, 2)]:
+        x = jax.random.normal(key, (1, h, h, cin), jnp.float32)
+        w = jax.random.normal(key, (k, k, cin, cout), jnp.float32) * 0.05
+        f_ref = jax.jit(lambda a, b: native_deconv(a, b, s, 1))
+        f_ker = jax.jit(lambda a, b: sd_deconv_kernel(a, b, s, 1))
+        ref = f_ref(x, w)
+        out = f_ker(x, w)
+        ok = bool(jnp.allclose(ref, out, atol=1e-4))
+
+        def t(f):
+            jax.block_until_ready(f(x, w))
+            t0 = time.perf_counter()
+            for _ in range(3):
+                jax.block_until_ready(f(x, w))
+            return (time.perf_counter() - t0) / 3 * 1e3
+        report.row([f"{h}x{h}x{cin}->{cout}", f"{k}/{s}",
+                    f"{t(f_ref):.2f}", f"{t(f_ker):.2f}", ok])

@@ -1,0 +1,141 @@
+"""Paper Figs 8-11: analytical cycle/energy model of the two CNN
+processors (dot-production array 16x16, regular 2D array 32x7), with the
+paper's sparse-aware modes.
+
+Cycle model
+-----------
+Both arrays retire ``ceil(Cin/L) * ceil(Cout/U)`` MAC-groups per
+(output-position x filter-tap); zero-skipping removes tap-iterations
+whose operands are statically zero, at the dataflow's granularity:
+
+* A-sparse (activations)  — can skip a tap-iteration only when the whole
+  *input line* it reads is zero (the paper: interleaved NZP zeros are
+  not removable; full zero rows — every second row of the dilated map,
+  and SD's P_I padding rows — are).
+* W-sparse (weights)      — skips taps whose split-filter weight row is
+  the zero expansion (K%s != 0 cases); 2D array only.
+* AW-sparse               — both.
+
+Energy model (Figs 10-11): E = e_mac*MACs + e_buf*buffer_acc +
+e_dram*dram_acc with CACTI-flavoured relative energies; buffer accesses
+follow the executed (post-skip) taps for activations/weights plus output
+write-back; DRAM traffic is the layer I/O + weights, independent of the
+deconv method — which is why the paper's energy gaps are smaller than
+its speedups.
+"""
+
+import math
+from dataclasses import dataclass
+
+from repro.core.accounting import BENCHMARKS, LayerSpec
+
+E_MAC, E_BUF, E_DRAM = 1.0, 6.0, 200.0   # relative energy per op/access
+
+
+@dataclass
+class Arch:
+    name: str
+    lanes: int      # input-channel vector width
+    units: int      # output channels in parallel
+    wsparse_capable: bool
+
+
+DOT = Arch("dot-production 16x16", 16, 16, False)
+ARR2D = Arch("2D array 32x7", 7, 32, True)
+
+
+def _layer_exec(layer: LayerSpec, method: str, mode: str, arch: Arch):
+    """Returns (tap_iterations, macs, act_reads, w_reads, out_writes)
+    for one deconv layer under the given implementation + sparse mode.
+
+    A 'tap iteration' is one (output position x filter tap) group; each
+    costs ceil(Cin/L)*ceil(Cout/U) cycles.
+    """
+    h, w = layer.in_hw
+    k, s = layer.k, layer.s
+    kt = -(-k // s)
+    oh, ow = layer.out_hw()
+    asparse = mode in ("A", "AW")
+    wsparse = mode in ("W", "AW") and arch.wsparse_capable
+
+    if method == "nzp":
+        # dilated map (oh x ow after SAME crop), stride-1 conv, k x k taps
+        taps = oh * ow * k * k
+        if asparse:
+            # full zero ROWS of the dilated input are skippable: rows
+            # not congruent to the lattice ((s-1)/s of them); interleaved
+            # zeros within a surviving row are NOT skippable.
+            taps = taps * (1.0 / s)
+        macs = taps * layer.cin * layer.cout
+    elif method == "sd":
+        # s^2 small convs, kt x kt taps, on the P_I-padded input
+        pi = kt - 1
+        ph, pw = h + 2 * pi, w + 2 * pi
+        taps = (s * s) * (ph - kt + 1) * (pw - kt + 1) * kt * kt
+        if asparse:
+            # the P_I zero padding rows are full lines -> skippable
+            useful = (s * s) * h * w * kt * kt
+            # half the boundary overhang survives (column zeros are
+            # interleaved with real pixels along the unrolled line)
+            taps = useful + 0.5 * (taps - useful)
+        if wsparse:
+            # zero-expansion weight rows are removable: k^2 real taps of
+            # s^2*kt^2 slots
+            taps = taps * (k * k) / (s * s * kt * kt)
+        macs = taps * layer.cin * layer.cout
+    else:
+        raise ValueError(method)
+
+    groups = math.ceil(layer.cin / arch.lanes) * math.ceil(
+        layer.cout / arch.units)
+    cycles = taps * groups
+    act_reads = taps * layer.cin
+    w_reads = taps * layer.cin * layer.cout / max(oh * ow / (h * w), 1.0)
+    out_writes = oh * ow * layer.cout
+    dram = (h * w * layer.cin + oh * ow * layer.cout
+            + layer.k * layer.k * layer.cin * layer.cout)
+    return cycles, macs, act_reads, w_reads, out_writes, dram
+
+
+def network_cost(netname: str, method: str, mode: str, arch: Arch):
+    net = BENCHMARKS[netname]()
+    cyc = en = 0.0
+    for layer in net.deconv_layers():
+        c, m, ar, wr, ow_, dr = _layer_exec(layer, method, mode, arch)
+        cyc += c
+        en += E_MAC * m + E_BUF * (ar + wr + ow_) + E_DRAM * dr
+    return cyc, en
+
+
+def run(report):
+    for arch in (DOT, ARR2D):
+        modes = [("nzp", "none"), ("nzp", "A"), ("sd", "none"), ("sd", "A")]
+        if arch.wsparse_capable:
+            modes += [("sd", "W"), ("sd", "AW")]
+        report.section(f"Figs 8-11 — {arch.name}: normalised speed & "
+                       "energy of deconv layers (NZP baseline = 1.0)")
+        report.header(["net"] + [f"{m}-{md}" for m, md in modes]
+                      + ["best_SD_vs_NZP", "energy_saving"])
+        speedups = []
+        esaves = []
+        for name in BENCHMARKS:
+            base_c, base_e = network_cost(name, "nzp", "none", arch)
+            row = [name]
+            best = 0.0
+            best_e = 0.0
+            for meth, md in modes:
+                c, e = network_cost(name, meth, md, arch)
+                row.append(f"{base_c / c:.2f}x")
+                if meth == "sd":
+                    best = max(best, base_c / c)
+                    best_e = max(best_e, 1 - e / base_e)
+            row.append(f"{best:.2f}x")
+            row.append(f"{best_e * 100:.1f}%")
+            speedups.append(best)
+            esaves.append(best_e)
+            report.row(row)
+        report.note(
+            f"SD-vs-NZP speedup range {min(speedups):.2f}x-"
+            f"{max(speedups):.2f}x (paper: 2.41x-4.34x); energy saving "
+            f"range {min(esaves)*100:.1f}%-{max(esaves)*100:.1f}% "
+            "(paper: 27.7%-54.5%)")

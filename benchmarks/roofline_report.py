@@ -1,0 +1,56 @@
+"""§Roofline report: reads runs/dryrun/*.json into the per-cell table."""
+
+import glob
+import json
+import os
+
+
+def load_records(out_dir="runs/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(report, out_dir="runs/dryrun"):
+    recs = load_records(out_dir)
+    if not recs:
+        report.note("no dry-run records found — run "
+                    "`python -m repro.launch.dryrun --all` first")
+        return
+    report.section("Roofline terms per (arch x shape), single-pod 16x16 "
+                   "(TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)")
+    report.header(["arch", "shape", "hbm_GiB", "compute_s", "memory_s",
+                   "coll_s", "dominant", "useful", "roofline_frac"])
+    for r in recs:
+        if r.get("mesh") != "16x16":
+            continue
+        if r["status"] == "skipped":
+            report.row([r["arch"], r["shape"], "-", "-", "-", "-",
+                        "skipped", "-", "-"])
+            continue
+        if r["status"] != "ok":
+            report.row([r["arch"], r["shape"], "-", "-", "-", "-",
+                        "FAILED", "-", "-"])
+            continue
+        rl = r["roofline"]
+        tot = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        mf = r["model_flops_global"] / 256 / 197e12
+        frac = mf / tot if tot else 0.0
+        report.row([
+            r["arch"], r["shape"],
+            f"{r['memory']['peak_hbm_bytes']/2**30:.1f}",
+            f"{rl['compute_s']:.3f}", f"{rl['memory_s']:.3f}",
+            f"{rl['collective_s']:.3f}", rl["dominant"],
+            f"{rl['useful_ratio']:.2f}", f"{frac:.3f}"])
+
+    report.section("Multi-pod (2x16x16) compile proof")
+    n_ok = sum(1 for r in recs if r.get("mesh") == "2x16x16"
+               and r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r.get("mesh") == "2x16x16"
+                 and r["status"] == "skipped")
+    n_fail = sum(1 for r in recs if r.get("mesh") == "2x16x16"
+                 and r["status"] == "failed")
+    report.note(f"2x16x16 cells: {n_ok} compiled ok, {n_skip} skipped "
+                f"(documented), {n_fail} failed")

@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table/figure + roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only tables123,procmodel
+"""
+
+import argparse
+import sys
+import time
+
+
+class Report:
+    """Plain-text table printer (also keeps CSV lines)."""
+
+    def __init__(self):
+        self.csv = []
+
+    def section(self, title):
+        print(f"\n=== {title} ===")
+        self._cols = None
+
+    def header(self, cols):
+        self._cols = [str(c) for c in cols]
+        print(" | ".join(f"{c:>14}" if i else f"{c:<24}"
+                         for i, c in enumerate(self._cols)))
+
+    def row(self, vals):
+        vals = [str(v) for v in vals]
+        print(" | ".join(f"{v:>14}" if i else f"{v:<24}"
+                         for i, v in enumerate(vals)))
+        self.csv.append(",".join(vals))
+
+    def note(self, text):
+        print(f"  -> {text}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+
+    from benchmarks import (commodity, kernel_bench, procmodel,
+                            roofline_report, sd_roofline, table4_ssim,
+                            tables123)
+    mods = {"tables123": tables123, "table4_ssim": table4_ssim,
+            "procmodel": procmodel, "commodity": commodity,
+            "kernel_bench": kernel_bench, "sd_roofline": sd_roofline,
+            "roofline_report": roofline_report}
+    wanted = (args.only.split(",") if args.only else list(mods))
+    report = Report()
+    t0 = time.time()
+    for name in wanted:
+        t1 = time.time()
+        mods[name].run(report)
+        print(f"  [{name}: {time.time()-t1:.1f}s]")
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table 4 / Figs 13-14: conversion quality (SSIM vs raw deconv).
+
+SD must be exactly 1.0; Shi [30] and Chang [31] degrade.  The paper's
+absolute numbers come from trained generators; with random weights we
+additionally report smooth-input SSIM, which reproduces the paper's
+*ordering* (FST's larger maps tolerate [30]'s shift better than DCGAN).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ssim
+from repro.models.generative import build
+
+PAPER = {"dcgan": (1.0, 0.568, 0.534), "fst": (1.0, 0.939, 0.742)}
+
+
+def run(report):
+    report.section("Table 4 — SSIM of deconv conversions vs native")
+    report.header(["net", "SD", "Shi[30]", "Chang[31]",
+                   "paper(SD,Shi,Chang)"])
+    key = jax.random.PRNGKey(0)
+    for net in ("dcgan", "fst"):
+        ref_model = build(net, "native")
+        params = ref_model.init(key)
+        if net == "dcgan":
+            x = jax.random.normal(jax.random.PRNGKey(1),
+                                  ref_model.input_shape(4))
+        else:  # smooth image input (style transfer content image)
+            low = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16, 3))
+            x = jnp.tanh(jax.image.resize(low, (4, 256, 256, 3), "cubic"))
+        ref = ref_model.apply(params, x)
+        vals = []
+        for impl in ("sd", "shi", "chang"):
+            out = build(net, impl).apply(params, x)
+            vals.append(float(ssim(ref, out)))
+        report.row([net, f"{vals[0]:.3f}", f"{vals[1]:.3f}",
+                    f"{vals[2]:.3f}", PAPER[net]])
+        assert vals[0] > 0.9999, "SD must be bit-exact"

@@ -1,0 +1,35 @@
+"""Paper Tables 1-3: operand & parameter accounting, ours vs published."""
+
+from repro.core.accounting import (BENCHMARKS, PAPER_TABLE1, PAPER_TABLE2,
+                                   PAPER_TABLE3)
+
+M = 1e6
+
+
+def run(report):
+    report.section("Table 1 — total vs deconv MACs (M)")
+    report.header(["net", "total", "deconv", "paper_total", "paper_deconv"])
+    for name, fn in BENCHMARKS.items():
+        n = fn()
+        pt, pd = PAPER_TABLE1[name]
+        report.row([name, f"{n.total_macs()/M:.2f}",
+                    f"{n.deconv_macs()/M:.2f}", pt, pd])
+
+    report.section("Table 2 — deconv MACs: original / NZP / SD (M)")
+    report.header(["net", "orig", "nzp", "sd", "paper(orig,nzp,sd)",
+                   "sd_vs_nzp_speedup"])
+    for name, fn in BENCHMARKS.items():
+        n = fn()
+        o, z, s = (n.deconv_macs() / M, n.deconv_nzp_macs() / M,
+                   n.deconv_sd_macs() / M)
+        report.row([name, f"{o:.2f}", f"{z:.2f}", f"{s:.2f}",
+                    PAPER_TABLE2[name], f"{z/s:.2f}x"])
+
+    report.section("Table 3 — deconv params: deform[29] / SD / compressed (M)")
+    report.header(["net", "orig", "sd", "compressed", "paper"])
+    for name, fn in BENCHMARKS.items():
+        n = fn()
+        report.row([name, f"{n.deconv_params()/M:.3f}",
+                    f"{n.deconv_sd_params()/M:.3f}",
+                    f"{n.deconv_sd_params_compressed()/M:.3f}",
+                    PAPER_TABLE3[name]])

@@ -1,0 +1,10 @@
+"""Serve a small LM with batched requests (continuous-batching-lite).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "xlstm-350m", "--reduced", "--requests", "8",
+          "--max-new", "12", "--slots", "4"])

@@ -1,0 +1,25 @@
+"""Train an LM end-to-end with the production driver (checkpoint/resume).
+
+Default is a fast reduced config; ``--full-350m`` runs the real
+xlstm-350m (hours on CPU — sized for the TPU mesh).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--full-350m", action="store_true")
+    ap.add_argument("--arch", default="xlstm-350m")
+    args = ap.parse_args()
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--out", "runs/train_lm", "--ckpt-every", "25"]
+    if not args.full_350m:
+        argv.append("--reduced")
+    train_main(argv)

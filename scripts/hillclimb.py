@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimb driver: run named config variants of one cell and log
+the roofline deltas.
+
+  PYTHONPATH=src python scripts/hillclimb.py --cell internlm2-20b:train_4k \
+      --exp base --exp fsdp:mesh_strategy=fsdp
+"""
+
+import argparse
+import json
+import time
+
+from repro.launch.dryrun import run_cell
+
+CASTS = {"mesh_strategy": str, "act_shard": str, "moe_sharding": str,
+         "microbatch": int, "capacity_factor": float, "remat": str, "act_shard": str,
+         "fsdp_train": lambda v: v == "True",
+         "fsdp_serve": lambda v: v == "True",
+         "norm_barrier": lambda v: v == "True",
+         "attn_block": int, "mamba_chunk": int, "mlstm_chunk": int,
+         "opt_state_dtype": str, "param_dtype": str, "top_k": int}
+
+
+def parse_exp(spec: str):
+    if ":" not in spec:
+        return spec, {}
+    name, rest = spec.split(":", 1)
+    ov = {}
+    for kv in rest.split(","):
+        k, v = kv.split("=")
+        ov[k] = CASTS[k](v)
+    return name, ov
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)   # arch:shape
+    ap.add_argument("--exp", action="append", required=True)
+    ap.add_argument("--out", default="runs/perf")
+    ap.add_argument("--full", action="store_true",
+                    help="include the full-depth compile (memory numbers)")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    os.makedirs(args.out, exist_ok=True)
+
+    for spec in args.exp:
+        name, ov = parse_exp(spec)
+        tag = f"{arch}__{shape}__{name}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            rec = json.load(open(path))
+        else:
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, shape, multi_pod=False, overrides=ov,
+                               fast=not args.full)
+                rec["experiment"] = name
+                rec["overrides"] = ov
+                rec["wall_s"] = round(time.time() - t0, 1)
+            except Exception as e:
+                import traceback
+                rec = {"status": "failed", "experiment": name,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-1500:]}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            tot = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            ideal = rec["model_flops_global"] / 256 / 197e12
+            mem = rec.get("memory", {}).get("peak_hbm_bytes")
+            print(f"{name:28} compute={r['compute_s']:8.3f}s "
+                  f"memory={r['memory_s']:8.3f}s coll={r['collective_s']:8.3f}s "
+                  f"dom={r['dominant'][:4]} roofline_frac={ideal/tot:.3f}"
+                  + (f" hbm={mem/2**30:.1f}G" if mem else ""))
+        else:
+            print(f"{name:28} FAILED: {rec['error'][:120]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing (save/restore/restart discovery)."""
+
+from .manager import CheckpointManager, restore_latest
+
+__all__ = ["CheckpointManager", "restore_latest"]

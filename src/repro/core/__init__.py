@@ -1,0 +1,17 @@
+"""Core: the paper's Split Deconvolution contribution + accounting."""
+
+from .deconv import (conv2d, deconv_output_shape, depth_to_space,
+                     dilate_input, native_deconv, nzp_deconv, sd_deconv,
+                     sd_deconv_presplit, sd_geometry, same_deconv_pads,
+                     space_to_depth, split_filters)
+from .accounting import BENCHMARKS, LayerSpec, NetworkSpec
+from .ssim import ssim
+from .wrong_baselines import chang_deconv, shi_deconv
+
+__all__ = [
+    "conv2d", "deconv_output_shape", "depth_to_space", "dilate_input",
+    "native_deconv", "nzp_deconv", "sd_deconv", "sd_deconv_presplit",
+    "sd_geometry", "same_deconv_pads", "space_to_depth", "split_filters",
+    "BENCHMARKS", "LayerSpec", "NetworkSpec", "ssim",
+    "chang_deconv", "shi_deconv",
+]

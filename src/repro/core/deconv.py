@@ -1,0 +1,291 @@
+"""Split Deconvolution (SD) — the paper's core contribution, in JAX.
+
+Three interchangeable implementations of 2-D transposed convolution
+("deconvolution"), all bit-identical in f32:
+
+* ``native_deconv``  — reference: ``lax.conv_general_dilated`` with
+  ``lhs_dilation`` (what a framework with native deconv support runs).
+* ``nzp_deconv``     — Naive Zero Padding baseline: materialise the
+  ``s-1`` inserted zeros and run a stride-1 convolution.  This is the
+  paper's baseline and deliberately wastes ~``s^2``x MACs.
+* ``sd_deconv``      — Split Deconvolution: the deconv filter is split
+  offline into ``s^2`` stride-1 convolution filters (``split_filters``);
+  at runtime one *single grouped* stride-1 convolution runs on the
+  un-dilated input and a pixel-shuffle (``depth_to_space``) interleaves
+  the result.  No inserted zeros ever reach the MXU.
+
+Conventions
+-----------
+Activations are NHWC.  Deconv filters are HWIO = ``(K_h, K_w, C_in,
+C_out)``; the operation computed by all three implementations is
+
+    O[b, y, x, oc] = sum_{i, j, ic} I[b, i, j, ic] * W[y - s_h*i + p_h',
+                                                       x - s_w*j + p_w', ic, oc]
+
+i.e. the standard transposed convolution with stride ``s`` and padding
+``p`` (``out = (in-1)*s + K - 2p``), identical to
+``torch.nn.ConvTranspose2d`` semantics.
+
+The SD math (paper Eqs. 1-13, re-derived 0-based)
+-------------------------------------------------
+With ``K_T = ceil(K/s)`` and ``P_K = s*K_T - K`` (filter zero-expansion on
+the *top/left*), sub-filter ``n = p_y*s + p_x`` is
+
+    W_n[t_y, t_x, ic, oc] = W_exp[p_y + s*(K_T-1-t_y),
+                                  p_x + s*(K_T-1-t_x), ic, oc]
+
+(the per-phase 180-degree rotation).  With the input padded by
+``P_I = K_T - 1`` on every side, each sub-filter's stride-1 valid conv
+output ``ConvO_n`` has spatial size ``H + K_T - 1``, and the pixel-shuffle
+``PS[s*v + p_y, s*u + p_x] = ConvO_{p_y*s+p_x}[v, u]`` satisfies
+
+    Deconv(I, W)[y, x] = PS[y + P_K, x + P_K]          (unpadded deconv)
+
+so the full deconv output is a *contiguous crop* of the pixel-shuffled
+array — the stride-``s`` DMA write of the paper becomes a pure layout op
+(depth_to_space) that XLA folds into the conv epilogue on TPU.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+IntPair = Union[int, Tuple[int, int]]
+
+
+def _pair(v: IntPair) -> Tuple[int, int]:
+    if isinstance(v, (tuple, list)):
+        a, b = v
+        return int(a), int(b)
+    return int(v), int(v)
+
+
+def _pads(padding) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """Normalise padding to ((top, bottom), (left, right)).
+
+    Accepts: int p, (ph, pw), or ((pt, pb), (pl, pr)).
+    """
+    if isinstance(padding, int):
+        return (padding, padding), (padding, padding)
+    a, b = padding
+    if isinstance(a, int):
+        return (a, a), (b, b)
+    return (tuple(int(x) for x in a), tuple(int(x) for x in b))
+
+
+def same_deconv_pads(kernel: IntPair, stride: IntPair):
+    """TF conv2d_transpose 'SAME' crop amounts (out = in*s)."""
+    (kh, kw), (sh, sw) = _pair(kernel), _pair(stride)
+    ah, aw = max(kh - sh, 0), max(kw - sw, 0)
+    return (ah // 2, ah - ah // 2), (aw // 2, aw - aw // 2)
+
+
+def deconv_output_shape(in_hw: Tuple[int, int], kernel: IntPair, stride: IntPair,
+                        padding=0) -> Tuple[int, int]:
+    """Spatial output shape of a transposed conv: (in-1)*s + K - pt - pb."""
+    (kh, kw), (sh, sw) = _pair(kernel), _pair(stride)
+    (pt, pb), (pl, pr) = _pads(padding)
+    h, w = in_hw
+    return (h - 1) * sh + kh - pt - pb, (w - 1) * sw + kw - pl - pr
+
+
+# ---------------------------------------------------------------------------
+# Reference implementations
+# ---------------------------------------------------------------------------
+
+def native_deconv(x: jax.Array, w: jax.Array, stride: IntPair,
+                  padding=0) -> jax.Array:
+    """Transposed conv via lax.conv_general_dilated (lhs_dilation).
+
+    x: (B, H, W, C_in); w: (K_h, K_w, C_in, C_out).
+    """
+    sh, sw = _pair(stride)
+    (pt, pb), (pl, pr) = _pads(padding)
+    kh, kw = w.shape[0], w.shape[1]
+    if min(kh - 1 - pt, kh - 1 - pb, kw - 1 - pl, kw - 1 - pr) < 0:
+        raise ValueError(f"padding {padding} too large for kernel {(kh, kw)}")
+    return lax.conv_general_dilated(
+        x, w[::-1, ::-1],                       # 180-degree spatial rotation
+        window_strides=(1, 1),
+        padding=[(kh - 1 - pt, kh - 1 - pb), (kw - 1 - pl, kw - 1 - pr)],
+        lhs_dilation=(sh, sw),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def dilate_input(x: jax.Array, stride: IntPair) -> jax.Array:
+    """Insert (s-1) zeros between spatial elements: the NZP materialisation."""
+    sh, sw = _pair(stride)
+    b, h, w, c = x.shape
+    out = jnp.zeros((b, (h - 1) * sh + 1, (w - 1) * sw + 1, c), x.dtype)
+    return out.at[:, ::sh, ::sw, :].set(x)
+
+
+def nzp_deconv(x: jax.Array, w: jax.Array, stride: IntPair,
+               padding=0) -> jax.Array:
+    """Naive Zero Padding baseline: materialised dilation + stride-1 conv.
+
+    Bit-identical to ``native_deconv`` but performs the full redundant
+    computation the paper measures (Table 2, 'Naive Zero-padding').
+    """
+    (pt, pb), (pl, pr) = _pads(padding)
+    kh, kw = w.shape[0], w.shape[1]
+    xd = dilate_input(x, stride)
+    return lax.conv_general_dilated(
+        xd, w[::-1, ::-1],
+        window_strides=(1, 1),
+        padding=[(kh - 1 - pt, kh - 1 - pb), (kw - 1 - pl, kw - 1 - pr)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Split Deconvolution
+# ---------------------------------------------------------------------------
+
+def sd_geometry(kernel: IntPair, stride: IntPair):
+    """(K_T, P_K, P_I) per spatial dim — paper Eqs. (1), (2), (9)."""
+    (kh, kw), (sh, sw) = _pair(kernel), _pair(stride)
+    kth, ktw = -(-kh // sh), -(-kw // sw)           # ceil
+    return (kth, ktw), (sh * kth - kh, sw * ktw - kw), (kth - 1, ktw - 1)
+
+
+def split_filters(w: jax.Array, stride: IntPair) -> jax.Array:
+    """Offline filter transform (paper steps 1+2, Eqs. 1-8).
+
+    w: (K_h, K_w, C_in, C_out)  ->  (K_T_h, K_T_w, C_in, s_h*s_w*C_out).
+
+    Output channel layout is n-major: channel ``n*C_out + oc`` holds
+    sub-filter ``n = p_y*s_w + p_x`` (row-phase major), which is exactly
+    what ``depth_to_space`` expects.
+    """
+    sh, sw = _pair(stride)
+    kh, kw, cin, cout = w.shape
+    (kth, ktw), (pkh, pkw), _ = sd_geometry((kh, kw), (sh, sw))
+    # 1) expand with zeros on TOP and LEFT (paper: guarantees the pixel-
+    #    shuffled output is the deconv output cropped by P_K).
+    we = jnp.pad(w, ((pkh, 0), (pkw, 0), (0, 0), (0, 0)))
+    # 2) sample with stride s and rotate 180 deg per sub-filter.
+    #    index u = m*s + p  ->  (m, p); tap t = K_T-1-m  (the rotation).
+    we = we.reshape(kth, sh, ktw, sw, cin, cout)
+    we = we[::-1, :, ::-1, :, :, :]                     # flip m_y, m_x
+    we = we.transpose(0, 2, 4, 1, 3, 5)                 # (kt,kt,cin,sy,sx,cout)
+    return we.reshape(kth, ktw, cin, sh * sw * cout)
+
+
+def depth_to_space(y: jax.Array, stride: IntPair) -> jax.Array:
+    """Pixel-shuffle: (B,H,W,s_h*s_w*C) -> (B,s_h*H,s_w*W,C), n-major layout.
+
+    This is the TPU-native realisation of the paper's stride-s DMA write
+    (output reorganisation, Eqs. 10-13).
+    """
+    sh, sw = _pair(stride)
+    b, h, w, c = y.shape
+    cout = c // (sh * sw)
+    y = y.reshape(b, h, w, sh, sw, cout)
+    y = y.transpose(0, 1, 3, 2, 4, 5)                   # (b, h, sy, w, sx, c)
+    return y.reshape(b, h * sh, w * sw, cout)
+
+
+def space_to_depth(x: jax.Array, stride: IntPair) -> jax.Array:
+    """Inverse pixel-shuffle (used by VLM patch-embed / Mamba fold paths)."""
+    sh, sw = _pair(stride)
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // sh, sh, w // sw, sw, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h // sh, w // sw, sh * sw * c)
+
+
+def sd_deconv_presplit(x: jax.Array, ws: jax.Array, kernel: IntPair,
+                       stride: IntPair, padding=0,
+                       conv_fn=None) -> jax.Array:
+    """Runtime SD (paper steps 3+4) given pre-split filters ``ws``.
+
+    ``ws`` is the output of :func:`split_filters`; splitting is offline and
+    reused across inference calls, as in the paper.
+    ``conv_fn(x, w)`` may override the stride-1 VALID convolution (e.g. the
+    Pallas kernel); default is XLA's conv.
+    """
+    sh, sw = _pair(stride)
+    (pt, pb), (pl, pr) = _pads(padding)
+    (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry(kernel, stride)
+    oh, ow = deconv_output_shape(x.shape[1:3], kernel, stride, padding)
+
+    # step 3: pad the input with P_I zeros per side; one grouped stride-1
+    # conv computes all s^2 sub-filter outputs in a single GEMM-shaped op.
+    xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
+    if conv_fn is None:
+        y = lax.conv_general_dilated(
+            xp, ws, window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    else:
+        y = conv_fn(xp, ws)
+    # step 4: interleave (pixel-shuffle) + crop P_K (+ user padding p).
+    ps = depth_to_space(y, stride)
+    return lax.slice(ps, (0, pkh + pt, pkw + pl, 0),
+                     (ps.shape[0], pkh + pt + oh, pkw + pl + ow, ps.shape[3]))
+
+
+def sd_deconv(x: jax.Array, w: jax.Array, stride: IntPair,
+              padding=0, conv_fn=None) -> jax.Array:
+    """Split Deconvolution, end to end (splits filters inline).
+
+    Prefer :func:`split_filters` + :func:`sd_deconv_presplit` in real
+    deployments so the offline transform is amortised.
+    """
+    ws = split_filters(w, stride)
+    return sd_deconv_presplit(x, ws, w.shape[:2], stride, padding, conv_fn)
+
+
+def sd_deconv_paper(x: jax.Array, w: jax.Array, stride: IntPair,
+                    padding=0) -> jax.Array:
+    """Paper-faithful SD deployment: ``s^2`` *separate sequential* small
+    convolutions (the edge-processor execution model of Algorithm 2) whose
+    outputs are interleaved by the stride-s write.
+
+    Numerically identical to :func:`sd_deconv`; on TPU the grouped
+    single-conv formulation (sd_deconv) reuses each input tile for all
+    s^2 sub-filters in one GEMM — the beyond-paper optimisation measured
+    in benchmarks/sd_roofline.py.
+    """
+    sh, sw = _pair(stride)
+    (pt, pb), (pl, pr) = _pads(padding)
+    kernel = w.shape[:2]
+    (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry(kernel, stride)
+    oh, ow = deconv_output_shape(x.shape[1:3], kernel, stride, padding)
+    ws = split_filters(w, stride)            # (KT,KT,Cin,s*s*Cout)
+    cout = w.shape[3]
+    xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
+    outs = []
+    for n in range(sh * sw):                 # paper: one conv per split
+        wn = lax.slice_in_dim(ws, n * cout, (n + 1) * cout, axis=3)
+        outs.append(lax.conv_general_dilated(
+            xp, wn, window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    y = jnp.concatenate(outs, axis=-1)       # n-major channel layout
+    ps = depth_to_space(y, stride)
+    return lax.slice(ps, (0, pkh + pt, pkw + pl, 0),
+                     (ps.shape[0], pkh + pt + oh, pkw + pl + ow,
+                      ps.shape[3]))
+
+
+# ---------------------------------------------------------------------------
+# Standard convolution helper (shared by models)
+# ---------------------------------------------------------------------------
+
+def conv2d(x: jax.Array, w: jax.Array, stride: IntPair = 1,
+           padding="SAME") -> jax.Array:
+    """Plain NHWC/HWIO cross-correlation (the op CNN processors run)."""
+    sh, sw = _pair(stride)
+    if isinstance(padding, int):
+        padding = [(padding, padding), (padding, padding)]
+    return lax.conv_general_dilated(
+        x, w, window_strides=(sh, sw), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,47 @@
+"""SSIM (Wang et al. 2004) — the paper's Table 4 / Figs 13-14 metric."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def _gaussian_kernel(size: int = 11, sigma: float = 1.5) -> jnp.ndarray:
+    x = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-(x ** 2) / (2 * sigma ** 2))
+    g = g / g.sum()
+    return jnp.outer(g, g)
+
+
+def ssim(img_a: jax.Array, img_b: jax.Array, data_range: float = 2.0,
+         window: int = 11, sigma: float = 1.5) -> jax.Array:
+    """Mean SSIM between two NHWC images (per-channel windows, averaged).
+
+    ``data_range`` defaults to 2.0 because generator outputs are tanh
+    in [-1, 1].
+    """
+    a = img_a.astype(jnp.float32)
+    b = img_b.astype(jnp.float32)
+    c = a.shape[-1]
+    k = _gaussian_kernel(window, sigma)
+    # depthwise gaussian filter: (K, K, 1, C) with feature_group_count=C
+    kern = jnp.tile(k[:, :, None, None], (1, 1, 1, c))
+
+    def filt(x):
+        return lax.conv_general_dilated(
+            x, kern, window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c)
+
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    mu_a, mu_b = filt(a), filt(b)
+    mu_aa, mu_bb, mu_ab = mu_a * mu_a, mu_b * mu_b, mu_a * mu_b
+    var_a = filt(a * a) - mu_aa
+    var_b = filt(b * b) - mu_bb
+    cov = filt(a * b) - mu_ab
+    s = ((2 * mu_ab + c1) * (2 * cov + c2)) / (
+        (mu_aa + mu_bb + c1) * (var_a + var_b + c2))
+    return jnp.mean(s)

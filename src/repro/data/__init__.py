@@ -1,0 +1,6 @@
+"""Data pipeline substrate."""
+
+from .pipeline import (GANLatentPipeline, SyntheticTokenPipeline,
+                       make_pipeline)
+
+__all__ = ["SyntheticTokenPipeline", "GANLatentPipeline", "make_pipeline"]

@@ -1,0 +1,326 @@
+"""Sharding rules + activation-constraint helpers.
+
+The model code calls ``constrain(x, 'batch', None, 'tensor')`` with
+*logical* axis names; a mesh context installed by the launcher maps them
+to physical mesh axes ('data', 'model', optional outer 'pod').  Without
+a context every constraint is a no-op, so single-device smoke tests run
+the exact same model code.
+
+Logical axes:
+  'batch'   -> (pod, data)   (all pure-DP axes)
+  'tensor'  -> model          (TP: heads / ffn / vocab)
+  'expert'  -> model          (EP, when cfg.moe_sharding == 'ep')
+  'fsdp'    -> data           (param shards, ZeRO-3-style, optional)
+  'seq'     -> data           (sequence parallelism for long-context)
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+class MeshContext:
+    """Maps logical axes to physical mesh axes under a strategy.
+
+    strategy='tp'   — Megatron: batch over (pod,data), TP/EP over model,
+                      params additionally FSDP-sharded over data.
+    strategy='fsdp' — ZeRO-3/DP: batch over ALL axes, no tensor
+                      parallelism; params fully sharded over (data,model).
+                      The right regime when params/chip is small and the
+                      per-layer TP collectives would dominate (see §Perf).
+    """
+
+    def __init__(self, mesh: Mesh, *, fsdp: bool = True,
+                 strategy: str = "tp"):
+        self.mesh = mesh
+        self.strategy = strategy
+        names = mesh.axis_names
+        if strategy == "fsdp":
+            self.batch_axes: Tuple[str, ...] = tuple(
+                a for a in ("pod", "data", "model") if a in names)
+            self.logical: Dict[str, Any] = {
+                "batch": self.batch_axes,
+                "tensor": None,
+                "expert": "model" if "model" in names else None,
+                "fsdp": tuple(a for a in ("data", "model") if a in names)
+                if fsdp else None,
+            }
+        else:
+            self.batch_axes = tuple(
+                a for a in ("pod", "data") if a in names)
+            self.logical = {
+                "batch": self.batch_axes,
+                "tensor": "model" if "model" in names else None,
+                "expert": "model" if "model" in names else None,
+                "fsdp": "data" if (fsdp and "data" in names) else None,
+            }
+
+    def spec(self, *logical_axes) -> P:
+        phys = []
+        for ax in logical_axes:
+            if ax is None:
+                phys.append(None)
+            elif isinstance(ax, tuple):
+                resolved = tuple(
+                    r for a in ax for r in self._flat(a) if r is not None)
+                phys.append(resolved if resolved else None)
+            else:
+                r = self._flat(ax)
+                phys.append(r if len(r) > 1 else (r[0] if r else None))
+        # drop trailing Nones for cleanliness
+        return P(*phys)
+
+    def _flat(self, ax) -> Tuple[str, ...]:
+        v = self.logical.get(ax, ax)
+        if v is None:
+            return ()
+        if isinstance(v, tuple):
+            return v
+        return (v,)
+
+    def sharding(self, *logical_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+
+def current() -> Optional[MeshContext]:
+    return getattr(_ctx, "mc", None)
+
+
+@contextmanager
+def mesh_context(mesh: Optional[Mesh], **kw):
+    """Install the mesh for model-internal sharding constraints."""
+    prev = getattr(_ctx, "mc", None)
+    _ctx.mc = MeshContext(mesh, **kw) if mesh is not None else None
+    try:
+        yield _ctx.mc
+    finally:
+        _ctx.mc = prev
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op w/o mesh).
+
+    Shape-aware: any requested axis that doesn't divide the corresponding
+    array dim degrades to replicated (e.g. batch=1 in long_500k, or 40
+    query heads on a 16-way model axis) instead of forcing GSPMD padding.
+    """
+    mc = current()
+    if mc is None:
+        return x
+    eff = []
+    for i, ax in enumerate(logical_axes):
+        if ax is None or i >= x.ndim:
+            eff.append(None)
+            continue
+        n = 1
+        for phys in (mc._flat(a2) for a2 in
+                     (ax if isinstance(ax, tuple) else (ax,))):
+            for p in phys:
+                n *= dict(zip(mc.mesh.axis_names,
+                              mc.mesh.devices.shape))[p]
+        eff.append(ax if (n and x.shape[i] % n == 0) else None)
+    spec = mc.spec(*eff)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mc.mesh, spec))
+
+
+def constrain_act(x: jax.Array, *, seq: bool) -> jax.Array:
+    """Residual-stream constraint: (B, S, d) with optional Megatron-SP
+    sequence sharding over the model axis (memory / collective lever)."""
+    if seq:
+        return constrain(x, "batch", "tensor", None)
+    return constrain(x, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-regex -> logical spec)
+# ---------------------------------------------------------------------------
+
+# Order matters: first match wins.  Specs are given for the *unstacked*
+# layer params; a leading None is prepended automatically for the scan
+# (repeat) axis when the actual array has one more dim than the rule.
+PARAM_RULES: List[Tuple[str, Tuple]] = [
+    (r"embed$", ("tensor", "fsdp")),            # (vocab, d)
+    (r"head$", ("fsdp", "tensor")),             # (d, vocab)
+    (r"pos_embed.*$", (None, "tensor")),
+    (r"patch_proj$", (None, "tensor")),
+    # attention
+    (r"wq$|wk$|wv$", ("fsdp", "tensor")),
+    (r"wo$", ("tensor", "fsdp")),
+    (r"bq$|bk$|bv$", ("tensor",)),
+    # dense mlp
+    (r"wg$|wu$", ("fsdp", "tensor")),
+    (r"wd$", ("tensor", "fsdp")),
+    # moe (expert-parallel): experts over model axis
+    (r"moe_ep/(wg|wu)$", ("expert", "fsdp", None)),
+    (r"moe_ep/wd$", ("expert", None, "fsdp")),
+    # moe (tensor-parallel inside experts)
+    (r"moe_tp/(wg|wu)$", (None, "fsdp", "tensor")),
+    (r"moe_tp/wd$", (None, "tensor", "fsdp")),
+    (r"router$", (None, None)),
+    # mamba
+    (r"in_proj$", ("fsdp", "tensor")),
+    (r"out_proj$", ("tensor", "fsdp")),
+    (r"conv_w$", (None, "tensor")),
+    (r"conv_b$", ("tensor",)),
+    (r"x_proj$", ("tensor", None)),
+    (r"dt_proj$", (None, "tensor")),
+    (r"dt_bias$", ("tensor",)),
+    (r"A_log$", ("tensor", None)),
+    (r"D$", ("tensor",)),
+    # xlstm
+    (r"up$", ("fsdp", "tensor")),
+    (r"down$", ("tensor", "fsdp")),
+    (r"wif$|bif$", (None,)),
+    (r"wx$", ("fsdp", "tensor")),
+    (r"wh$", (None, "tensor")),
+    # defaults: norms / scalars replicated
+    (r".*", ()),
+]
+
+
+def _tree_paths(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out += _tree_paths(tree[k], f"{prefix}{k}/")
+    elif hasattr(tree, "_fields"):          # NamedTuple: use field names
+        for k in tree._fields:
+            out += _tree_paths(getattr(tree, k), f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _tree_paths(v, f"{prefix}{i}/")
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def param_specs(params, mc: MeshContext, *, fsdp: bool = True):
+    """PartitionSpec pytree for a param tree, by path-regex rules."""
+    flat = _tree_paths(params)
+    spec_map = {}
+    for path, leaf in flat:
+        for pat, logical in PARAM_RULES:
+            if re.search(pat, path):
+                logical_eff = tuple(
+                    (None if (ax == "fsdp" and not fsdp) else ax)
+                    for ax in logical)
+                nd = getattr(leaf, "ndim", 0)
+                if len(logical_eff) < nd:       # scan-stacked: lead None(s)
+                    logical_eff = (None,) * (nd - len(logical_eff)) \
+                        + logical_eff
+                spec_map[path] = mc.spec(*logical_eff) if logical_eff \
+                    else mc.spec()
+                break
+    # rebuild tree
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(t)
+        return spec_map[prefix[:-1]]
+    return rebuild(params)
+
+
+def param_shardings(params, mc: MeshContext, **kw):
+    specs = param_specs(params, mc, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mc.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Cache + batch sharding
+# ---------------------------------------------------------------------------
+
+def _axis_size(mc: MeshContext, logical: str) -> int:
+    n = 1
+    for phys in mc._flat(logical):
+        n *= dict(zip(mc.mesh.axis_names, mc.mesh.devices.shape))[phys]
+    return n
+
+
+def _div(dim: int, mc: MeshContext, logical: str) -> bool:
+    n = _axis_size(mc, logical)
+    return n > 0 and dim % n == 0
+
+
+def batch_axis_or_none(dim: int, mc: MeshContext):
+    """'batch' if it divides, else None (e.g. long_500k's batch of 1)."""
+    return "batch" if _div(dim, mc, "batch") else None
+
+
+def _cache_leaf_spec(name: str, leaf, mc: MeshContext):
+    nd = getattr(leaf, "ndim", 0)
+    shp = getattr(leaf, "shape", ())
+
+    def b(i):   # batch axis at dim i if divisible
+        return "batch" if (len(shp) > i and _div(shp[i], mc, "batch")) \
+            else None
+
+    def t(i):   # tensor axis at dim i if divisible
+        return "tensor" if (len(shp) > i and _div(shp[i], mc, "tensor")) \
+            else None
+
+    if name in ("k", "v", "cross_k", "cross_v"):     # (R,B,W,H,dh)
+        # sequence-parallel KV (FlashDecoding-style): shard the cache on
+        # W over the model axis — QK^T/PV compute shard-local partials
+        # and only (B,H,1)-sized softmax stats cross shards, vs. the
+        # 1.3 GB/layer cache all-gather a head_dim sharding provokes
+        # (§Perf iteration 'decode-seqkv').
+        return (None, b(1), t(2), None, None)
+    if name == "kpos":
+        return (None,) * nd
+    if name == "conv":                                # (R,B,dc-1,di)
+        return (None, b(1), None, t(3))
+    if name == "ssm":                                 # (R,B,di,ds)
+        return (None, b(1), t(2), None)
+    if name == "c" and nd == 5:                       # mlstm (R,B,H,dk,dv)
+        return (None, b(1), None, None, t(4))
+    if name == "n" and nd == 4:                       # mlstm (R,B,H,dk)
+        return (None, b(1), None, None)
+    if name in ("c", "n", "m", "h"):                  # slstm / mlstm-m
+        return (None, b(1)) + (None,) * max(nd - 2, 0)
+    if name == "pos":
+        return ()
+    return (None,) * nd
+
+
+def cache_shardings(cache, mc: MeshContext):
+    """NamedSharding tree for a decode/prefill cache."""
+    flat = _tree_paths(cache)
+    smap = {}
+    for path, leaf in flat:
+        name = path.rsplit("/", 1)[-1]
+        smap[path] = NamedSharding(mc.mesh,
+                                   mc.spec(*_cache_leaf_spec(name, leaf, mc)))
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(**{k: rebuild(getattr(tree, k),
+                                            f"{prefix}{k}/")
+                                 for k in tree._fields})
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}{i}/")
+                              for i, v in enumerate(tree))
+        return smap[prefix[:-1]]
+    return rebuild(cache)
+
+
+def batch_shardings(batch_spec, mc: MeshContext):
+    """Shard every batch leaf's dim0 over the DP axes (if divisible)."""
+    def one(leaf):
+        ax = batch_axis_or_none(leaf.shape[0], mc)
+        return NamedSharding(mc.mesh,
+                             mc.spec(ax, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, batch_spec)

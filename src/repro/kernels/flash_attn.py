@@ -1,0 +1,117 @@
+"""Pallas TPU flash attention (forward): blockwise online-softmax.
+
+Grid = (batch*kv_head, group, q_blocks, kv_blocks); the kv dimension is
+the innermost (sequential) grid axis, carrying running (m, l, acc) in
+VMEM scratch — the FlashAttention schedule mapped onto the MXU:
+
+  * q block   (BQ, D)  stays resident across the kv sweep,
+  * per step one (BK, D) key/value block is streamed from HBM,
+  * scores/softmax in f32 on-chip; output written once at the last step.
+
+Causal masking skips fully-masked tiles via ``pl.when`` (no wasted MXU
+work past the diagonal).  Validated against ref.flash_attention_ref in
+interpret mode (tests/test_flash_attn.py); the model's pure-XLA
+``blockwise_attention`` implements the same schedule for non-TPU
+backends and the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+
+def _fa_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+             bq: int, bk: int, causal: bool, n_kv_blocks: int,
+             scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full((m_ref.shape[0],), -jnp.inf, jnp.float32)
+        l_ref[...] = jnp.zeros((l_ref.shape[0],), jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                      # (BQ, BK)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, -jnp.inf)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        # guard: rows with no unmasked keys yet keep m=-inf -> p=0
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(jnp.isfinite(s), s - safe_m[:, None],
+                              -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - safe_m), 0.0)
+        l_new = l_prev * corr + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # skip tiles entirely above the diagonal
+        pl.when(k_start <= q_start + bq - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D) (H already GQA-expanded).
+
+    Sq % bq == 0 and Sk % bk == 0 (wrappers pad).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(d)
+    body = functools.partial(_fa_body, bq=bq, bk=bk, causal=causal,
+                             n_kv_blocks=nk, scale=scale)
+    return pl.pallas_call(
+        body,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki:
+                         (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki:
+                         (b_, h_, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, qi, ki:
+                         (b_, h_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki:
+                               (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pl.MemoryRef(jax.core.ShapedArray((bq,), jnp.float32),
+                         pl.ANY),                   # running max
+            pl.MemoryRef(jax.core.ShapedArray((bq,), jnp.float32),
+                         pl.ANY),                   # running sum
+            pl.MemoryRef(jax.core.ShapedArray((bq, d), jnp.float32),
+                         pl.ANY),                   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle tile-alignment padding/cropping so callers see clean shapes,
+and select interpret mode automatically off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deconv import (_pads, deconv_output_shape, sd_geometry,
+                               split_filters)
+from . import sd_conv as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_th(oh: int) -> int:
+    for th in (8, 4, 2, 1):
+        if oh % th == 0:
+            return th
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("th",))
+def sd_conv2d_valid(x: jax.Array, w: jax.Array, th: int | None = None
+                    ) -> jax.Array:
+    """Stride-1 VALID conv (B,H,W,Cin)x(KT,KT,Cin,Co) via the Pallas kernel.
+
+    Pads rows so the row-tile grid covers the output exactly, then crops.
+    """
+    b, h, wd, cin = x.shape
+    kt = w.shape[0]
+    oh, ow = h - kt + 1, wd - kt + 1
+    th = th or _pick_th(oh)
+    pad_rows = (-oh) % th
+    if pad_rows:
+        x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
+    y = _k.sd_conv_pallas(x, w, th=th, interpret=not _on_tpu())
+    return y[:, :oh] if pad_rows else y
+
+
+def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
+    """Relayout split filters from n-major (core) to oc-major (kernel)."""
+    kt1, kt2, cin, nc = ws.shape
+    cout = nc // (s * s)
+    w = ws.reshape(kt1, kt2, cin, s * s, cout)
+    return w.transpose(0, 1, 2, 4, 3).reshape(kt1, kt2, cin, cout * s * s)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "th"))
+def sd_deconv_fused(x: jax.Array, ws_ocmajor: jax.Array, s: int,
+                    th: int | None = None) -> jax.Array:
+    """Fused split-conv + interleave. x is the P_I-padded input."""
+    b, h, wd, cin = x.shape
+    kt = ws_ocmajor.shape[0]
+    oh = h - kt + 1
+    th = th or _pick_th(oh)
+    pad_rows = (-oh) % th
+    if pad_rows:
+        x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
+    y = _k.sd_fused_pallas(x, ws_ocmajor, s, th=th,
+                           interpret=not _on_tpu())
+    return y[:, :oh * s] if pad_rows else y
+
+
+def sd_deconv_kernel(x: jax.Array, w: jax.Array, stride: int,
+                     padding=0) -> jax.Array:
+    """Full SD transposed conv through the fused Pallas kernel.
+
+    Drop-in replacement for core.sd_deconv (same semantics), with the
+    paper's stride-s write performed inside the kernel.
+    """
+    s = int(stride)
+    kh, kw = w.shape[:2]
+    (pt, pb), (pl_, pr) = _pads(padding)
+    (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry((kh, kw), (s, s))
+    oh, ow = deconv_output_shape(x.shape[1:3], (kh, kw), s, padding)
+    ws = ws_to_ocmajor(split_filters(w, s), s)
+    xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
+    full = sd_deconv_fused(xp, ws, s)
+    return jax.lax.slice(full, (0, pkh + pt, pkw + pl_, 0),
+                         (full.shape[0], pkh + pt + oh, pkw + pl_ + ow,
+                          full.shape[3]))

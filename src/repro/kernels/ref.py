@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_valid_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Stride-1 VALID cross-correlation. x: (B,H,W,Cin); w: (Kh,Kw,Cin,Co)."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+
+
+def sd_deconv_fused_ref(x: jax.Array, ws: jax.Array, stride: int) -> jax.Array:
+    """Grouped split-filter conv + pixel-shuffle interleave (n-major ws).
+
+    x:  (B, H, W, Cin)  — already P_I-padded by the caller
+    ws: (K_T, K_T, Cin, s*s*Cout) from core.split_filters (n-major layout)
+    returns the *uncropped* interleaved output (B, s*OH, s*OW, Cout).
+    """
+    from repro.core.deconv import depth_to_space
+    y = conv2d_valid_ref(x, ws)
+    return depth_to_space(y, stride)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """Softmax attention oracle. q,k,v: (B, H, S, D) (already GQA-expanded)."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf * scale, kf)
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode-style)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,148 @@
+"""Pallas TPU kernels for Split Deconvolution.
+
+Two kernels:
+
+* ``sd_conv_kernel``   — stride-1 VALID convolution with the stacked split
+  filters (the grouped-GEMM view of SD).  Generic small-K conv kernel.
+* ``sd_fused_kernel``  — the same convolution, but each block *also*
+  performs the paper's stride-``s`` output write: the s^2 phase outputs
+  are interleaved into the deconv output tile inside VMEM, so the
+  pixel-shuffle never materialises in HBM.
+
+TPU mapping (see DESIGN.md):
+  - grid = (batch, output-row-tiles, output-channel-tiles, input-channel-tiles)
+  - each step loads an input row-band with a (K_T - 1)-row halo
+    (``pl.Element`` indexing) and a (K_T, K_T, TCin, TCout) filter block,
+    and issues K_T^2 MXU matmuls of shape (TH*OW_pad, TCin) x (TCin, TCout)
+    accumulated in f32.
+  - block sizes default to MXU-friendly multiples (rows*width >= 128,
+    channels padded to 128 in the wrapper — see ops.py).
+
+Validated in interpret mode against ``ref.py`` (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+
+def _sd_conv_body(x_ref, w_ref, o_ref, *, kt: int, th: int, ow: int,
+                  n_cin_tiles: int):
+    """One (batch, row-tile, cout-tile, cin-tile) grid step."""
+    ci = pl.program_id(3)
+    x = x_ref[0]                      # (TH+KT-1, OW+KT-1, TCin)
+    w = w_ref[...]                    # (KT, KT, TCin, TCout)
+    tcin = x.shape[-1]
+    acc = jnp.zeros((th * ow, w.shape[-1]), jnp.float32)
+    for kh in range(kt):
+        for kw in range(kt):
+            patch = x[kh:kh + th, kw:kw + ow, :].reshape(th * ow, tcin)
+            acc += jnp.dot(patch.astype(jnp.float32),
+                           w[kh, kw].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+    y = acc.reshape(th, ow, -1)
+
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[0] = y.astype(o_ref.dtype)
+
+    @pl.when(ci != 0)
+    def _accum():
+        o_ref[0] = (o_ref[0].astype(jnp.float32) + y).astype(o_ref.dtype)
+
+
+def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
+                   tcout: int | None = None, tcin: int | None = None,
+                   interpret: bool = True) -> jax.Array:
+    """Stride-1 VALID conv via Pallas. x: (B,Hp,Wp,Cin); w: (KT,KT,Cin,Co).
+
+    Caller guarantees: Hp  = n*th + KT - 1 for integer n (see ops.py pad).
+    Output: (B, Hp-KT+1, Wp-KT+1, Co).
+    """
+    b, hp, wp, cin = x.shape
+    kt, _, _, cout = w.shape
+    oh, ow = hp - kt + 1, wp - kt + 1
+    assert oh % th == 0, (oh, th)
+    tcout = tcout or cout
+    tcin = tcin or cin
+    assert cout % tcout == 0 and cin % tcin == 0
+    n_cin = cin // tcin
+
+    grid = (b, oh // th, cout // tcout, n_cin)
+    body = functools.partial(_sd_conv_body, kt=kt, th=th, ow=ow,
+                             n_cin_tiles=n_cin)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, pl.Element(th + kt - 1, (0, 0)), wp, tcin),
+                         lambda bi, i, j, ci: (bi, i * th, 0, ci)),
+            pl.BlockSpec((kt, kt, tcin, tcout),
+                         lambda bi, i, j, ci: (0, 0, ci, j)),
+        ],
+        out_specs=pl.BlockSpec((1, th, ow, tcout),
+                               lambda bi, i, j, ci: (bi, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, cout), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def _sd_fused_body(x_ref, w_ref, o_ref, *, kt: int, th: int, ow: int,
+                   s: int):
+    """Conv + in-VMEM stride-s interleave (the paper's strided write).
+
+    w_ref holds oc-major split filters: channel c = oc*s^2 + (py*s + px).
+    The output block is the interleaved deconv tile (s*TH, s*OW, TCout).
+    """
+    x = x_ref[0]                      # (TH+KT-1, OW+KT-1, Cin)
+    w = w_ref[...]                    # (KT, KT, Cin, TCout*s*s)
+    cin = x.shape[-1]
+    cphase = w.shape[-1]              # TCout * s^2
+    acc = jnp.zeros((th * ow, cphase), jnp.float32)
+    for kh in range(kt):
+        for kw in range(kt):
+            patch = x[kh:kh + th, kw:kw + ow, :].reshape(th * ow, cin)
+            acc += jnp.dot(patch.astype(jnp.float32),
+                           w[kh, kw].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+    tc = cphase // (s * s)
+    y = acc.reshape(th, ow, tc, s, s)          # c -> (oc, py, px)
+    y = y.transpose(0, 3, 1, 4, 2)             # (th, py, ow, px, oc)
+    o_ref[0] = y.reshape(th * s, ow * s, tc).astype(o_ref.dtype)
+
+
+def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s: int, *,
+                    th: int = 8, interpret: bool = True) -> jax.Array:
+    """Fused SD: split-filter conv + interleaved (pixel-shuffled) write.
+
+    x:  (B, Hp, Wp, Cin) with Hp = n*th + KT - 1
+    ws_ocmajor: (KT, KT, Cin, Cout*s*s), channel c = oc*s^2 + phase
+    returns (B, s*(Hp-KT+1), s*(Wp-KT+1), Cout) — uncropped deconv output.
+    """
+    b, hp, wp, cin = x.shape
+    kt = ws_ocmajor.shape[0]
+    cout = ws_ocmajor.shape[-1] // (s * s)
+    oh, ow = hp - kt + 1, wp - kt + 1
+    assert oh % th == 0, (oh, th)
+
+    grid = (b, oh // th)
+    body = functools.partial(_sd_fused_body, kt=kt, th=th, ow=ow, s=s)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, pl.Element(th + kt - 1, (0, 0)), wp, cin),
+                         lambda bi, i: (bi, i * th, 0, 0)),
+            pl.BlockSpec((kt, kt, cin, cout * s * s),
+                         lambda bi, i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, th * s, ow * s, cout),
+                               lambda bi, i: (bi, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, oh * s, ow * s, cout), x.dtype),
+        interpret=interpret,
+    )(x, ws_ocmajor)

@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any other import so the 512
+placeholder devices exist before jax locks the backend.
+
+Per cell it records: compile success, memory_analysis (bytes/device),
+cost_analysis (FLOPs + bytes/device), and the parsed collective schedule
+— everything EXPERIMENTS.md §Dry-run and §Roofline read.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out runs/dryrun
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, LONG_CONTEXT_OK, SHAPES, get
+from repro.distributed.sharding import (MeshContext, batch_shardings,
+                                        cache_shardings, mesh_context,
+                                        param_shardings)
+from repro.launch.hlo_analysis import (DCI_BW, ICI_BW, collective_stats,
+                                       roofline_terms)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (abstract_cache, abstract_opt_state,
+                                abstract_params, effective_seq, input_specs,
+                                make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models.lm import build_lm
+
+
+def cell_is_skipped(arch: str, shape: str) -> Optional[str]:
+    cfg = get(arch)
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return ("pure full-attention arch: long_500k needs sub-quadratic "
+                "mixing (see DESIGN.md §Arch-applicability)")
+    return None
+
+
+def _compile_cell(cfg, cell, mesh, mc=None):
+    """Lower + compile one step function; returns (compiled, lm, aparams)."""
+    if mc is None:
+        fsdp = cfg.fsdp_train if cell.step == "train" else cfg.fsdp_serve
+        mc = MeshContext(mesh, strategy=cfg.mesh_strategy, fsdp=fsdp)
+    lm, aparams = abstract_params(cfg)
+    pshard = param_shardings(aparams, mc)
+    bspec = input_specs(cfg, cell)
+    bshard = batch_shardings(bspec, mc)
+    with mesh_context(mesh):
+        if cell.step == "train":
+            aopt = abstract_opt_state(aparams, cfg.opt_state_dtype)
+            # ZeRO-1: optimizer state is ALWAYS fsdp-sharded over data,
+            # independently of whether params are (cfg.fsdp_train) — a
+            # step reads m/v once, so sharding them is free bandwidth-
+            # wise, while param FSDP costs per-layer gathers.
+            mc_opt = MeshContext(mesh, strategy=cfg.mesh_strategy,
+                                 fsdp=True)
+            oshard = type(aopt)(
+                jax.sharding.NamedSharding(mesh, mc.spec()),
+                param_shardings(aopt.mu, mc_opt),
+                param_shardings(aopt.nu, mc_opt),
+                param_shardings(aopt.master, mc_opt)
+                if aopt.master is not None else None)
+            step = make_train_step(lm, microbatch=cfg.microbatch,
+                                   unroll=cfg.loop_unroll)
+            lowered = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+            ).lower(aparams, aopt, bspec)
+        elif cell.step == "prefill":
+            acache = abstract_cache(lm, cfg, cell)
+            cshard = cache_shardings(acache, mc)
+            step = make_prefill_step(lm)
+            lowered = jax.jit(
+                step, in_shardings=(pshard, bshard, cshard),
+                out_shardings=(None, cshard),
+            ).lower(aparams, bspec, acache)
+        else:  # decode
+            acache = abstract_cache(lm, cfg, cell)
+            cshard = cache_shardings(acache, mc)
+            step = make_decode_step(lm)
+            lowered = jax.jit(
+                step, in_shardings=(pshard, bshard, cshard),
+                out_shardings=(None, None, cshard),
+                donate_argnums=(2,),   # §Perf A3: alias the cache update
+            ).lower(aparams, bspec, acache)
+        compiled = lowered.compile()
+    return compiled, lm, aparams
+
+
+def _cost_and_coll(compiled):
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save_hlo: Optional[str] = None,
+             overrides: Optional[Dict[str, Any]] = None,
+             corrected: bool = True,
+             fast: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the record for EXPERIMENTS.md.
+
+    ``corrected=True`` additionally compiles depth-1 and depth-2 *unrolled*
+    variants to recover exact whole-model FLOP/byte/collective counts
+    (XLA's cost_analysis counts a while-loop body once): with per-super-
+    block cost b and fixed cost a, total = a + R*b where (a+b) and (a+2b)
+    come from the two small compiles.
+    """
+    import dataclasses as dc
+    cfg = get(arch)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "step": cell.step, "seq": effective_seq(cfg, cell),
+        "global_batch": cell.global_batch,
+    }
+    skip = cell_is_skipped(arch, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = cfg.fsdp_train if cell.step == "train" else cfg.fsdp_serve
+    mc = MeshContext(mesh, strategy=cfg.mesh_strategy, fsdp=fsdp)
+
+    # 1) full-depth rolled compile: the compile-success proof + memory.
+    #    (``fast`` mode — hillclimb iterations — skips it and derives the
+    #    memory figure from the depth-2 compile scaled analytically.)
+    if not fast:
+        compiled, lm, aparams = _compile_cell(cfg, cell, mesh, mc)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_hbm_bytes": int(ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+            }
+        f_once, b_once, coll_once = _cost_and_coll(compiled)
+        rec["cost_body_once"] = {"flops": f_once, "bytes_accessed": b_once}
+        hlo = compiled.as_text() if save_hlo else None
+    else:
+        lm, aparams = abstract_params(cfg)
+        f_once = b_once = 0.0
+        coll_once = None
+        hlo = None
+
+    # 2) depth-1 / depth-2 unrolled compiles -> exact whole-model costs.
+    R = cfg.n_layers // len(cfg.pattern)
+    if fast and R <= 1:
+        raise ValueError("fast mode needs R > 1")
+    if corrected and R > 1:
+        plen = len(cfg.pattern)
+        # probes run at microbatch=1: the costs are per-token linear and
+        # an unrolled mb-8 x MoE x mamba HLO makes XLA compile for hours
+        ov1 = {"n_layers": plen, "loop_unroll": True, "microbatch": 1}
+        ov2 = {"n_layers": 2 * plen, "loop_unroll": True, "microbatch": 1}
+        if cfg.enc_layers:
+            ov1["enc_layers"] = 1
+            ov2["enc_layers"] = 2
+        c1, _, _ = _compile_cell(dc.replace(cfg, **ov1), cell, mesh, mc)
+        c2, _, _ = _compile_cell(dc.replace(cfg, **ov2), cell, mesh, mc)
+        f1, by1, coll1 = _cost_and_coll(c1)
+        f2, by2, coll2 = _cost_and_coll(c2)
+        flops = f1 + (R - 1) * (f2 - f1)
+        byts = by1 + (R - 1) * (by2 - by1)
+        coll_total = (coll1.total_bytes
+                      + (R - 1) * (coll2.total_bytes - coll1.total_bytes))
+        coll_by_op = {
+            op: (coll1.op_bytes.get(op, 0.0)
+                 + (R - 1) * (coll2.op_bytes.get(op, 0.0)
+                              - coll1.op_bytes.get(op, 0.0)))
+            for op in set(coll1.op_bytes) | set(coll2.op_bytes)}
+        coll_counts = {
+            op: int(coll1.op_counts.get(op, 0)
+                    + (R - 1) * (coll2.op_counts.get(op, 0)
+                                 - coll1.op_counts.get(op, 0)))
+            for op in set(coll1.op_counts) | set(coll2.op_counts)}
+        import dataclasses as _dc
+        from repro.launch.hlo_analysis import CollectiveStats
+        coll = CollectiveStats(coll_counts, coll_by_op,
+                               max(coll_total, 0.0), [])
+    else:
+        flops, byts, coll = f_once, b_once, coll_once
+
+    rec["cost"] = {"flops": flops, "bytes_accessed": byts}
+    rec["collectives"] = {"counts": coll.op_counts,
+                          "bytes": {k: float(v)
+                                    for k, v in coll.op_bytes.items()},
+                          "total_bytes": float(coll.total_bytes)}
+
+    # model flops (6ND fwd+bwd, 2ND fwd-only) for the useful-compute ratio
+    n_chips = math.prod(mesh.devices.shape)
+    tot, act = _param_counts_abstract(lm, aparams, cfg)
+    toks = cell.global_batch * (rec["seq"] if cell.step != "decode" else 1)
+    mult = 6.0 if cell.step == "train" else 2.0
+    model_flops = mult * act * toks
+    rec["model_flops_global"] = model_flops
+    rec["params_total"] = tot
+    rec["params_active"] = act
+    rl = roofline_terms(
+        {"flops": flops, "bytes accessed": byts}, coll,
+        link_bw=DCI_BW if multi_pod else ICI_BW,
+        model_flops_per_device=model_flops / n_chips)
+    rec["roofline"] = rl.table_row()
+    rec["status"] = "ok"
+    if save_hlo and hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def _param_counts_abstract(lm, aparams, cfg):
+    import numpy as np
+    leaves = jax.tree.leaves(aparams)
+    tot = sum(int(np.prod(a.shape)) for a in leaves)
+    exp = 0
+    for slot in aparams["slots"]:
+        for k in ("moe_ep", "moe_tp"):
+            if k in slot:
+                exp += sum(int(np.prod(slot[k][w].shape))
+                           for w in ("wg", "wu", "wd"))
+    act = tot - exp + exp * cfg.top_k // max(cfg.n_experts, 1)
+    return tot, act
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have results")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    # single-pod first (they feed the roofline table), multi-pod after
+    cells = [(a, s, mp) for mp in sorted(pods) for s in shapes
+             for a in archs]
+    for arch, shape, mp in cells:
+            if True:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        rec = json.load(f)
+                    print(f"[cached] {tag}: {rec['status']}")
+                    n_ok += rec["status"] == "ok"
+                    n_skip += rec["status"] == "skipped"
+                    n_fail += rec["status"] == "failed"
+                    continue
+                try:
+                    hlo_path = (os.path.join(args.out, tag + ".hlo.txt")
+                                if args.save_hlo else None)
+                    # multi-pod cells are the compile-proof: skip the
+                    # depth-1/2 correction probes (roofline is sp-only)
+                    rec = run_cell(arch, shape, mp, save_hlo=hlo_path,
+                                   corrected=not mp)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "failed",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(f"[ok] {tag}: compile={rec['compile_s']}s "
+                          f"hbm={rec['memory']['peak_hbm_bytes']/2**30:.2f}GiB"
+                          f" compute={r['compute_s']*1e3:.2f}ms "
+                          f"memory={r['memory_s']*1e3:.2f}ms "
+                          f"coll={r['collective_s']*1e3:.2f}ms "
+                          f"dom={r['dominant']}")
+                elif rec["status"] == "skipped":
+                    n_skip += 1
+                    print(f"[skip] {tag}: {rec['reason'][:70]}")
+                else:
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {rec['error'][:160]}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

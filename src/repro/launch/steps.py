@@ -1,0 +1,144 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for the batch of each step kind;
+``abstract_state`` builds the abstract param/optimizer/cache trees via
+``jax.eval_shape``.  ``make_*_step`` return the jittable step callables
+that launch/dryrun.py lowers and launch/train.py runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.lm import LM, build_lm
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_warmup_schedule)
+
+
+def effective_seq(cfg: ArchConfig, cell: ShapeCell) -> int:
+    """Clamp the cell's sequence length to the arch's positional limits
+    (whisper decoder caps at 448)."""
+    s = cell.seq_len
+    if cfg.max_positions:
+        s = min(s, cfg.max_positions)
+    return s
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the step's ``batch`` argument."""
+    b = batch_override or cell.global_batch
+    s = effective_seq(cfg, cell)
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if cell.step == "train":
+        text = s - (cfg.n_patches if cfg.frontend == "patch" else 0)
+        spec = {"inputs": jax.ShapeDtypeStruct((b, text), i32),
+                "targets": jax.ShapeDtypeStruct((b, text), i32)}
+        if cfg.frontend == "patch":
+            spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.frontend_dim), f32)
+        if cfg.enc_dec:
+            spec["frame_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_positions, cfg.d_model), f32)
+        return spec
+    if cell.step == "prefill":
+        text = s - (cfg.n_patches if cfg.frontend == "patch" else 0)
+        spec = {"inputs": jax.ShapeDtypeStruct((b, text), i32)}
+        if cfg.frontend == "patch":
+            spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.frontend_dim), f32)
+        if cfg.enc_dec:
+            spec["frame_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_positions, cfg.d_model), f32)
+        return spec
+    # decode: one new token against a seq_len-deep cache
+    return {"inputs": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def abstract_params(cfg: ArchConfig):
+    lm = build_lm(cfg)
+    return lm, jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params_shapes, state_dtype: str = "float32"):
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[state_dtype]
+    return jax.eval_shape(
+        functools.partial(adamw_init, master_dtype=jnp.float32,
+                          state_dtype=dt), params_shapes)
+
+
+def abstract_cache(lm: LM, cfg: ArchConfig, cell: ShapeCell):
+    b = cell.global_batch
+    s = effective_seq(cfg, cell)
+    return jax.eval_shape(lambda: lm.init_cache(b, s))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(lm: LM, *, base_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, clip: float = 1.0,
+                    weight_decay: float = 0.1, microbatch: int = 0,
+                    unroll: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch > 0`` enables gradient accumulation: the global batch is
+    split into ``microbatch`` sequential chunks whose gradients average —
+    the standard memory/overlap lever at scale (the inter-pod all-reduce
+    of chunk k overlaps chunk k+1's compute under XLA's scheduler).
+    """
+    sched = cosine_warmup_schedule(base_lr, warmup, total)
+
+    def loss_fn(p, b):
+        return lm.loss(p, b)
+
+    def train_step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                return x.reshape(microbatch, x.shape[0] // microbatch,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, b_i):
+                loss_i, g_i = jax.value_and_grad(loss_fn)(params, b_i)
+                loss_a, g_a = carry
+                return (loss_a + loss_i,
+                        jax.tree.map(jnp.add, g_a, g_i)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_body, zero, mb, unroll=microbatch if unroll else 1)
+            loss = loss_sum / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=sched,
+                                         weight_decay=weight_decay)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm,
+                                   "lr": sched(opt_state.step)}
+    return train_step
+
+
+def make_prefill_step(lm: LM):
+    def prefill_step(params, batch, cache):
+        return lm.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(lm: LM, *, greedy: bool = True):
+    def decode_step(params, batch, cache):
+        logits, cache = lm.decode_step(params, batch, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return tok, logits, cache
+    return decode_step

@@ -1,0 +1,1 @@
+"""Model zoo: paper's generative benchmarks + assigned LM architectures."""

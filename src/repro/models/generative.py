@@ -1,0 +1,173 @@
+"""The paper's six generative benchmarks, runnable in JAX.
+
+Every network is built from its ``NetworkSpec`` (the same spec the MAC
+accounting uses, so the benchmarked FLOPs and the executed model can never
+drift apart).  The deconvolution implementation is switchable:
+
+    model = GenerativeModel(dcgan(), deconv_impl="sd")
+
+``deconv_impl`` in {"native", "nzp", "sd", "sd_kernel", "shi", "chang"}.
+``sd_kernel`` routes the split convolution through the Pallas TPU kernel
+(interpret-mode on CPU).
+
+Inference-time batch norm is folded into per-channel scale/bias (gamma,
+beta) as any deployment on the paper's target processors would do.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (conv2d, native_deconv, nzp_deconv, sd_deconv,
+                        sd_deconv_presplit, same_deconv_pads, split_filters)
+from repro.core.accounting import BENCHMARKS, LayerSpec, NetworkSpec
+from repro.core.wrong_baselines import chang_deconv, shi_deconv
+
+Params = Dict[str, Any]
+
+
+def _deconv_dispatch(impl: str) -> Callable:
+    if impl == "native":
+        return native_deconv
+    if impl == "nzp":
+        return nzp_deconv
+    if impl == "sd":
+        return sd_deconv
+    if impl == "shi":
+        return shi_deconv
+    if impl == "chang":
+        return chang_deconv
+    if impl == "sd_kernel":
+        from repro.kernels.ops import sd_conv2d_valid
+
+        def _sd_pallas(x, w, stride, padding):
+            ws = split_filters(w, stride)
+            return sd_deconv_presplit(
+                x, ws, w.shape[:2], stride, padding,
+                conv_fn=lambda xp, wsp: sd_conv2d_valid(xp, wsp))
+        return _sd_pallas
+    raise ValueError(f"unknown deconv_impl {impl!r}")
+
+
+class GenerativeModel:
+    """Spec-driven generator/decoder network."""
+
+    def __init__(self, spec: NetworkSpec, deconv_impl: str = "sd",
+                 final_tanh: bool = True):
+        self.spec = spec
+        self.deconv_impl = deconv_impl
+        self._deconv = _deconv_dispatch(deconv_impl)
+        self.final_tanh = final_tanh
+
+    # ---- params ----------------------------------------------------------
+    def init(self, key: jax.Array, dtype=jnp.float32) -> Params:
+        params: Params = {}
+        keys = jax.random.split(key, len(self.spec.layers))
+        for k, layer in zip(keys, self.spec.layers):
+            if layer.kind == "fc":
+                fan_in = layer.cin
+                w = jax.random.normal(k, (layer.cin, layer.cout), dtype)
+                params[layer.name] = {
+                    "w": w / math.sqrt(fan_in),
+                    "b": jnp.zeros((layer.cout,), dtype)}
+            else:
+                fan_in = layer.k * layer.k * layer.cin
+                w = jax.random.normal(
+                    k, (layer.k, layer.k, layer.cin, layer.cout), dtype)
+                params[layer.name] = {
+                    "w": w / math.sqrt(fan_in),
+                    "b": jnp.zeros((layer.cout,), dtype),
+                    "scale": jnp.ones((layer.cout,), dtype),  # folded BN
+                }
+        return params
+
+    # ---- forward ---------------------------------------------------------
+    def apply(self, params: Params, x: jax.Array) -> jax.Array:
+        layers = self.spec.layers
+        h = x
+        for i, layer in enumerate(layers):
+            p = params[layer.name]
+            last = i == len(layers) - 1
+            if layer.kind == "fc":
+                h = h.reshape(h.shape[0], -1)
+                h = h @ p["w"] + p["b"]
+                # reshape for the next spatial layer
+                nxt = layers[i + 1] if i + 1 < len(layers) else None
+                if nxt is not None and nxt.kind != "fc":
+                    hh, ww = nxt.in_hw
+                    h = h.reshape(h.shape[0], hh, ww, nxt.cin)
+            elif layer.kind == "conv":
+                pads = "SAME" if layer.padding == "same" else layer.pad
+                h = conv2d(h, p["w"], layer.s, pads)
+                h = h * p["scale"] + p["b"]
+            else:  # deconv
+                pads = (same_deconv_pads(layer.k, layer.s)
+                        if layer.padding == "same" else layer.pad)
+                h = self._deconv(h, p["w"], layer.s, pads)
+                h = h * p["scale"] + p["b"]
+            if not last:
+                h = jax.nn.relu(h)
+        return jnp.tanh(h) if self.final_tanh else h
+
+    def __call__(self, params: Params, x: jax.Array) -> jax.Array:
+        return self.apply(params, x)
+
+    # ---- convenience -----------------------------------------------------
+    def input_shape(self, batch: int):
+        first = self.spec.layers[0]
+        if first.kind == "fc":
+            return (batch, first.cin)
+        return (batch, *first.in_hw, first.cin)
+
+    def param_count(self, params: Params) -> int:
+        return sum(int(np.prod(a.shape))
+                   for leaf in params.values() for a in leaf.values())
+
+
+def build(name: str, deconv_impl: str = "sd") -> GenerativeModel:
+    """Factory: build('dcgan', 'sd')."""
+    return GenerativeModel(BENCHMARKS[name](), deconv_impl=deconv_impl)
+
+
+# --------------------------------------------------------------------------
+# DCGAN discriminator — used by examples/train_dcgan.py (full GAN training).
+# --------------------------------------------------------------------------
+
+class DCGANDiscriminator:
+    """4x4-stride-2 conv stack, LeakyReLU, logit head."""
+
+    CHANNELS = (3, 64, 128, 256)
+
+    def __init__(self, img_hw=(64, 64)):
+        self.img_hw = img_hw
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        params: Params = {}
+        ks = jax.random.split(key, len(self.CHANNELS))
+        for i, (cin, cout) in enumerate(
+                zip(self.CHANNELS[:-1], self.CHANNELS[1:])):
+            w = jax.random.normal(ks[i], (4, 4, cin, cout), dtype)
+            params[f"c{i}"] = {"w": w / math.sqrt(16 * cin),
+                               "b": jnp.zeros((cout,), dtype)}
+        down = 2 ** (len(self.CHANNELS) - 1)
+        feat = (self.CHANNELS[-1] * (self.img_hw[0] // down)
+                * (self.img_hw[1] // down))
+        params["head"] = {
+            "w": jax.random.normal(ks[-1], (feat, 1), dtype) / math.sqrt(feat),
+            "b": jnp.zeros((1,), dtype)}
+        return params
+
+    def apply(self, params: Params, x: jax.Array) -> jax.Array:
+        h = x
+        for i in range(len(self.CHANNELS) - 1):
+            p = params[f"c{i}"]
+            h = conv2d(h, p["w"], 2, "SAME") + p["b"]
+            h = jax.nn.leaky_relu(h, 0.2)
+        h = h.reshape(h.shape[0], -1)
+        return h @ params["head"]["w"] + params["head"]["b"]

@@ -1,0 +1,418 @@
+"""Transformer building blocks (pure JAX, param-dict functional style).
+
+All layers follow the convention::
+
+    params = init_<layer>(key, cfg, dtype)     # nested dict of arrays
+    y, ...  = <layer>(params, x, ...)          # pure apply
+
+Weights are stored unstacked here; ``lm.py`` stacks homogeneous layers on
+a leading axis and drives them with ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+def _norm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def _dense_init(key, fan_in, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (scale / math.sqrt(fan_in))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int,
+                theta: float = 1e4) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given integer positions: (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional bias / sliding window / KV cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int, qkv_bias: bool, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], d_model, (d_model, n_heads * head_dim), dtype),
+        "wk": _dense_init(ks[1], d_model, (d_model, n_kv * head_dim), dtype),
+        "wv": _dense_init(ks[2], d_model, (d_model, n_kv * head_dim), dtype),
+        "wo": _dense_init(ks[3], n_heads * head_dim,
+                          (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _gqa_scores_combine(q, k, v, mask, compute_dtype):
+    """Plain (quadratic) attention used for short sequences.
+
+    q: (B,Sq,Hq,D), k/v: (B,Sk,Hkv,D); mask: (B?,Sq,Sk) bool."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf / math.sqrt(d), kf)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(compute_dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: Optional[int],
+                        q_offset, kv_len=None, block: int = 1024):
+    """Memory-efficient (flash-style) attention in pure XLA.
+
+    Scans KV blocks with running (max, sum, acc); activations stay
+    O(S·D) instead of O(S^2).  Used for long sequences; the Pallas TPU
+    kernel (kernels/flash_attn.py) implements the same schedule on-chip.
+
+    q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D); q_offset: scalar — absolute
+    position of q[0] (for decode); kv_len: valid kv length (None = all).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    nblk = -(-sk // block)
+    pad = nblk * block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblk, block, hkv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    qf = (q.reshape(b, sq, hkv, g, d) / math.sqrt(d)).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(sq)
+    kv_valid = sk if kv_len is None else kv_len
+
+    def step(carry, blk):
+        m, l, acc, idx = carry
+        kblk, vblk = blk
+        kpos = idx * block + jnp.arange(block)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kblk.astype(jnp.float32))
+        msk = (kpos[None, :] < kv_valid)
+        if causal:
+            msk = msk & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            msk = msk & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc, _), _ = lax.scan(step, (m0, l0, a0, 0), (kb, vb))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return o
+
+
+def _qkv(p, x, n_heads, n_kv, head_dim):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(b, s, n_heads, head_dim),
+            k.reshape(b, s, n_kv, head_dim),
+            v.reshape(b, s, n_kv, head_dim))
+
+
+def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+              head_dim: int, rope_theta: float,
+              window: Optional[int] = None,
+              causal: bool = True,
+              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              positions: Optional[jax.Array] = None,
+              attn_block: int = 1024,
+              use_rope: bool = True,
+              use_blockwise: Optional[bool] = None,
+              ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Cache-free attention (train / encoder / cross).
+
+    Returns (output (B,S,d_model), (k, v) computed this call).
+    """
+    b, s, _ = x.shape
+    if cross_kv is not None:
+        q = x @ p["wq"]
+        if "bq" in p:
+            q = q + p["bq"]
+        q = q.reshape(b, s, n_heads, head_dim)
+        k, v = cross_kv
+        causal = False
+    else:
+        q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+        if use_rope:
+            if positions is None:
+                positions = jnp.arange(s)
+            cos, sin = rope_tables(positions, head_dim, rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    from repro.distributed.sharding import constrain
+    q = constrain(q, "batch", None, "tensor", None)
+    k = constrain(k, "batch", None, None, None)
+
+    if use_blockwise is None:
+        use_blockwise = k.shape[1] > 2048
+    if use_blockwise:
+        o = blockwise_attention(q, k, v, causal=causal, window=window,
+                                q_offset=0, kv_len=None, block=attn_block)
+    else:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = (sk - sq) + jnp.arange(sq)
+        kpos = jnp.arange(sk)
+        msk = jnp.ones((sq, sk), bool)
+        if causal:
+            msk &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            msk &= kpos[None, :] > qpos[:, None] - window
+        o = _gqa_scores_combine(q, k, v, msk[None], x.dtype)
+
+    o = constrain(o.astype(x.dtype), "batch", None, "tensor", None)
+    out = o.reshape(b, s, n_heads * head_dim) @ p["wo"]
+    return out, (k, v)
+
+
+def attention_cached(p: Params, x: jax.Array, cache: dict, pos, *,
+                     n_heads: int, n_kv: int, head_dim: int,
+                     rope_theta: float, window: Optional[int] = None,
+                     attn_block: int = 1024, use_rope: bool = True,
+                     ) -> Tuple[jax.Array, dict]:
+    """Attention against a (possibly ring) KV cache.
+
+    cache = {'k': (B, W, Hkv, D), 'v': ..., 'kpos': (W,) int32 absolute
+    positions, -1 = empty}.  ``pos`` is the absolute position of x[:, 0].
+    * S == 1: decode — scatter one slot (ring index pos % W), quadratic
+      attend with explicit position masking.
+    * S > 1: prefill — full causal (blockwise) attention over the fresh
+      K/V, then the *last W tokens* are written to the cache
+      (requires S % W == 0 when S > W, which all shape cells satisfy).
+    """
+    b, s, _ = x.shape
+    w = cache["k"].shape[1]
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    positions = pos + jnp.arange(s)
+    if use_rope:
+        cos, sin = rope_tables(positions, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    kd = k.astype(cache["k"].dtype)
+    vd = v.astype(cache["v"].dtype)
+
+    if s == 1:
+        idx = positions[0] % w
+        k_all = lax.dynamic_update_slice(cache["k"], kd, (0, idx, 0, 0))
+        v_all = lax.dynamic_update_slice(cache["v"], vd, (0, idx, 0, 0))
+        kpos = lax.dynamic_update_slice(cache["kpos"], positions, (idx,))
+        qpos = positions[:, None]                       # (1,1)
+        msk = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos)
+        if window is not None:
+            msk = msk & (kpos[None, :] > qpos - window)
+        o = _gqa_scores_combine(q, k_all, v_all, msk[None], x.dtype)
+        new_cache = {"k": k_all, "v": v_all, "kpos": kpos}
+    else:
+        o = blockwise_attention(q, k, v, causal=True, window=window,
+                                q_offset=0, kv_len=None, block=attn_block) \
+            if s > 2048 else _gqa_scores_combine(
+                q, k, v, _causal_mask(s, window)[None], x.dtype)
+        if s >= w:
+            assert s % w == 0 or s == w, (s, w)
+            new_cache = {"k": kd[:, -w:], "v": vd[:, -w:],
+                         "kpos": positions[-w:]}
+        else:
+            k_all = lax.dynamic_update_slice(cache["k"], kd, (0, pos, 0, 0))
+            v_all = lax.dynamic_update_slice(cache["v"], vd, (0, pos, 0, 0))
+            kpos = lax.dynamic_update_slice(cache["kpos"], positions, (pos,))
+            new_cache = {"k": k_all, "v": v_all, "kpos": kpos}
+
+    out = o.astype(x.dtype).reshape(b, s, n_heads * head_dim) @ p["wo"]
+    return out, new_cache
+
+
+def _causal_mask(s, window):
+    i = jnp.arange(s)
+    msk = i[None, :] <= i[:, None]
+    if window is not None:
+        msk &= i[None, :] > i[:, None] - window
+    return msk
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward: SwiGLU dense + top-k MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"wg": _dense_init(ks[0], d_model, (d_model, d_ff), dtype),
+            "wu": _dense_init(ks[1], d_model, (d_model, d_ff), dtype),
+            "wd": _dense_init(ks[2], d_ff, (d_ff, d_model), dtype)}
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+
+    def expert(k, fan_in, shape):
+        return (jax.random.normal(k, (n_experts,) + shape, jnp.float32)
+                / math.sqrt(fan_in)).astype(dtype)
+
+    return {
+        "router": _dense_init(ks[0], d_model, (d_model, n_experts),
+                              jnp.float32),
+        "wg": expert(ks[1], d_model, (d_model, d_ff)),
+        "wu": expert(ks[2], d_model, (d_model, d_ff)),
+        "wd": expert(ks[3], d_ff, (d_ff, d_model)),
+    }
+
+
+def _moe_groups(t: int) -> int:
+    """Dispatch-group count: the largest DP-shard count dividing T.
+
+    Group-local routing keeps the rank/sort/scatter ops shard-local; the
+    single (G,E,C,d)->(E,G,C,d) reshard between dispatch and expert
+    compute is the EP all-to-all.  Without a mesh context (unit tests,
+    single device) G=1 and semantics equal global GShard dispatch.
+    """
+    from repro.distributed.sharding import current, _axis_size
+    mc = current()
+    if mc is None:
+        return 1
+    g = _axis_size(mc, "batch")
+    while g > 1 and t % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe(p: Params, x: jax.Array, *, top_k: int, n_experts: int,
+        capacity_factor: float = 1.25, ep: bool = True,
+        groups: Optional[int] = None) -> jax.Array:
+    """Top-k MoE: group-local sort-based dispatch + EP all-to-all.
+
+    Tokens are routed to their top-k experts; each expert accepts at
+    most C = cf * T_g * k / E tokens per group (GShard capacity).  With
+    ``ep=True`` experts shard over the model axis and the dispatch is an
+    all-to-all; with ``ep=False`` experts are replicated and their FFN
+    dims are tensor-parallel (used when E doesn't divide the model axis,
+    e.g. Mixtral's 8 experts on a 16-way axis).
+    """
+    from repro.distributed.sharding import constrain
+    b, s, d = x.shape
+    t = b * s
+    g = groups or _moe_groups(t)
+    tg = t // g
+    cap = max(int(capacity_factor * tg * top_k / n_experts), 8)
+    xt = x.reshape(g, tg, d)
+    xt = constrain(xt, "batch", None, None)
+
+    def dispatch_one(xg):
+        """(tg, d) -> (E, C, d) buffers + combine metadata. Group-local:
+        no op here crosses shards once the leading G dim is DP-sharded."""
+        logits = xg.astype(jnp.float32) @ p["router"]
+        gates = jax.nn.softmax(logits, -1)                # (tg, E)
+        topg, tope = lax.top_k(gates, top_k)
+        topg = topg / jnp.maximum(topg.sum(-1, keepdims=True), 1e-9)
+        flat_e = tope.reshape(-1)                         # (tg*k,)
+        flat_g = topg.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+        rank_sorted = jnp.arange(tg * top_k) - starts[sorted_e]
+        myrank = jnp.zeros((tg * top_k,), jnp.int32).at[order].set(
+            rank_sorted.astype(jnp.int32))
+        keep = myrank < cap
+        dest = flat_e * cap + jnp.where(keep, myrank, 0)
+        src_tok = jnp.repeat(jnp.arange(tg), top_k)
+        buf = jnp.zeros((n_experts * cap, d), x.dtype)
+        buf = buf.at[dest].add(jnp.where(keep[:, None], xg[src_tok], 0))
+        return buf.reshape(n_experts, cap, d), (dest, keep, flat_g, src_tok)
+
+    buf, meta = jax.vmap(dispatch_one)(xt)                # (G,E,C,d)
+    buf = constrain(buf, "batch", None, None, None)
+    # EP all-to-all: batch-sharded groups -> expert-sharded experts
+    bufT = buf.transpose(1, 0, 2, 3)                      # (E,G,C,d)
+    bufT = constrain(bufT, "expert" if ep else None, "batch", None, None)
+
+    h = jnp.einsum("egcd,edf->egcf", bufT, p["wg"])
+    u = jnp.einsum("egcd,edf->egcf", bufT, p["wu"])
+    if not ep:
+        h = constrain(h, None, "batch", None, "tensor")
+        u = constrain(u, None, "batch", None, "tensor")
+    yb = jnp.einsum("egcf,efd->egcd", jax.nn.silu(h) * u, p["wd"])
+    yb = constrain(yb, "expert" if ep else None, "batch", None, None)
+    ybG = yb.transpose(1, 0, 2, 3)                        # back: all-to-all
+    ybG = constrain(ybG, "batch", None, None, None)
+
+    def combine_one(ybg, mt):
+        dest, keep, flat_g, src_tok = mt
+        flat = ybg.reshape(n_experts * cap, d)
+        contrib = flat[dest] * jnp.where(keep, flat_g, 0.0)[:, None].astype(
+            x.dtype)
+        return jnp.zeros((tg, d), x.dtype).at[src_tok].add(contrib)
+
+    y = jax.vmap(combine_one)(ybG, meta)                  # (G,tg,d)
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(p: Params, x: jax.Array, top_k: int,
+                 n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss."""
+    t = x.shape[0] * x.shape[1]
+    logits = x.reshape(t, -1).astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, -1)
+    _, tope = lax.top_k(gates, top_k)
+    frac = jnp.mean(jax.nn.one_hot(tope, n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    prob = jnp.mean(gates, 0)
+    return n_experts * jnp.sum(frac * prob)

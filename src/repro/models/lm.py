@@ -1,0 +1,510 @@
+"""Unified LM: decoder-only (9 archs) + encoder-decoder (whisper).
+
+Layer stacking: the config's mixer ``pattern`` (e.g. Jamba's
+``('m','m','m','a','m','m','m','m')``) defines one *super-block*;
+``n_layers / len(pattern)`` super-blocks are driven by ``lax.scan`` over
+stacked parameters, so compile time is O(pattern) not O(n_layers).
+
+Three entry points per model (lowered by launch/dryrun.py):
+  * ``loss(params, batch)``                      — train_4k
+  * ``prefill(params, batch, cache)``            — prefill_32k
+  * ``decode_step(params, batch, cache)``        — decode_32k / long_500k
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain, constrain_act
+from . import layers as L
+from . import ssm as S
+
+Params = Dict[str, Any]
+F32_KEEP = ("A_log", "D", "router", "wif", "bif", "dt_bias", "b",
+            "scale", "ln")
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_block(key, cfg: ArchConfig, kind: str, moe_slot: bool) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": {"scale": jnp.ones((cfg.d_model,), jnp.float32)}}
+    if kind == "a":
+        p["attn"] = L.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd, cfg.qkv_bias, dt)
+    elif kind == "m":
+        p["mamba"] = S.init_mamba(
+            ks[0], cfg.d_model, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv, dtype=dt)
+    elif kind == "x":
+        p["mlstm"] = S.init_mlstm(ks[0], cfg.d_model, n_heads=cfg.n_heads,
+                                  proj_factor=cfg.mlstm_proj, dtype=dt)
+    elif kind == "s":
+        p["slstm"] = S.init_slstm(ks[0], cfg.d_model, n_heads=cfg.n_heads,
+                                  proj_factor=cfg.slstm_proj, dtype=dt)
+    else:
+        raise ValueError(kind)
+    if cfg.has_ffn(kind):
+        p["ln2"] = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+        if moe_slot:
+            moe_key = "moe_ep" if cfg.moe_sharding == "ep" else "moe_tp"
+            p[moe_key] = L.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.n_experts, dt)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+    if cfg.enc_dec and kind == "a":
+        p["xattn"] = L.init_attention(ks[2], cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd, False, dt)
+        p["lnx"] = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    return p
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.pattern = cfg.pattern
+        assert cfg.n_layers % len(cfg.pattern) == 0, \
+            (cfg.n_layers, cfg.pattern)
+        self.repeats = cfg.n_layers // len(cfg.pattern)
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg.param_dtype)
+        kemb, khead, kslots, kenc, kfront = jax.random.split(key, 5)
+        params: Params = {
+            "embed": (jax.random.normal(
+                kemb, (cfg.vocab_padded, cfg.d_model), jnp.float32)
+                * 0.02).astype(dt),
+            "final_ln": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = (jax.random.normal(
+                khead, (cfg.d_model, cfg.vocab_padded), jnp.float32)
+                / math.sqrt(cfg.d_model)).astype(dt)
+
+        def stack_slots(key, n_rep, kinds, moe_flags):
+            slots = []
+            for j, kind in enumerate(kinds):
+                kj = jax.random.fold_in(key, j)
+                ks = jax.random.split(kj, n_rep)
+                per = [_init_block(ks[r], cfg, kind, moe_flags[j])
+                       for r in range(n_rep)]
+                slots.append(jax.tree.map(lambda *a: jnp.stack(a), *per))
+            return slots
+
+        kinds = self.pattern
+        # which pattern-slot FFNs are MoE: global layer index decides
+        moe_flags = []
+        for j in range(len(kinds)):
+            moe_flags.append(cfg.is_moe_slot(j) and cfg.has_ffn(kinds[j]))
+        params["slots"] = stack_slots(kslots, self.repeats, kinds, moe_flags)
+
+        if cfg.enc_dec:
+            assert cfg.enc_layers > 0
+            params["enc_slots"] = stack_slots(
+                jax.random.fold_in(kenc, 1), cfg.enc_layers, ("a",), [False])
+            # learned positions (whisper): encoder + decoder tables
+            params["pos_embed_enc"] = (jax.random.normal(
+                jax.random.fold_in(kenc, 2),
+                (cfg.enc_positions, cfg.d_model), jnp.float32) * 0.02
+            ).astype(dt)
+            params["pos_embed_dec"] = (jax.random.normal(
+                jax.random.fold_in(kenc, 3),
+                (max(cfg.max_positions, 1), cfg.d_model), jnp.float32) * 0.02
+            ).astype(dt)
+            params["enc_final_ln"] = {
+                "scale": jnp.ones((cfg.d_model,), jnp.float32)}
+        if cfg.frontend == "patch":
+            params["patch_proj"] = (jax.random.normal(
+                kfront, (cfg.frontend_dim, cfg.d_model), jnp.float32)
+                / math.sqrt(cfg.frontend_dim)).astype(dt)
+        return params
+
+    # ------------------------------------------------------------------
+    def _cast(self, params: Params) -> Params:
+        """Cast params to compute dtype, keeping numerics-critical leaves."""
+        ct = _dtype(self.cfg.compute_dtype)
+
+        def walk(tree, path=""):
+            if isinstance(tree, dict):
+                return {k: walk(v, path + k + "/") for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                return type(tree)(walk(v, f"{path}{i}/")
+                                  for i, v in enumerate(tree))
+            name = path.rstrip("/").rsplit("/", 1)[-1]
+            if any(name == k or name.startswith("ln") for k in F32_KEEP):
+                return tree
+            return tree.astype(ct)
+        return walk(params)
+
+    # ------------------------------------------------------------------
+    # blocks
+    # ------------------------------------------------------------------
+    def _block_train(self, p: Params, x, kind: str, moe_slot: bool,
+                     use_rope: bool = True):
+        cfg = self.cfg
+        h = L.rms_norm(p["ln1"], x)
+        if cfg.norm_barrier:
+            h = lax.optimization_barrier(h)
+        if kind == "a":
+            out, _ = L.attention(
+                p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                window=cfg.sliding_window, causal=True,
+                attn_block=cfg.attn_block,
+                use_rope=use_rope)
+            x = x + out
+        elif kind == "m":
+            out, _ = S.mamba_forward(p["mamba"], h, chunk=cfg.mamba_chunk)
+            x = x + out
+        elif kind == "x":
+            out, _ = S.mlstm_chunkwise(p["mlstm"], h, n_heads=cfg.n_heads,
+                                       chunk=cfg.mlstm_chunk)
+            x = x + out
+        elif kind == "s":
+            out, _ = S.slstm_forward(p["slstm"], h)
+            x = x + out
+        # seq-sharded residual stream only for attention blocks: the
+        # recurrent mixers iterate over time and would force gathers.
+        seq = cfg.act_shard == "seq" and kind == "a"
+        x = constrain_act(x, seq=seq)
+        if cfg.has_ffn(kind):
+            h2 = L.rms_norm(p["ln2"], x)
+            if cfg.norm_barrier:
+                h2 = lax.optimization_barrier(h2)
+            if moe_slot:
+                key = "moe_ep" if cfg.moe_sharding == "ep" else "moe_tp"
+                x = x + L.moe(p[key], h2, top_k=cfg.top_k,
+                              n_experts=cfg.n_experts,
+                              capacity_factor=cfg.capacity_factor,
+                              ep=(key == "moe_ep"))
+            else:
+                x = x + L.mlp(p["mlp"], h2)
+            x = constrain_act(x, seq=seq)
+        return x
+
+    def _enc_block(self, p: Params, x):
+        cfg = self.cfg
+        h = L.rms_norm(p["ln1"], x)
+        out, _ = L.attention(p["attn"], h, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                             rope_theta=cfg.rope_theta, causal=False,
+                             attn_block=cfg.attn_block, use_rope=False)
+        x = x + out
+        x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x))
+        return x
+
+    def _dec_block_train(self, p: Params, x, enc_out):
+        cfg = self.cfg
+        h = L.rms_norm(p["ln1"], x)
+        out, _ = L.attention(p["attn"], h, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                             rope_theta=cfg.rope_theta, causal=True,
+                             attn_block=cfg.attn_block, use_rope=False)
+        x = x + out
+        hx = L.rms_norm(p["lnx"], x)
+        kx = (enc_out @ p["xattn"]["wk"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        vx = (enc_out @ p["xattn"]["wv"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        out, _ = L.attention(p["xattn"], hx, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                             rope_theta=cfg.rope_theta,
+                             cross_kv=(kx, vx), use_rope=False)
+        x = x + out
+        x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x))
+        return x
+
+    # ------------------------------------------------------------------
+    # forward (train path)
+    # ------------------------------------------------------------------
+    def _backbone_train(self, params: Params, x):
+        cfg = self.cfg
+        kinds = self.pattern
+        use_rope = not cfg.enc_dec
+
+        def super_block(x, slot_params):
+            for j, kind in enumerate(kinds):
+                moe_slot = cfg.is_moe_slot(j) and cfg.has_ffn(kind)
+                x = self._block_train(slot_params[j], x, kind, moe_slot,
+                                      use_rope=use_rope)
+            return x
+
+        if cfg.remat == "block":
+            super_block = jax.checkpoint(super_block)
+
+        def body(x, slot_params):
+            return super_block(x, slot_params), None
+
+        x, _ = lax.scan(body, x, params["slots"],
+                        unroll=self.repeats if cfg.loop_unroll else 1)
+        return L.rms_norm(params["final_ln"], x)
+
+    def logits(self, params: Params, x) -> jax.Array:
+        cfg = self.cfg
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["head"])
+        lg = x @ head
+        # keep the (B,S,V) tensor vocab-sharded: at 1M tokens x 100k vocab
+        # an unsharded f32 logits tensor alone would blow per-device HBM
+        lg = constrain(lg, "batch", None, "tensor")
+        # mask vocab padding
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        lg = jnp.where(pad_mask, lg.astype(jnp.float32), -1e30)
+        return constrain(lg, "batch", None, "tensor")
+
+    def embed(self, params: Params, tokens) -> jax.Array:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return constrain(x, "batch", None, None)
+
+    def forward_train(self, params: Params, batch: Dict[str, jax.Array]):
+        """Returns logits over the (text) positions of ``inputs``."""
+        cfg = self.cfg
+        params = self._cast(params)
+        tokens = batch["inputs"]
+        x = self.embed(params, tokens)
+        if cfg.enc_dec:
+            # frontend stub: frame embeddings arrive precomputed at d_model
+            enc = batch["frame_embeds"].astype(x.dtype)
+            enc = enc + params["pos_embed_enc"][None, :enc.shape[1]].astype(
+                x.dtype)
+
+            def ebody(h, sp):
+                return self._enc_block(sp, h), None
+            enc, _ = lax.scan(ebody, enc, params["enc_slots"][0],
+                              unroll=cfg.enc_layers if cfg.loop_unroll else 1)
+            enc = L.rms_norm(params["enc_final_ln"], enc)
+            x = x + params["pos_embed_dec"][None, :x.shape[1]].astype(x.dtype)
+
+            def dbody(h, sp):
+                return self._dec_block_train(sp, h, enc), None
+            x, _ = lax.scan(dbody, x, params["slots"][0],
+                            unroll=self.repeats if cfg.loop_unroll else 1)
+            x = L.rms_norm(params["final_ln"], x)
+            return self.logits(params, x)
+        if cfg.frontend == "patch":
+            pe = batch["patch_embeds"].astype(x.dtype) @ params["patch_proj"]
+            x = jnp.concatenate([pe, x], axis=1)
+        x = self._backbone_train(params, x)
+        if cfg.frontend == "patch":
+            x = x[:, cfg.n_patches:]
+        return self.logits(params, x)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        lg = self.forward_train(params, batch)
+        labels = batch["targets"]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, labels[..., None], -1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _slot_cache(self, kind: str, batch: int, max_len: int):
+        cfg = self.cfg
+        ct = _dtype(cfg.compute_dtype)
+        if kind == "a":
+            w = min(max_len, cfg.sliding_window or max_len)
+            return {
+                "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), ct),
+                "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), ct),
+                "kpos": jnp.full((w,), -1, jnp.int32),
+            }
+        if kind == "m":
+            return S.MambaState(
+                jnp.zeros((batch, cfg.mamba_d_conv - 1,
+                           cfg.mamba_expand * cfg.d_model), ct),
+                jnp.zeros((batch, cfg.mamba_expand * cfg.d_model,
+                           cfg.mamba_d_state), jnp.float32))
+        if kind == "x":
+            di = int(cfg.mlstm_proj * cfg.d_model)
+            dh = di // cfg.n_heads
+            return S.MLSTMState(
+                jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+                jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+                jnp.full((batch, cfg.n_heads), -1e30, jnp.float32))
+        if kind == "s":
+            di = S.slstm_inner_dim(cfg.d_model, cfg.n_heads, cfg.slstm_proj)
+            z = jnp.zeros((batch, di), jnp.float32)
+            return S.SLSTMState(z, z, jnp.full((batch, di), -1e30,
+                                               jnp.float32), z)
+        raise ValueError(kind)
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        slots = []
+        for j, kind in enumerate(self.pattern):
+            per = [self._slot_cache(kind, batch, max_len)
+                   for _ in range(self.repeats)]
+            slots.append(jax.tree.map(lambda *a: jnp.stack(a), *per))
+        cache["slots"] = slots
+        if self.cfg.enc_dec:
+            ct = _dtype(self.cfg.compute_dtype)
+            cache["cross_k"] = jnp.zeros(
+                (self.repeats, batch, self.cfg.enc_positions,
+                 self.cfg.n_kv_heads, self.cfg.hd), ct)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+
+    # ------------------------------------------------------------------
+    # cached block (prefill S tokens or decode 1 token)
+    # ------------------------------------------------------------------
+    def _block_cached(self, p, x, kind, moe_slot, cache, pos,
+                      cross_kv=None, use_rope=True):
+        cfg = self.cfg
+        h = L.rms_norm(p["ln1"], x)
+        if kind == "a":
+            out, new_cache = L.attention_cached(
+                p["attn"], h, cache, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+                attn_block=cfg.attn_block, use_rope=use_rope)
+            x = x + out
+        elif kind == "m":
+            out, new_cache = S.mamba_forward(p["mamba"], h, cache,
+                                             chunk=min(cfg.mamba_chunk,
+                                                       max(x.shape[1], 1)))
+        elif kind == "x":
+            if x.shape[1] == 1:
+                out, new_cache = S.mlstm_recurrent(p["mlstm"], h,
+                                                   cache, n_heads=cfg.n_heads)
+            else:
+                out, new_cache = S.mlstm_chunkwise(
+                    p["mlstm"], h, cache, n_heads=cfg.n_heads,
+                    chunk=cfg.mlstm_chunk)
+        elif kind == "s":
+            out, new_cache = S.slstm_forward(p["slstm"], h, cache)
+        if kind != "a":
+            x = x + out
+        if cfg.enc_dec and kind == "a" and cross_kv is not None:
+            hx = L.rms_norm(p["lnx"], x)
+            out, _ = L.attention(p["xattn"], hx, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                 rope_theta=cfg.rope_theta,
+                                 cross_kv=cross_kv, use_rope=False)
+            x = x + out
+        if cfg.has_ffn(kind):
+            h2 = L.rms_norm(p["ln2"], x)
+            if moe_slot:
+                key = "moe_ep" if cfg.moe_sharding == "ep" else "moe_tp"
+                x = x + L.moe(p[key], h2, top_k=cfg.top_k,
+                              n_experts=cfg.n_experts,
+                              capacity_factor=cfg.capacity_factor,
+                              ep=(key == "moe_ep"))
+            else:
+                x = x + L.mlp(p["mlp"], h2)
+        return x, new_cache
+
+    def _run_cached(self, params, x, cache, extra=None):
+        """Scan super-blocks threading per-slot caches."""
+        cfg = self.cfg
+        kinds = self.pattern
+        pos = cache["pos"]
+        use_rope = not cfg.enc_dec
+
+        def body(x, inp):
+            slot_params, slot_caches, cross = inp
+            new_caches = []
+            for j, kind in enumerate(kinds):
+                moe_slot = cfg.is_moe_slot(j) and cfg.has_ffn(kind)
+                ck = None
+                if cross is not None and kind == "a":
+                    ck = cross
+                x, nc = self._block_cached(slot_params[j], x, kind, moe_slot,
+                                           slot_caches[j], pos, cross_kv=ck,
+                                           use_rope=use_rope)
+                new_caches.append(nc)
+            return x, new_caches
+
+        xs = (params["slots"], cache["slots"],
+              (cache.get("cross_k"), cache.get("cross_v"))
+              if cfg.enc_dec else None)
+        x, new_slots = lax.scan(body, x, xs,
+                                unroll=self.repeats if cfg.loop_unroll else 1)
+        new_cache = dict(cache)
+        new_cache["slots"] = new_slots
+        new_cache["pos"] = pos + x.shape[1]
+        return x, new_cache
+
+    # ------------------------------------------------------------------
+    def prefill(self, params: Params, batch, cache):
+        """Process a full prompt; returns (last-token logits, cache)."""
+        cfg = self.cfg
+        params = self._cast(params)
+        x = self.embed(params, batch["inputs"])
+        if cfg.enc_dec:
+            enc = batch["frame_embeds"].astype(x.dtype)
+            enc = enc + params["pos_embed_enc"][None, :enc.shape[1]].astype(
+                x.dtype)
+
+            def ebody(h, sp):
+                return self._enc_block(sp, h), None
+            enc, _ = lax.scan(ebody, enc, params["enc_slots"][0],
+                              unroll=cfg.enc_layers if cfg.loop_unroll else 1)
+            enc = L.rms_norm(params["enc_final_ln"], enc)
+            # precompute per-layer cross K/V into the cache
+            p_x = params["slots"][0]["xattn"]
+            ck = jnp.einsum("bsd,rdh->rbsh", enc, p_x["wk"]).reshape(
+                self.repeats, enc.shape[0], enc.shape[1], cfg.n_kv_heads,
+                cfg.hd)
+            cv = jnp.einsum("bsd,rdh->rbsh", enc, p_x["wv"]).reshape(
+                self.repeats, enc.shape[0], enc.shape[1], cfg.n_kv_heads,
+                cfg.hd)
+            cache = dict(cache)
+            cache["cross_k"] = ck.astype(_dtype(cfg.compute_dtype))
+            cache["cross_v"] = cv.astype(_dtype(cfg.compute_dtype))
+            x = x + params["pos_embed_dec"][None, :x.shape[1]].astype(x.dtype)
+        if cfg.frontend == "patch":
+            pe = batch["patch_embeds"].astype(x.dtype) @ params["patch_proj"]
+            x = jnp.concatenate([pe, x], axis=1)
+        x, cache = self._run_cached(params, x, cache)
+        x = L.rms_norm(params["final_ln"], x[:, -1:])
+        return self.logits(params, x), cache
+
+    def decode_step(self, params: Params, batch, cache):
+        """One-token step against the cache. batch['inputs']: (B, 1)."""
+        cfg = self.cfg
+        params = self._cast(params)
+        x = self.embed(params, batch["inputs"])
+        if cfg.enc_dec:
+            pos = jnp.clip(cache["pos"], 0, cfg.max_positions - 1)
+            pe = lax.dynamic_slice_in_dim(params["pos_embed_dec"], pos, 1, 0)
+            x = x + pe[None].astype(x.dtype)
+        x, cache = self._run_cached(params, x, cache)
+        x = L.rms_norm(params["final_ln"], x)
+        return self.logits(params, x), cache
+
+    # ------------------------------------------------------------------
+    def param_counts(self, params: Params) -> Tuple[int, int]:
+        """(total, active) parameter counts; active discounts MoE experts."""
+        cfg = self.cfg
+        leaves = jax.tree.leaves(params)
+        total = sum(int(np.prod(a.shape)) for a in leaves)
+        expert = 0
+        for slot in params["slots"]:
+            for key in ("moe_ep", "moe_tp"):
+                if key in slot:
+                    expert += sum(int(np.prod(slot[key][w].shape))
+                                  for w in ("wg", "wu", "wd"))
+        active = total - expert + (expert * cfg.top_k // max(cfg.n_experts, 1))
+        return total, active
+
+
+def build_lm(cfg: ArchConfig) -> LM:
+    return LM(cfg)

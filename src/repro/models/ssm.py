@@ -1,0 +1,405 @@
+"""Recurrent sequence-mixing blocks: Mamba (Jamba), mLSTM + sLSTM (xLSTM).
+
+Each block provides:
+  * a chunked/parallel *training* form (compiles to MXU-friendly matmuls,
+    O(S * chunk) memory instead of O(S^2) / O(S*d*n) blowups), and
+  * an O(1)-state *decode* step (this is what makes the ``long_500k``
+    cells sub-quadratic for the ssm/hybrid archs).
+
+Correctness of the chunked forms is property-tested against the naive
+recurrent references in tests/test_ssm.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import _dense_init
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Mamba (selective SSM)
+# ===========================================================================
+
+class MambaState(NamedTuple):
+    conv: jax.Array     # (B, d_conv-1, d_inner) — last inputs for the conv
+    ssm: jax.Array      # (B, d_inner, d_state) — recurrent state (f32)
+
+
+def init_mamba(key, d_model: int, *, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4, dt_rank: Optional[int] = None,
+               dtype=jnp.float32) -> Params:
+    di = expand * d_model
+    dt_rank = dt_rank or -(-d_model // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], d_model, (d_model, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], d_conv, (d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], di, (di, dt_rank + 2 * d_state), dtype),
+        "dt_proj": _dense_init(ks[3], dt_rank, (dt_rank, di), dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1,
+                                             dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], di, (di, d_model), dtype),
+    }
+
+
+def _mamba_conv(p, x_in, conv_state=None):
+    """Causal depthwise conv over time via shifted adds (d_conv taps).
+
+    x_in: (B, S, di). Returns (y, new_conv_state)."""
+    d_conv = p["conv_w"].shape[0]
+    if conv_state is not None:
+        hist = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], 1)
+    else:
+        hist = jnp.pad(x_in, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    s = x_in.shape[1]
+    y = jnp.zeros_like(x_in)
+    for t in range(d_conv):
+        y = y + hist[:, t:t + s, :] * p["conv_w"][t]
+    new_state = hist[:, -(d_conv - 1):, :] if d_conv > 1 else None
+    return y + p["conv_b"], new_state
+
+
+def _mamba_scan_chunked(dt, x_c, A, bmat, cmat, h0, chunk: int):
+    """Selective-scan over chunks with everything big kept chunk-local.
+
+    The O(S*di*ds) discretised tensors (dA, dBx) and the hidden states
+    are materialised **per chunk only** inside the (rematerialised) scan
+    body; the chunk output is contracted against C immediately, so live
+    memory is O(B*chunk*di*ds) + O(B*S*di) instead of O(B*S*di*ds)
+    (which for Jamba's 16384x16 inner state would be ~64 GiB/layer).
+
+    dt, x_c: (B, S, di) f32; bmat, cmat: (B, S, ds) f32; A: (di, ds).
+    Returns (y (B,S,di) f32, h_last (B,di,ds) f32).
+    """
+    b, s, di = dt.shape
+    ds = A.shape[1]
+    n = s // chunk
+
+    def resh(t):
+        return t.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+
+    dt_c, x_cc, b_c, c_c = resh(dt), resh(x_c), resh(bmat), resh(cmat)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    @jax.checkpoint
+    def body(h, blk):
+        dtb, xb, bb, cb = blk            # (B, chunk, di|ds)
+        dA = jnp.exp(dtb[..., None] * A)               # (B,chunk,di,ds)
+        dBx = (dtb * xb)[..., None] * bb[:, :, None, :]
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h)
+        _, hh = lax.associative_scan(combine, (dA, dBx), axis=1)
+        y = jnp.einsum("blds,bls->bld", hh, cb)        # fold C in-chunk
+        return hh[:, -1], y
+
+    h_last, ys = lax.scan(body, h0, (dt_c, x_cc, b_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    return y, h_last
+
+
+def mamba_forward(p: Params, x: jax.Array, state: Optional[MambaState] = None,
+                  *, chunk: int = 128
+                  ) -> Tuple[jax.Array, Optional[MambaState]]:
+    """Full-sequence (train/prefill) Mamba block. x: (B, S, d_model)."""
+    b, s, d = x.shape
+    di = p["conv_w"].shape[1]
+    ds = p["A_log"].shape[1]
+    dt_rank = p["dt_proj"].shape[0]
+
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    x_c, new_conv = _mamba_conv(p, x_in, conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    proj = x_c @ p["x_proj"]
+    dt_in, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                   # (di, ds)
+
+    dtf = dt.astype(jnp.float32)
+    xcf = x_c.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+    h0 = (state.ssm if state is not None
+          else jnp.zeros((b, di, ds), jnp.float32))
+    pad = (-s) % chunk
+    if pad:
+        # dt=0 -> dA=1, dBx=0: padded steps leave the state untouched
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        xcf = jnp.pad(xcf, ((0, 0), (0, pad), (0, 0)))
+        bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+        cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+    y, h_last = _mamba_scan_chunked(dtf, xcf, A, bf, cf, h0, chunk)
+    y = y[:, :s]
+
+    y = y + p["D"] * x_c.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = MambaState(new_conv.astype(state.conv.dtype), h_last)
+    return out, new_state
+
+
+def mamba_step(p: Params, x: jax.Array, state: MambaState
+               ) -> Tuple[jax.Array, MambaState]:
+    """Single-token decode step. x: (B, 1, d_model)."""
+    y, new_state = mamba_forward(p, x, state, chunk=1)
+    return y, new_state
+
+
+def init_mamba_state(batch: int, p: Params, dtype=jnp.bfloat16) -> MambaState:
+    d_conv, di = p["conv_w"].shape
+    ds = p["A_log"].shape[1]
+    return MambaState(jnp.zeros((batch, d_conv - 1, di), dtype),
+                      jnp.zeros((batch, di, ds), jnp.float32))
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block) — chunkwise parallel + recurrent step
+# ===========================================================================
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, dk, dv) matrix memory (f32)
+    n: jax.Array   # (B, H, dk) normaliser
+    m: jax.Array   # (B, H) log-domain stabiliser
+
+
+def init_mlstm(key, d_model: int, *, n_heads: int, proj_factor: float = 2.0,
+               dtype=jnp.float32) -> Params:
+    di = int(proj_factor * d_model)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": _dense_init(ks[0], d_model, (d_model, 2 * di), dtype),
+        "wq": _dense_init(ks[1], di, (di, di), dtype),
+        "wk": _dense_init(ks[2], di, (di, di), dtype),
+        "wv": _dense_init(ks[3], di, (di, di), dtype),
+        "wif": _dense_init(ks[4], di, (di, 2 * n_heads), jnp.float32),
+        "bif": jnp.concatenate([jnp.zeros((n_heads,)),
+                                jnp.full((n_heads,), 3.0)]).astype(jnp.float32),
+        "down": _dense_init(ks[5], di, (di, d_model), dtype),
+    }
+
+
+def _mlstm_heads(p, x, n_heads):
+    b, s, _ = x.shape
+    up = x @ p["up"]
+    xi, z = jnp.split(up, 2, -1)
+    di = xi.shape[-1]
+    dh = di // n_heads
+    q = (xi @ p["wq"]).reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+    k = (xi @ p["wk"]).reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+    v = (xi @ p["wv"]).reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+    gif = xi.astype(jnp.float32) @ p["wif"] + p["bif"]
+    ig, fg = jnp.split(gif, 2, -1)                   # (B, S, H)
+    log_i = ig.transpose(0, 2, 1)                    # pre-activation
+    log_f = -jax.nn.softplus(-fg).transpose(0, 2, 1)  # log sigmoid
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_recurrent(p: Params, x: jax.Array, state: MLSTMState, *,
+                    n_heads: int) -> Tuple[jax.Array, MLSTMState]:
+    """Step-by-step reference / decode path. x: (B, S, d)."""
+    b, s, d = x.shape
+    q, k, v, log_i, log_f, z = _mlstm_heads(p, x, n_heads)
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    def step(carry, t):
+        c, n, m = carry
+        qt = q[:, :, t].astype(jnp.float32) * scale
+        kt = k[:, :, t].astype(jnp.float32)
+        vt = v[:, :, t].astype(jnp.float32)
+        li, lf = log_i[:, :, t], log_f[:, :, t]
+        m_new = jnp.maximum(lf + m, li)
+        f_t = jnp.exp(lf + m - m_new)[..., None]
+        i_t = jnp.exp(li - m_new)[..., None]
+        c_new = f_t[..., None] * c + i_t[..., None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n_new = f_t * n + i_t * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, c_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n_new)),
+                          jnp.exp(-m_new))[..., None]
+        return (c_new, n_new, m_new), (num / den)
+
+    (c, n, m), hs = lax.scan(step, (state.c, state.n, state.m),
+                             jnp.arange(s))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, -1)   # (T,B,H,dh)->(B,S,di)
+    out = (hs.astype(x.dtype) * jax.nn.silu(z)) @ p["down"]
+    return out, MLSTMState(c, n, m)
+
+
+def mlstm_chunkwise(p: Params, x: jax.Array,
+                    state: Optional[MLSTMState] = None, *, n_heads: int,
+                    chunk: int = 256) -> Tuple[jax.Array, Optional[MLSTMState]]:
+    """Chunkwise-parallel mLSTM (training form): intra-chunk quadratic
+    matmuls + inter-chunk recurrence on (C, n, m).
+    """
+    b, s, d = x.shape
+    q, k, v, log_i, log_f, z = _mlstm_heads(p, x, n_heads)
+    h = n_heads
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    pad = (-s) % chunk
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                   for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+    sp = s + pad
+    nc = sp // chunk
+
+    def resh(t):
+        return t.reshape(b, h, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)          # (nc,B,H,L,dh)
+    lic = log_i.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    lfc = log_f.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    @jax.checkpoint
+    def body(carry, blk):
+        c, n, m = carry
+        qb, kb, vb, li, lf = blk
+        qb = qb.astype(jnp.float32) * scale
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        bcum = jnp.cumsum(lf, -1)                       # (B,H,L)
+        # intra-chunk decay matrix: D[t,s] = b_t - b_s + i_s (s <= t)
+        dmat = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri, dmat, -1e30)
+        # inter-chunk logits: a_t = b_t + m_prev
+        a_vec = bcum + m[..., None]
+        m_intra = dmat.max(-1)
+        m_new_t = jnp.maximum(m_intra, a_vec)           # (B,H,L)
+        dstab = jnp.exp(dmat - m_new_t[..., None])
+        inter_w = jnp.exp(a_vec - m_new_t)              # (B,H,L)
+
+        sc = jnp.einsum("bhld,bhmd->bhlm", qb, kb) * dstab
+        num = jnp.einsum("bhlm,bhmd->bhld", sc, vb) \
+            + inter_w[..., None] * jnp.einsum("bhld,bhdv->bhlv", qb, c)
+        # normaliser q.n_t: intra decayed (q.k_s) sums + inter q.n_prev
+        den = sc.sum(-1) + inter_w * jnp.einsum("bhld,bhd->bhl", qb, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new_t))
+        hout = num / den[..., None]
+
+        # update carry to end of chunk
+        g = bcum[..., -1]                               # total log decay
+        m_next = jnp.maximum(g + m, (bcum[..., -1:] - bcum + li).max(-1))
+        # decayed contribution of each position to end-of-chunk state
+        wts = jnp.exp(bcum[..., -1:] - bcum + li - m_next[..., None])
+        c_next = jnp.exp(g + m - m_next)[..., None, None] * c + jnp.einsum(
+            "bhl,bhld,bhlv->bhdv", wts, kb, vb)
+        n_next = jnp.exp(g + m - m_next)[..., None] * n + jnp.einsum(
+            "bhl,bhld->bhd", wts, kb)
+        return (c_next, n_next, m_next), hout
+
+    (c, n, m), hs = lax.scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, sp, dh)[:, :, :s]
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = (hs.astype(x.dtype) * jax.nn.silu(z)) @ p["down"]
+    new_state = MLSTMState(c, n, m) if state is not None else None
+    return out, new_state
+
+
+def init_mlstm_state(batch: int, p: Params, n_heads: int) -> MLSTMState:
+    di = p["wq"].shape[1]
+    dh = di // n_heads
+    return MLSTMState(jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+                      jnp.zeros((batch, n_heads, dh), jnp.float32),
+                      jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory block) — inherently sequential
+# ===========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, di)
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array   # recurrent output feeding the gates
+
+
+def slstm_inner_dim(d_model: int, n_heads: int,
+                    proj_factor: float = 4 / 3) -> int:
+    """Round the 4/3 up-projection to a TP-friendly multiple (64 and
+    n_heads) so the 16-way model axis divides it cleanly."""
+    di = int(proj_factor * d_model)
+    unit = max(64, n_heads)
+    return max(-(-di // unit) * unit, unit)
+
+
+def init_slstm(key, d_model: int, *, n_heads: int,
+               proj_factor: float = 4 / 3, dtype=jnp.float32) -> Params:
+    di = slstm_inner_dim(d_model, n_heads, proj_factor)
+    ks = jax.random.split(key, 4)
+    return {
+        # input->gates (z, i, f, o) and recurrent h->gates
+        "wx": _dense_init(ks[0], d_model, (d_model, 4 * di), dtype),
+        "wh": _dense_init(ks[1], di, (di, 4 * di), dtype),
+        "b": jnp.zeros((4 * di,), jnp.float32),
+        "down": _dense_init(ks[2], di, (di, d_model), dtype),
+    }
+
+
+def slstm_forward(p: Params, x: jax.Array,
+                  state: Optional[SLSTMState] = None
+                  ) -> Tuple[jax.Array, Optional[SLSTMState]]:
+    """Sequential scan over time (no parallel form exists — the
+    recurrent weight matrix creates a true serial dependency)."""
+    b, s, d = x.shape
+    di = p["down"].shape[0]
+    xg = x @ p["wx"]                                   # (B,S,4di)
+    ret_state = state is not None
+    if state is None:
+        state = init_slstm_state(b, p)
+
+    def step(carry, t):
+        c, n, m, h = carry
+        g = xg[:, t].astype(jnp.float32) \
+            + (h.astype(x.dtype) @ p["wh"]).astype(jnp.float32) + p["b"]
+        zg, ig, fg, og = jnp.split(g, 4, -1)
+        zt = jnp.tanh(zg)
+        lf = -jax.nn.softplus(-fg)                    # log sigmoid(f)
+        m_new = jnp.maximum(lf + m, ig)
+        i_t = jnp.exp(ig - m_new)
+        f_t = jnp.exp(lf + m - m_new)
+        c_new = f_t * c + i_t * zt
+        n_new = f_t * n + i_t
+        h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), hs = lax.scan(step, tuple(state), jnp.arange(s))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)        # (B,S,di)
+    out = hs @ p["down"]
+    return out, (SLSTMState(c, n, m, h) if ret_state else None)
+
+
+def init_slstm_state(batch: int, p: Params) -> SLSTMState:
+    di = p["down"].shape[0]
+    z = jnp.zeros((batch, di), jnp.float32)
+    return SLSTMState(z, z, jnp.full((batch, di), -1e30, jnp.float32), z)

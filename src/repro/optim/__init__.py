@@ -1,0 +1,7 @@
+"""Optimizers (pure JAX — no optax dependency)."""
+
+from .adamw import (OptState, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_warmup_schedule)
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_warmup_schedule"]

@@ -1,0 +1,90 @@
+"""AdamW + schedule + clipping, pytree-native.
+
+Optimizer state dtype is configurable; with ``master_dtype='float32'`` and
+bf16 params, ``mu``/``nu``/``master`` hold the f32 truth and the bf16
+params are re-materialised each step (standard mixed-precision training).
+ZeRO-1 sharding of the state is applied by the launcher via
+``distributed.sharding.param_shardings`` on the state tree (the state
+mirrors the param tree, so param rules apply transitively, plus the
+optional extra 'fsdp' data-axis sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    master: Any          # f32 master copy when params are low-precision
+
+
+def adamw_init(params, *, master_dtype=jnp.float32,
+               state_dtype=jnp.float32) -> OptState:
+    mu = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+    nu = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+    needs_master = any(p.dtype != master_dtype
+                       for p in jax.tree.leaves(params))
+    master = (jax.tree.map(lambda p: p.astype(master_dtype), params)
+              if needs_master else None)
+    return OptState(jnp.zeros((), jnp.int32), mu, nu, master)
+
+
+def adamw_update(params, grads, state: OptState, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    """One AdamW step. ``lr`` may be a scalar or a schedule(step) callable."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1t = 1 - b1 ** step.astype(jnp.float32)
+    b2t = 1 - b2 ** step.astype(jnp.float32)
+
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(state.mu)
+    v_flat = treedef.flatten_up_to(state.nu)
+    pm_flat = (treedef.flatten_up_to(state.master)
+               if state.master is not None else [None] * len(p_flat))
+
+    new_p, new_m, new_v, new_pm = [], [], [], []
+    for p, g, m, v, pm in zip(p_flat, g_flat, m_flat, v_flat, pm_flat):
+        gf = g.astype(m.dtype)
+        m1 = b1 * m + (1 - b1) * gf
+        v1 = b2 * v + (1 - b2) * gf * gf
+        mhat = m1 / b1t
+        vhat = v1 / b2t
+        base = pm if pm is not None else p.astype(m.dtype)
+        nm = base - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                            + weight_decay * base)
+        new_p.append(nm.astype(p.dtype))
+        new_m.append(m1)
+        new_v.append(v1)
+        new_pm.append(nm)
+
+    unfl = treedef.unflatten
+    master = unfl(new_pm) if state.master is not None else None
+    return unfl(new_p), OptState(step, unfl(new_m), unfl(new_v), master)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def cosine_warmup_schedule(base_lr: float, warmup: int, total: int,
+                           min_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,61 @@
+"""Launch-layer unit tests (no placeholder devices needed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import LONG_CONTEXT_OK, SHAPES, get
+from repro.launch.dryrun import cell_is_skipped
+from repro.launch.serve import serve
+from repro.launch.steps import effective_seq, input_specs
+
+
+def test_input_specs_shapes():
+    cfg = get("stablelm-12b")
+    tr = input_specs(cfg, SHAPES["train_4k"])
+    assert tr["inputs"].shape == (256, 4096)
+    pf = input_specs(cfg, SHAPES["prefill_32k"])
+    assert pf["inputs"].shape == (32, 32768)
+    dc = input_specs(cfg, SHAPES["decode_32k"])
+    assert dc["inputs"].shape == (128, 1)
+
+
+def test_vlm_specs_include_patches():
+    cfg = get("internvl2-76b")
+    tr = input_specs(cfg, SHAPES["train_4k"])
+    assert tr["inputs"].shape == (256, 4096 - cfg.n_patches)
+    assert tr["patch_embeds"].shape == (256, 256, cfg.frontend_dim)
+
+
+def test_whisper_seq_caps():
+    cfg = get("whisper-small")
+    assert effective_seq(cfg, SHAPES["train_4k"]) == 448
+    assert effective_seq(cfg, SHAPES["decode_32k"]) == 448
+    tr = input_specs(cfg, SHAPES["train_4k"])
+    assert tr["frame_embeds"].shape == (256, 1500, 768)
+
+
+def test_long_context_skip_policy():
+    assert cell_is_skipped("yi-34b", "long_500k") is not None
+    assert cell_is_skipped("xlstm-350m", "long_500k") is None
+    assert cell_is_skipped("jamba-1.5-large-398b", "long_500k") is None
+    assert cell_is_skipped("mixtral-8x7b", "long_500k") is None
+    assert cell_is_skipped("yi-34b", "train_4k") is None
+    # the skip set is exactly the pure-full-attention archs
+    skipped = {a for a in
+               ("stablelm-12b", "internlm2-20b", "qwen1.5-32b", "yi-34b",
+                "dbrx-132b", "internvl2-76b", "whisper-small")
+               if cell_is_skipped(a, "long_500k")}
+    assert len(skipped) == 7
+    assert LONG_CONTEXT_OK == {"xlstm-350m", "jamba-1.5-large-398b",
+                               "mixtral-8x7b"}
+
+
+def test_serve_loop_end_to_end():
+    cfg = get("stablelm-12b").reduced()
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12]]
+    results, stats = serve(cfg, prompts, max_new=4, slots=2, max_len=32)
+    assert set(results) == {0, 1, 2}
+    assert all(len(v) == 4 for v in results.values())
+    assert all(0 <= t < cfg.vocab_padded
+               for v in results.values() for t in v)
