@@ -1,35 +1,162 @@
-"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness +
-call overhead; the BlockSpec tiling targets the TPU MXU — see DESIGN.md)."""
+"""Pallas SD kernel benchmarks: per-layer sweep over the paper's six
+benchmark networks (interpret mode on CPU: the BlockSpec tiling targets
+the TPU MXU — see DESIGN.md).
 
+For every deconv layer of every benchmark network this measures
+
+* ``seed``  — the seed repo's path: unfused Pallas stride-1 conv with the
+  fixed row-tile heuristic (``th`` = largest of 8/4/2/1 dividing OH, no
+  channel tiling), then XLA depth_to_space + crop.
+* ``fused`` — the engine path: autotuned (th, tcin, tcout) plan, one
+  fused kernel doing conv + in-VMEM interleave (+ epilogue).
+
+and writes a machine-readable ``BENCH_kernels.json`` so the perf
+trajectory is tracked across PRs.  Standalone:
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench --nets dcgan --json out.json
+"""
+
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import native_deconv, split_filters
-from repro.kernels.ops import sd_deconv_kernel
+from repro.core import native_deconv, same_deconv_pads, split_filters
+from repro.core.deconv import sd_deconv_presplit
+from repro.core.accounting import BENCHMARKS
+from repro.kernels import autotune
+from repro.kernels.autotune import ConvGeom, candidate_plans
+from repro.kernels.ops import (sd_conv2d_valid, sd_deconv_presplit_fused,
+                               ws_to_ocmajor)
+
+JSON_DEFAULT = "BENCH_kernels.json"
 
 
-def run(report):
-    report.section("Pallas sd_deconv kernel vs XLA native deconv "
-                   "(interpret mode, CPU)")
-    report.header(["shape", "K/s", "xla_ms", "pallas_ms", "allclose"])
-    key = jax.random.PRNGKey(0)
-    for (h, cin, cout, k, s) in [(16, 64, 32, 5, 2), (32, 32, 16, 4, 2),
-                                 (8, 128, 64, 3, 2)]:
-        x = jax.random.normal(key, (1, h, h, cin), jnp.float32)
-        w = jax.random.normal(key, (k, k, cin, cout), jnp.float32) * 0.05
-        f_ref = jax.jit(lambda a, b: native_deconv(a, b, s, 1))
-        f_ker = jax.jit(lambda a, b: sd_deconv_kernel(a, b, s, 1))
-        ref = f_ref(x, w)
-        out = f_ker(x, w)
-        ok = bool(jnp.allclose(ref, out, atol=1e-4))
+def _seed_pick_th(oh: int) -> int:
+    """The seed's hardcoded row-tile heuristic (baseline column)."""
+    for th in (8, 4, 2, 1):
+        if oh % th == 0:
+            return th
+    return 1
 
-        def t(f):
-            jax.block_until_ready(f(x, w))
-            t0 = time.perf_counter()
-            for _ in range(3):
-                jax.block_until_ready(f(x, w))
-            return (time.perf_counter() - t0) / 3 * 1e3
-        report.row([f"{h}x{h}x{cin}->{cout}", f"{k}/{s}",
-                    f"{t(f_ref):.2f}", f"{t(f_ker):.2f}", ok])
+
+def bench_layer(layer, batch=1, iters=5, tune=True, max_candidates=6,
+                cache_path=None):
+    """Benchmark one deconv layer; returns a result record."""
+    k, s = layer.k, layer.s
+    h, w_ = layer.in_hw
+    cin, cout = layer.cin, layer.cout
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (batch, h, w_, cin), jnp.float32)
+    w = jax.random.normal(kw_, (k, k, cin, cout), jnp.float32) * 0.05
+    pads = (same_deconv_pads(k, s) if layer.padding == "same"
+            else layer.pad)
+    ref = native_deconv(x, w, s, pads)
+
+    ws_n = split_filters(w, s)                     # offline, both paths
+    ws_oc = ws_to_ocmajor(ws_n, s)
+    geom = ConvGeom.from_deconv(batch, h, w_, cin, cout, k, s)
+    th_seed = _seed_pick_th(geom.oh)
+
+    f_seed = jax.jit(lambda a: sd_deconv_presplit(
+        a, ws_n, (k, k), s, pads,
+        conv_fn=lambda xp, wsp: sd_conv2d_valid(
+            xp, wsp, th=th_seed, tcin=cin, tcout=cout * s * s)))
+
+    def fused_fn(plan):
+        return jax.jit(lambda a: sd_deconv_presplit_fused(
+            a, ws_oc, (k, k), s, pads, plan=plan))
+
+    if tune:
+        def runner(plan):
+            f = fused_fn(plan)
+            return autotune.measure(
+                lambda: jax.block_until_ready(f(x)), iters=iters)
+        plan = autotune.tune(geom, runner,
+                             candidates=candidate_plans(geom, max_candidates),
+                             path=cache_path)
+    else:
+        plan = autotune.get_plan(geom, path=cache_path)
+    f_fused = fused_fn(plan)
+
+    def t(f):
+        return autotune.measure(lambda: jax.block_until_ready(f(x)),
+                                iters=iters)
+
+    # Interleave the two final measurements so machine-state drift
+    # between them cannot fabricate (or hide) a speedup.
+    seed_ms, fused_ms = t(f_seed), t(f_fused)
+    seed_ms, fused_ms = min(seed_ms, t(f_seed)), min(fused_ms, t(f_fused))
+    ok = bool(jnp.allclose(ref, f_seed(x), atol=1e-4)
+              and jnp.allclose(ref, f_fused(x), atol=1e-4))
+    return {
+        "layer": layer.name, "in_hw": list(layer.in_hw),
+        "cin": cin, "cout": cout, "k": k, "s": s, "batch": batch,
+        "geom_key": geom.key(), "seed_th": th_seed,
+        "plan": {"th": plan.th, "tcin": plan.tcin, "tcout": plan.tcout},
+        "seed_ms": round(seed_ms, 3), "fused_ms": round(fused_ms, 3),
+        "speedup": round(seed_ms / fused_ms, 3) if fused_ms else None,
+        "allclose": ok,
+    }
+
+
+def run(report, nets=None, json_path=JSON_DEFAULT, iters=5, tune=True):
+    report.section("Pallas SD kernels: seed unfused (fixed th) vs "
+                   "autotuned fused, per benchmark layer "
+                   f"(backend={jax.default_backend()}, interpret off-TPU)")
+    report.header(["net/layer", "shape", "K/s", "seed_ms", "fused_ms",
+                   "speedup", "plan(th,tcin,tcout)", "ok"])
+    results = {"meta": {"jax": jax.__version__,
+                        "backend": jax.default_backend(),
+                        "iters": iters, "tuned": tune},
+               "layers": []}
+    for name in (nets or list(BENCHMARKS)):
+        spec = BENCHMARKS[name]()
+        for layer in spec.deconv_layers():
+            rec = bench_layer(layer, iters=iters, tune=tune)
+            rec["net"] = name
+            results["layers"].append(rec)
+            p = rec["plan"]
+            sp = rec["speedup"]
+            report.row([f"{name}/{layer.name}",
+                        f"{layer.in_hw[0]}x{layer.in_hw[1]}x{rec['cin']}"
+                        f"->{rec['cout']}",
+                        f"{rec['k']}/{rec['s']}",
+                        f"{rec['seed_ms']:.2f}", f"{rec['fused_ms']:.2f}",
+                        f"{sp:.2f}x" if sp is not None else "n/a",
+                        f"({p['th']},{p['tcin']},{p['tcout']})",
+                        rec["allclose"]])
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+        report.note(f"wrote {json_path} ({len(results['layers'])} layers)")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nets", default=None,
+                    help="comma-separated benchmark names "
+                         f"(default: all of {', '.join(BENCHMARKS)})")
+    ap.add_argument("--json", default=JSON_DEFAULT)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--no-tune", action="store_true",
+                    help="use cached/heuristic plans, skip measurement")
+    args = ap.parse_args(argv)
+
+    from benchmarks.run import Report
+    nets = args.nets.split(",") if args.nets else None
+    unknown = [n for n in (nets or []) if n not in BENCHMARKS]
+    if unknown:
+        ap.error(f"unknown nets {unknown}; choose from "
+                 f"{', '.join(BENCHMARKS)}")
+    t0 = time.time()
+    run(Report(), nets=nets, json_path=args.json, iters=args.iters,
+        tune=not args.no_tune)
+    print(f"\ndone in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,42 +2,66 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only tables123,procmodel
+  PYTHONPATH=src python -m benchmarks.run --json out.json   # + JSON dump
 """
 
 import argparse
+import json
 import sys
 import time
 
 
 class Report:
-    """Plain-text table printer (also keeps CSV lines)."""
+    """Plain-text table printer; keeps CSV lines and structured tables
+    (every section/header/row/note) for the --json dump."""
 
     def __init__(self):
         self.csv = []
+        self.tables = []
+
+    def _table(self):
+        if not self.tables:
+            self.tables.append({"title": "", "header": None,
+                                "rows": [], "notes": []})
+        return self.tables[-1]
 
     def section(self, title):
         print(f"\n=== {title} ===")
         self._cols = None
+        self.tables.append({"title": str(title), "header": None,
+                            "rows": [], "notes": []})
 
     def header(self, cols):
         self._cols = [str(c) for c in cols]
         print(" | ".join(f"{c:>14}" if i else f"{c:<24}"
                          for i, c in enumerate(self._cols)))
+        self._table()["header"] = list(self._cols)
 
     def row(self, vals):
         vals = [str(v) for v in vals]
         print(" | ".join(f"{v:>14}" if i else f"{v:<24}"
                          for i, v in enumerate(vals)))
         self.csv.append(",".join(vals))
+        self._table()["rows"].append(vals)
 
     def note(self, text):
         print(f"  -> {text}")
+        self._table()["notes"].append(str(text))
+
+    def to_json(self):
+        return {"tables": self.tables}
+
+    def dump_json(self, path):
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump every report table as JSON to PATH")
     args = ap.parse_args()
 
     from benchmarks import (commodity, kernel_bench, procmodel,
@@ -54,6 +78,9 @@ def main() -> None:
         t1 = time.time()
         mods[name].run(report)
         print(f"  [{name}: {time.time()-t1:.1f}s]")
+    if args.json:
+        report.dump_json(args.json)
+        print(f"report tables dumped to {args.json}")
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
 
 

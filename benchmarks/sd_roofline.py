@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core import accounting
 from repro.core.deconv import (native_deconv, nzp_deconv, sd_deconv,
                                sd_deconv_paper, same_deconv_pads)
-from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS, cost_dict
 from repro.models.generative import GenerativeModel
 
 IMPLS = {
@@ -55,7 +55,7 @@ def analyze(netname: str, impl: str, batch=8):
     net = accounting.BENCHMARKS[netname]()
     f, xs, ws = _deconv_only_fn(net, impl, batch)
     compiled = jax.jit(f).lower(xs, ws).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled.cost_analysis())
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     useful = 2.0 * net.deconv_macs() * batch     # MAC = 2 flops

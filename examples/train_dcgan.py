@@ -36,7 +36,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--small", action="store_true")
     ap.add_argument("--deconv", default="sd",
-                    choices=["sd", "native", "nzp", "sd_kernel"])
+                    # sd_kernel is the inference engine (filters cached
+                    # at bind): not trainable, so not offered here
+                    choices=["sd", "native", "nzp"])
     ap.add_argument("--out", default="runs/dcgan")
     args = ap.parse_args(argv)
 

@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a fast interpret-mode kernel-parity smoke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== kernel parity smoke (interpret mode) =="
+python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import native_deconv
+from repro.kernels.ops import sd_deconv_kernel
+from repro.models.generative import build
+
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(1, 6, 7, 8), jnp.float32)
+w = jnp.asarray(rng.randn(5, 5, 8, 4), jnp.float32)
+for s, pad in [(2, 1), (3, 2)]:
+    ref = native_deconv(x, w, s, pad)
+    out = sd_deconv_kernel(x, w, s, pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+model = build("dcgan", "sd_kernel")
+params = model.init(jax.random.PRNGKey(0))
+z = jax.random.normal(jax.random.PRNGKey(1), model.input_shape(1))
+ref = build("dcgan", "native").apply(params, z)
+np.testing.assert_allclose(np.asarray(model.apply(params, z)),
+                           np.asarray(ref), rtol=1e-4, atol=1e-4)
+print("kernel parity smoke: OK")
+PY

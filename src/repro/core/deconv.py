@@ -80,6 +80,16 @@ def _pads(padding) -> Tuple[Tuple[int, int], Tuple[int, int]]:
     return (tuple(int(x) for x in a), tuple(int(x) for x in b))
 
 
+def _check_padding(kernel: Tuple[int, int], padding) -> None:
+    """Shared validation: every deconv implementation must reject the same
+    inputs the same way (cropping more than K-1 is meaningless — it would
+    discard whole taps)."""
+    kh, kw = kernel
+    (pt, pb), (pl, pr) = _pads(padding)
+    if min(kh - 1 - pt, kh - 1 - pb, kw - 1 - pl, kw - 1 - pr) < 0:
+        raise ValueError(f"padding {padding} too large for kernel {(kh, kw)}")
+
+
 def same_deconv_pads(kernel: IntPair, stride: IntPair):
     """TF conv2d_transpose 'SAME' crop amounts (out = in*s)."""
     (kh, kw), (sh, sw) = _pair(kernel), _pair(stride)
@@ -109,8 +119,7 @@ def native_deconv(x: jax.Array, w: jax.Array, stride: IntPair,
     sh, sw = _pair(stride)
     (pt, pb), (pl, pr) = _pads(padding)
     kh, kw = w.shape[0], w.shape[1]
-    if min(kh - 1 - pt, kh - 1 - pb, kw - 1 - pl, kw - 1 - pr) < 0:
-        raise ValueError(f"padding {padding} too large for kernel {(kh, kw)}")
+    _check_padding((kh, kw), padding)
     return lax.conv_general_dilated(
         x, w[::-1, ::-1],                       # 180-degree spatial rotation
         window_strides=(1, 1),
@@ -137,6 +146,7 @@ def nzp_deconv(x: jax.Array, w: jax.Array, stride: IntPair,
     """
     (pt, pb), (pl, pr) = _pads(padding)
     kh, kw = w.shape[0], w.shape[1]
+    _check_padding((kh, kw), padding)
     xd = dilate_input(x, stride)
     return lax.conv_general_dilated(
         xd, w[::-1, ::-1],
@@ -215,6 +225,7 @@ def sd_deconv_presplit(x: jax.Array, ws: jax.Array, kernel: IntPair,
     """
     sh, sw = _pair(stride)
     (pt, pb), (pl, pr) = _pads(padding)
+    _check_padding(_pair(kernel), padding)
     (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry(kernel, stride)
     oh, ow = deconv_output_shape(x.shape[1:3], kernel, stride, padding)
 
@@ -258,6 +269,7 @@ def sd_deconv_paper(x: jax.Array, w: jax.Array, stride: IntPair,
     sh, sw = _pair(stride)
     (pt, pb), (pl, pr) = _pads(padding)
     kernel = w.shape[:2]
+    _check_padding(kernel, padding)
     (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry(kernel, stride)
     oh, ow = deconv_output_shape(x.shape[1:3], kernel, stride, padding)
     ws = split_filters(w, stride)            # (KT,KT,Cin,s*s*Cout)

@@ -1,0 +1,8 @@
+"""SD inference engine: offline filter presplitting + per-layer plans.
+
+See :mod:`repro.engine.planner` and DESIGN.md.
+"""
+
+from .planner import LayerPlan, SDEngine, fold_scale_ocmajor
+
+__all__ = ["LayerPlan", "SDEngine", "fold_scale_ocmajor"]

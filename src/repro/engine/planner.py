@@ -1,0 +1,169 @@
+"""Presplit-once SD inference engine.
+
+The paper's speedup story requires the deconv -> split-conv filter
+transform to be **offline**: the processor only ever executes dense
+stride-1 convolutions.  The seed repo re-ran :func:`split_filters` on
+every forward call.  This module makes the transform genuinely one-time:
+
+* :meth:`SDEngine.bind` walks a :class:`NetworkSpec` + param dict once,
+  and for every deconv layer
+
+  1. splits the filter into the oc-major kernel layout
+     (``split_filters`` + ``ws_to_ocmajor``),
+  2. folds the inference-time batch-norm ``scale`` (gamma / sqrt(var))
+     into the split filters — a transposed conv is linear in its filter,
+     so scaling filter output-channels == scaling the output,
+  3. keeps the per-channel ``bias`` (beta) and the layer activation for
+     the kernel's in-VMEM epilogue,
+  4. looks up the (th, tcin, tcout) tile plan from the autotuner cache.
+
+  The result is one immutable :class:`LayerPlan` per deconv layer.
+
+* :meth:`SDEngine.run` executes a layer through
+  :func:`repro.kernels.ops.sd_deconv_presplit_fused` using only the
+  cached plan — no splitting, no BN arithmetic, no plan search on the
+  hot path (asserted by tests/test_engine.py via monkeypatching).
+
+Plans are keyed to the bound param dict by identity; binding different
+params (or mutated copies passed as a new dict) rebuilds the plans.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accounting import NetworkSpec
+from repro.core.deconv import same_deconv_pads, split_filters
+from repro.kernels import ops
+from repro.kernels.autotune import ConvGeom, KernelPlan, get_plan
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """Everything the hot path needs to run one deconv layer."""
+    name: str
+    kernel: Tuple[int, int]
+    stride: int
+    padding: Any                    # int | (ph, pw) | ((pt,pb),(pl,pr))
+    ws_ocmajor: jax.Array           # scale-folded split filters (oc-major)
+    bias: jax.Array                 # (Cout,) f32, added in the epilogue
+    act: str                        # "relu" | "linear" (epilogue-fused)
+    tile: KernelPlan                # autotuned (th, tcin, tcout)
+
+
+def fold_scale_ocmajor(ws_ocmajor: jax.Array, scale: jax.Array,
+                       s: int) -> jax.Array:
+    """Fold a per-output-channel scale into oc-major split filters.
+
+    oc-major channel c = oc*s^2 + phase, so each scale entry covers s^2
+    consecutive phase channels.
+    """
+    return ws_ocmajor * jnp.repeat(scale.astype(ws_ocmajor.dtype), s * s)
+
+
+class SDEngine:
+    """Per-network cache of presplit, BN-folded, tile-planned deconvs."""
+
+    def __init__(self, spec: NetworkSpec, plan_batch: int = 1):
+        self.spec = spec
+        self.plan_batch = plan_batch     # batch used for plan-cache keys
+        self._plans: Dict[str, LayerPlan] = {}
+        self._bound: Optional[Params] = None
+        self._bound_leaves: Optional[tuple] = None
+
+    def _plan_leaves(self, params: Params) -> Optional[tuple]:
+        """The leaves the plans depend on, compared by *object identity*
+        at bound_to time.  jax arrays are immutable, so replacing a value
+        always breaks identity; the container dicts are deliberately NOT
+        part of the fingerprint — a rebuilt pytree holding the same
+        arrays (``{**params}``, device_put of the same buffers) must
+        reuse the plans, while in-place mutation of a bound dict
+        (``params['d1']['w'] = new_w``) must invalidate them.  The bound
+        leaves are held strongly (not as ``id()`` ints) so CPython id
+        reuse after garbage collection can never alias two different
+        arrays."""
+        leaves = []
+        for layer in self.spec.layers:
+            if layer.kind != "deconv":
+                continue
+            p = params.get(layer.name)
+            if not isinstance(p, dict) or "w" not in p or "b" not in p:
+                return None
+            leaves += [p["w"], p.get("scale"), p["b"]]
+        return tuple(leaves)
+
+    # ---- offline phase ---------------------------------------------------
+    def bind(self, params: Params) -> "SDEngine":
+        """Build all layer plans from ``params`` (called once per param
+        set — at model init, or lazily on the first apply with foreign
+        params).  Must not run under jit tracing: plans cache concrete
+        arrays."""
+        layers = self.spec.layers
+        plans: Dict[str, LayerPlan] = {}
+        for i, layer in enumerate(layers):
+            if layer.kind != "deconv":
+                continue
+            p = params[layer.name]
+            w = p["w"]
+            if isinstance(w, jax.core.Tracer):
+                raise ValueError(
+                    "SDEngine.bind called under jit tracing; bind the "
+                    "engine to concrete params before jitting apply")
+            s = int(layer.s)
+            ws = ops.ws_to_ocmajor(split_filters(w, s), s)
+            scale = p.get("scale")
+            if scale is not None:
+                ws = fold_scale_ocmajor(ws, scale, s)
+            bias = p["b"].astype(jnp.float32)
+            pads = (same_deconv_pads(layer.k, s)
+                    if layer.padding == "same" else layer.pad)
+            act = "linear" if i == len(layers) - 1 else "relu"
+            geom = ConvGeom.from_deconv(self.plan_batch, *layer.in_hw,
+                                        layer.cin, layer.cout, layer.k, s)
+            plans[layer.name] = LayerPlan(
+                name=layer.name, kernel=(layer.k, layer.k), stride=s,
+                padding=pads, ws_ocmajor=ws, bias=bias, act=act,
+                tile=get_plan(geom))
+        self._plans = plans
+        self._bound = params
+        self._bound_leaves = self._plan_leaves(params)
+        return self
+
+    def bound_to(self, params: Params) -> bool:
+        if self._bound is None or self._bound_leaves is None:
+            return False
+        leaves = self._plan_leaves(params)
+        return (leaves is not None
+                and len(leaves) == len(self._bound_leaves)
+                and all(a is b for a, b in
+                        zip(leaves, self._bound_leaves)))
+
+    # ---- hot path --------------------------------------------------------
+    def run(self, name: str, x: jax.Array) -> jax.Array:
+        """Deconv + folded BN + activation for layer ``name``, entirely
+        through the fused Pallas kernel.  Touches nothing offline."""
+        plan = self._plans[name]
+        return ops.sd_deconv_presplit_fused(
+            x, plan.ws_ocmajor, plan.kernel, plan.stride, plan.padding,
+            bias=plan.bias, act=plan.act, plan=plan.tile)
+
+    # ---- introspection ---------------------------------------------------
+    def plans(self) -> Dict[str, LayerPlan]:
+        return dict(self._plans)
+
+    def describe(self) -> str:
+        lines = [f"SDEngine[{self.spec.name}] "
+                 f"({len(self._plans)} deconv layers)"]
+        for plan in self._plans.values():
+            kt = -(-plan.kernel[0] // plan.stride)
+            lines.append(
+                f"  {plan.name}: K={plan.kernel[0]} s={plan.stride} "
+                f"KT={kt} act={plan.act} tile=(th={plan.tile.th}, "
+                f"tcin={plan.tile.tcin}, tcout={plan.tile.tcout})")
+        return "\n".join(lines)

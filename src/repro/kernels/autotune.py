@@ -1,0 +1,279 @@
+"""Tile-plan autotuner for the SD Pallas kernels.
+
+The kernels in :mod:`repro.kernels.sd_conv` are parameterised by a tile
+plan ``(th, tcin, tcout)`` — output-row band height, input-channel tile
+and output-channel tile.  The right plan depends on the layer geometry
+(spatial size vs channel depth decides whether rows or channels should
+carry the MXU occupancy), so a fixed plan leaves performance on the
+table exactly as the paper's related work (HUGE^2, the FPGA design-
+methodology line) observes for deconv dataflows.
+
+This module provides:
+
+* :class:`ConvGeom` — the key: the *executed* stride-1 conv geometry
+  ``(b, h, w, cin, cout, kt, s)`` where ``h/w`` are the already-padded
+  input sizes, ``cout`` counts deconv output channels (oc units) and
+  ``s`` is the in-kernel interleave factor (1 for the plain conv kernel).
+* :func:`heuristic_plan` — a cheap default used when no measured plan
+  exists (replaces the old hard-coded ``_pick_th``).
+* :func:`candidate_plans` — the search space for a geometry.
+* :func:`tune` — measure every candidate with a caller-supplied runner
+  and persist the winner to a JSON cache.
+* :func:`get_plan` — cache lookup with heuristic fallback; this is what
+  ``kernels/ops.py`` consults on every call (trace-safe: pure Python on
+  static shapes, no timing).
+
+Cache format (JSON, see DESIGN.md)::
+
+    {"version": 1,
+     "plans": {"b1_h12w12_ci256_co128_kt3_s2":
+                   {"th": 8, "tcin": 128, "tcout": 64, "ms": 0.41,
+                    "source": "measured", "backend": "tpu"}}}
+
+Entries are gated on the backend they were measured on: interpret-mode
+CPU winners never leak into a TPU run (and vice versa).
+
+The cache path defaults to ``~/.cache/repro/sd_plans.json`` and can be
+overridden with the ``REPRO_SD_PLAN_CACHE`` environment variable or per
+call.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import asdict, dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+_ENV_CACHE = "REPRO_SD_PLAN_CACHE"
+_DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                              "sd_plans.json")
+
+# In-memory mirror of the JSON file so jit tracing never re-reads disk.
+_MEM: Dict[str, Dict[str, dict]] = {}
+
+
+@dataclass(frozen=True)
+class KernelPlan:
+    """Tile sizes for one kernel launch. ``tcout`` is in oc units (the
+    fused kernel's accumulator holds ``tcout * s^2`` phase channels)."""
+    th: int
+    tcin: int
+    tcout: int
+
+
+@dataclass(frozen=True)
+class ConvGeom:
+    """Geometry of the executed stride-1 split conv (see module doc)."""
+    b: int
+    h: int          # padded input rows (Hp)
+    w: int          # padded input cols (Wp)
+    cin: int
+    cout: int       # oc units (deconv C_out; == conv C_out when s == 1)
+    kt: int
+    s: int          # interleave factor (1: plain conv kernel)
+
+    def key(self) -> str:
+        return (f"b{self.b}_h{self.h}w{self.w}_ci{self.cin}"
+                f"_co{self.cout}_kt{self.kt}_s{self.s}")
+
+    @property
+    def oh(self) -> int:
+        return self.h - self.kt + 1
+
+    @classmethod
+    def from_deconv(cls, b: int, h: int, w: int, cin: int, cout: int,
+                    k: int, s: int) -> "ConvGeom":
+        """Geometry of the conv that SD runs for a (H,W,Cin,Cout,K,s)
+        deconv layer: input padded by P_I = K_T - 1 per side."""
+        kt = -(-k // s)
+        pi = kt - 1
+        return cls(b, h + 2 * pi, w + 2 * pi, cin, cout, kt, s)
+
+
+def _divisor_tiles(c: int, prefer: tuple = (128, 64, 32, 16, 8)) -> List[int]:
+    """Channel tile candidates: the full depth plus MXU-friendly divisors."""
+    tiles = [c]
+    for t in prefer:
+        if t < c and c % t == 0:
+            tiles.append(t)
+    return tiles
+
+
+def _row_tile_options(oh: int) -> List[int]:
+    """Row-band candidates: powers of two plus every divisor of OH up to
+    64 (divisors waste no padded rows; 17 and 34 matter for OH=34)."""
+    opts = {t for t in (1, 2, 4, 8, 16, 32) if t <= max(oh, 2)}
+    opts |= {d for d in range(2, min(oh, 64) + 1) if oh % d == 0}
+    return sorted(opts)
+
+
+def _row_cost(oh: int, t: int) -> int:
+    steps = -(-oh // t)
+    return steps * t + 4 * steps            # padded rows + step overhead
+
+
+def heuristic_plan(geom: ConvGeom) -> KernelPlan:
+    """Untuned default.  Row band: minimise padded rows + a per-grid-step
+    overhead proxy over :func:`_row_tile_options` (a pure power-of-two
+    rule pads OH=34 by 41%; a divisor-only rule collapses to th=1 on
+    prime OH — both pathological).  Channels: full depth unless the
+    filter block would blow VMEM."""
+    oh = geom.oh
+    th = min(_row_tile_options(oh), key=lambda t: (_row_cost(oh, t), -t))
+    tcin, tcout = geom.cin, geom.cout
+    # Keep the per-step filter block under ~2 MiB f32 so weights + halo +
+    # accumulator fit VMEM comfortably: tile the deeper channel axis.
+    while (geom.kt ** 2 * tcin * tcout * geom.s ** 2) * 4 > 2 << 20:
+        if tcin >= tcout * geom.s ** 2 and tcin % 2 == 0:
+            tcin //= 2
+        elif tcout % 2 == 0:
+            tcout //= 2
+        else:
+            break
+    return KernelPlan(th=th, tcin=tcin, tcout=tcout)
+
+
+def candidate_plans(geom: ConvGeom, max_candidates: int = 8
+                    ) -> List[KernelPlan]:
+    """Deduplicated (th, tcin, tcout) search space for one geometry."""
+    oh = geom.oh
+    base = heuristic_plan(geom)
+    ths = set(_row_tile_options(oh)) - {1}
+    ths.add(base.th)
+    cands: List[KernelPlan] = [base]
+    seen = {base}
+    for th in sorted(ths, reverse=True):
+        for tcin in _divisor_tiles(geom.cin):
+            for tcout in _divisor_tiles(geom.cout):
+                p = KernelPlan(th=th, tcin=tcin, tcout=tcout)
+                if p not in seen:
+                    seen.add(p)
+                    cands.append(p)
+    # Rank: heuristic first, then prefer fewer grid steps (cheap proxy),
+    # and cap the list so tuning stays fast.
+    def steps(p: KernelPlan) -> int:
+        rows = -(-oh // p.th)
+        return rows * (geom.cin // p.tcin) * (geom.cout // p.tcout)
+
+    cands.sort(key=lambda p: (p != base, steps(p)))
+    return cands[:max_candidates]
+
+
+# ---------------------------------------------------------------------------
+# Cache persistence
+# ---------------------------------------------------------------------------
+
+def cache_path(path: Optional[str] = None) -> str:
+    return path or os.environ.get(_ENV_CACHE, _DEFAULT_CACHE)
+
+
+def load_cache(path: Optional[str] = None) -> Dict[str, dict]:
+    p = cache_path(path)
+    if p not in _MEM:
+        try:
+            with open(p) as f:
+                data = json.load(f)
+            _MEM[p] = dict(data.get("plans", {}))
+        except (OSError, ValueError):
+            _MEM[p] = {}
+    return _MEM[p]
+
+
+def save_cache(plans: Dict[str, dict], path: Optional[str] = None) -> str:
+    p = cache_path(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    tmp = p + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "plans": plans}, f, indent=1, sort_keys=True)
+    os.replace(tmp, p)
+    _MEM[p] = dict(plans)
+    return p
+
+
+def _plan_from_entry(entry: dict) -> KernelPlan:
+    return KernelPlan(th=int(entry["th"]), tcin=int(entry["tcin"]),
+                      tcout=int(entry["tcout"]))
+
+
+def get_plan(geom: ConvGeom, path: Optional[str] = None) -> KernelPlan:
+    """Measured plan if the cache has one for this geometry *measured on
+    the current backend*, else the heuristic.  Pure Python on static
+    shapes — safe to call while jit tracing (ops.py does).
+
+    The backend gate matters: interpret-mode CPU tuning favours plans
+    that minimise interpreter overhead, which must never leak into a
+    real-TPU run (and vice versa)."""
+    entry = load_cache(path).get(geom.key())
+    if entry is not None and entry.get("backend") == jax.default_backend():
+        plan = _plan_from_entry(entry)
+        if geom.cin % plan.tcin == 0 and geom.cout % plan.tcout == 0:
+            return plan
+    return heuristic_plan(geom)
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def measure(fn: Callable[[], object], iters: int = 3,
+            warmup: int = 1) -> float:
+    """Min wall-clock milliseconds of ``fn()`` (which must block).
+
+    Min, not mean/median: external load only ever adds time, so the
+    fastest observation is the best estimator of the true kernel cost
+    (classic microbenchmark practice; medians still wander badly on a
+    shared machine).
+    """
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return min(times)
+
+
+def tune(geom: ConvGeom,
+         runner: Callable[[KernelPlan], float],
+         candidates: Optional[List[KernelPlan]] = None,
+         path: Optional[str] = None,
+         force: bool = False) -> KernelPlan:
+    """Benchmark ``runner(plan) -> ms`` over the candidate set, persist
+    and return the winner.  A cached measured plan short-circuits unless
+    ``force``.  Candidates that raise are skipped (e.g. a tile shape the
+    backend rejects)."""
+    plans = dict(load_cache(path))
+    key = geom.key()
+    if not force:
+        entry = plans.get(key)
+        if (entry is not None and entry.get("source") == "measured"
+                and entry.get("backend") == jax.default_backend()):
+            return _plan_from_entry(entry)
+
+    valid = [p for p in (candidates or candidate_plans(geom))
+             if geom.cin % p.tcin == 0 and geom.cout % p.tcout == 0]
+    # Two passes, second in reverse order: slow machine-state drift
+    # (frequency scaling, allocator warmup) then biases the two ends of
+    # the candidate list in opposite directions instead of crowning
+    # whichever candidate ran at the quiet moment.
+    best: Dict[KernelPlan, float] = {}
+    for plans_pass in (valid, valid[::-1]):
+        for plan in plans_pass:
+            try:
+                ms = runner(plan)
+            except Exception:
+                continue
+            best[plan] = min(ms, best.get(plan, float("inf")))
+    if not best:                # every candidate failed: keep heuristic
+        return heuristic_plan(geom)
+    best_plan, best_ms = min(best.items(), key=lambda kv: kv[1])
+
+    plans[key] = {**asdict(best_plan), "ms": round(best_ms, 4),
+                  "source": "measured", "backend": jax.default_backend()}
+    save_cache(plans, path)
+    return best_plan

@@ -23,6 +23,7 @@ import math
 import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _fa_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -106,12 +107,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                (b_, h_, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
         scratch_shapes=[
-            pl.MemoryRef(jax.core.ShapedArray((bq,), jnp.float32),
-                         pl.ANY),                   # running max
-            pl.MemoryRef(jax.core.ShapedArray((bq,), jnp.float32),
-                         pl.ANY),                   # running sum
-            pl.MemoryRef(jax.core.ShapedArray((bq, d), jnp.float32),
-                         pl.ANY),                   # accumulator
+            pltpu.VMEM((bq,), jnp.float32),         # running max
+            pltpu.VMEM((bq,), jnp.float32),         # running sum
+            pltpu.VMEM((bq, d), jnp.float32),       # accumulator
         ],
         interpret=interpret,
     )(q, k, v)

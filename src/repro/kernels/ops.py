@@ -1,7 +1,10 @@
 """jit'd public wrappers around the Pallas kernels.
 
 These handle tile-alignment padding/cropping so callers see clean shapes,
-and select interpret mode automatically off-TPU.
+select interpret mode automatically off-TPU, and consult the autotuner
+(:mod:`repro.kernels.autotune`) for tile plans when the caller does not
+pin one — the hardcoded row-tile heuristic of the seed lives on only as
+the autotuner's fallback.
 """
 
 from __future__ import annotations
@@ -11,38 +14,56 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.deconv import (_pads, deconv_output_shape, sd_geometry,
-                               split_filters)
+from repro.core.deconv import (_check_padding, _pads, deconv_output_shape,
+                               sd_geometry, split_filters)
+from . import autotune
 from . import sd_conv as _k
+from .autotune import ConvGeom, KernelPlan
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pick_th(oh: int) -> int:
-    for th in (8, 4, 2, 1):
-        if oh % th == 0:
-            return th
-    return 1
+def _resolve_plan(geom: ConvGeom, th, tcin, tcout) -> KernelPlan:
+    """Fill unpinned tile params from the autotuner's plan cache.
+
+    Fully pinned calls (the engine's hot path) skip the lookup entirely.
+    """
+    if th and tcin and tcout:
+        return KernelPlan(th=th, tcin=tcin, tcout=tcout)
+    plan = autotune.get_plan(geom)
+    return KernelPlan(th=th or plan.th, tcin=tcin or plan.tcin,
+                      tcout=tcout or plan.tcout)
 
 
-@functools.partial(jax.jit, static_argnames=("th",))
-def sd_conv2d_valid(x: jax.Array, w: jax.Array, th: int | None = None
+@functools.partial(jax.jit, static_argnames=("th", "tcin", "tcout"))
+def _sd_conv2d_valid_jit(x: jax.Array, w: jax.Array, th: int, tcin: int,
+                         tcout: int) -> jax.Array:
+    oh = x.shape[1] - w.shape[0] + 1
+    pad_rows = (-oh) % th
+    if pad_rows:
+        x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
+    y = _k.sd_conv_pallas(x, w, th=th, tcin=tcin, tcout=tcout,
+                          interpret=not _on_tpu())
+    return y[:, :oh] if pad_rows else y
+
+
+def sd_conv2d_valid(x: jax.Array, w: jax.Array, th: int | None = None,
+                    tcin: int | None = None, tcout: int | None = None
                     ) -> jax.Array:
     """Stride-1 VALID conv (B,H,W,Cin)x(KT,KT,Cin,Co) via the Pallas kernel.
 
     Pads rows so the row-tile grid covers the output exactly, then crops.
+    The plan lookup happens OUTSIDE jit so the jit cache is keyed on the
+    resolved tiles — plans tuned later in the process take effect on the
+    next call instead of being baked in at first trace.
     """
     b, h, wd, cin = x.shape
-    kt = w.shape[0]
-    oh, ow = h - kt + 1, wd - kt + 1
-    th = th or _pick_th(oh)
-    pad_rows = (-oh) % th
-    if pad_rows:
-        x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
-    y = _k.sd_conv_pallas(x, w, th=th, interpret=not _on_tpu())
-    return y[:, :oh] if pad_rows else y
+    kt, _, _, cout = w.shape
+    plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kt, 1),
+                         th, tcin, tcout)
+    return _sd_conv2d_valid_jit(x, w, plan.th, plan.tcin, plan.tcout)
 
 
 def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
@@ -53,37 +74,80 @@ def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
     return w.transpose(0, 1, 2, 4, 3).reshape(kt1, kt2, cin, cout * s * s)
 
 
-@functools.partial(jax.jit, static_argnames=("s", "th"))
-def sd_deconv_fused(x: jax.Array, ws_ocmajor: jax.Array, s: int,
-                    th: int | None = None) -> jax.Array:
-    """Fused split-conv + interleave. x is the P_I-padded input."""
-    b, h, wd, cin = x.shape
-    kt = ws_ocmajor.shape[0]
-    oh = h - kt + 1
-    th = th or _pick_th(oh)
+@functools.partial(jax.jit,
+                   static_argnames=("s", "act", "th", "tcin", "tcout"))
+def _sd_deconv_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s: int,
+                         bias: jax.Array | None, act: str, th: int,
+                         tcin: int, tcout: int) -> jax.Array:
+    oh = x.shape[1] - ws_ocmajor.shape[0] + 1
     pad_rows = (-oh) % th
     if pad_rows:
         x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
-    y = _k.sd_fused_pallas(x, ws_ocmajor, s, th=th,
+    y = _k.sd_fused_pallas(x, ws_ocmajor, s, bias=bias, act=act,
+                           th=th, tcin=tcin, tcout=tcout,
                            interpret=not _on_tpu())
     return y[:, :oh * s] if pad_rows else y
 
 
-def sd_deconv_kernel(x: jax.Array, w: jax.Array, stride: int,
-                     padding=0) -> jax.Array:
-    """Full SD transposed conv through the fused Pallas kernel.
+def sd_deconv_fused(x: jax.Array, ws_ocmajor: jax.Array, s: int,
+                    bias: jax.Array | None = None, act: str = "linear",
+                    th: int | None = None, tcin: int | None = None,
+                    tcout: int | None = None) -> jax.Array:
+    """Fused split-conv + interleave (+ bias/activation epilogue).
 
-    Drop-in replacement for core.sd_deconv (same semantics), with the
-    paper's stride-s write performed inside the kernel.
+    x is the P_I-padded input; returns the uncropped interleaved output.
+    Plan lookup is outside jit (see sd_conv2d_valid).
+    """
+    b, h, wd, cin = x.shape
+    kt = ws_ocmajor.shape[0]
+    cout = ws_ocmajor.shape[-1] // (s * s)
+    plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kt, s),
+                         th, tcin, tcout)
+    return _sd_deconv_fused_jit(x, ws_ocmajor, s, bias, act,
+                                plan.th, plan.tcin, plan.tcout)
+
+
+def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
+                             kernel, stride: int, padding=0, *,
+                             bias: jax.Array | None = None,
+                             act: str = "linear",
+                             plan: KernelPlan | None = None) -> jax.Array:
+    """Transposed conv from *pre-split* oc-major filters via the fused
+    Pallas kernel: P_I input pad -> fused conv/interleave/epilogue ->
+    P_K + user-padding crop.
+
+    This is the engine's hot path (`repro.engine`): ``ws_ocmajor`` (with
+    folded BN scale), ``bias`` and ``plan`` come from the per-layer plan
+    cache, so nothing here touches ``split_filters``.
     """
     s = int(stride)
-    kh, kw = w.shape[:2]
+    kh, kw = kernel
+    _check_padding((kh, kw), padding)
     (pt, pb), (pl_, pr) = _pads(padding)
     (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry((kh, kw), (s, s))
     oh, ow = deconv_output_shape(x.shape[1:3], (kh, kw), s, padding)
-    ws = ws_to_ocmajor(split_filters(w, s), s)
     xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
-    full = sd_deconv_fused(xp, ws, s)
+    kw_args = dict(bias=bias, act=act)
+    if plan is not None:
+        kw_args.update(th=plan.th, tcin=plan.tcin, tcout=plan.tcout)
+    full = sd_deconv_fused(xp, ws_ocmajor, s, **kw_args)
     return jax.lax.slice(full, (0, pkh + pt, pkw + pl_, 0),
                          (full.shape[0], pkh + pt + oh, pkw + pl_ + ow,
                           full.shape[3]))
+
+
+def sd_deconv_kernel(x: jax.Array, w: jax.Array, stride: int,
+                     padding=0, *, bias: jax.Array | None = None,
+                     act: str = "linear",
+                     plan: KernelPlan | None = None) -> jax.Array:
+    """Full SD transposed conv through the fused Pallas kernel.
+
+    Drop-in replacement for core.sd_deconv (same semantics), with the
+    paper's stride-s write performed inside the kernel.  Splits filters
+    inline — deployments should pre-split once and call
+    :func:`sd_deconv_presplit_fused` (see ``repro.engine``).
+    """
+    s = int(stride)
+    ws = ws_to_ocmajor(split_filters(w, s), s)
+    return sd_deconv_presplit_fused(x, ws, w.shape[:2], s, padding,
+                                    bias=bias, act=act, plan=plan)

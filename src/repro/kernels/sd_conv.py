@@ -7,16 +7,23 @@ Two kernels:
 * ``sd_fused_kernel``  — the same convolution, but each block *also*
   performs the paper's stride-``s`` output write: the s^2 phase outputs
   are interleaved into the deconv output tile inside VMEM, so the
-  pixel-shuffle never materialises in HBM.
+  pixel-shuffle never materialises in HBM.  A bias + activation epilogue
+  runs on the interleaved tile while it is still in VMEM.
 
 TPU mapping (see DESIGN.md):
   - grid = (batch, output-row-tiles, output-channel-tiles, input-channel-tiles)
+    with the input-channel (reduction) axis innermost and marked
+    ``arbitrary`` in ``dimension_semantics``; the three outer axes are
+    ``parallel``.
   - each step loads an input row-band with a (K_T - 1)-row halo
-    (``pl.Element`` indexing) and a (K_T, K_T, TCin, TCout) filter block,
-    and issues K_T^2 MXU matmuls of shape (TH*OW_pad, TCin) x (TCin, TCout)
-    accumulated in f32.
-  - block sizes default to MXU-friendly multiples (rows*width >= 128,
-    channels padded to 128 in the wrapper — see ops.py).
+    (``pl.unblocked`` element indexing) and a (K_T, K_T, TCin, TCout)
+    filter block,
+    and issues K_T^2 MXU matmuls of shape (TH*OW_pad, TCin) x (TCin, TCout).
+  - partial sums live in an f32 VMEM scratch accumulator that persists
+    across the Cin-tile grid steps; the output block is written exactly
+    once, by the epilogue at the last Cin tile (no HBM read-modify-write).
+  - inputs may be bf16; the MXU accumulates in f32 and the epilogue casts
+    back to the output dtype.
 
 Validated in interpret mode against ``ref.py`` (tests/test_kernels.py).
 """
@@ -29,14 +36,34 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
 
 
-def _sd_conv_body(x_ref, w_ref, o_ref, *, kt: int, th: int, ow: int,
-                  n_cin_tiles: int):
-    """One (batch, row-tile, cout-tile, cin-tile) grid step."""
-    ci = pl.program_id(3)
-    x = x_ref[0]                      # (TH+KT-1, OW+KT-1, TCin)
-    w = w_ref[...]                    # (KT, KT, TCin, TCout)
+def _compiler_params(n_parallel: int, n_arbitrary: int):
+    return _CompilerParams(dimension_semantics=(
+        ("parallel",) * n_parallel + ("arbitrary",) * n_arbitrary))
+
+
+def _apply_act(y: jax.Array, act: str) -> jax.Array:
+    if act == "linear":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    raise ValueError(f"unknown act {act!r}")
+
+
+def _conv_partial(x, w, *, kt: int, th: int, ow: int) -> jax.Array:
+    """K_T^2 MXU matmuls over one (row-band, cin-tile, cout-tile) block.
+
+    x: (TH+KT-1, OW+KT-1, TCin); w: (KT, KT, TCin, TC).
+    Returns the f32 partial sum of shape (TH*OW, TC).
+    """
     tcin = x.shape[-1]
     acc = jnp.zeros((th * ow, w.shape[-1]), jnp.float32)
     for kh in range(kt):
@@ -45,15 +72,23 @@ def _sd_conv_body(x_ref, w_ref, o_ref, *, kt: int, th: int, ow: int,
             acc += jnp.dot(patch.astype(jnp.float32),
                            w[kh, kw].astype(jnp.float32),
                            preferred_element_type=jnp.float32)
-    y = acc.reshape(th, ow, -1)
+    return acc
+
+
+def _sd_conv_body(x_ref, w_ref, o_ref, acc_ref, *, kt: int, th: int,
+                  ow: int):
+    """One (batch, row-tile, cout-tile, cin-tile) grid step."""
+    ci = pl.program_id(3)
 
     @pl.when(ci == 0)
     def _init():
-        o_ref[0] = y.astype(o_ref.dtype)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(ci != 0)
-    def _accum():
-        o_ref[0] = (o_ref[0].astype(jnp.float32) + y).astype(o_ref.dtype)
+    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kt=kt, th=th, ow=ow)
+
+    @pl.when(ci == pl.num_programs(3) - 1)
+    def _write():
+        o_ref[0] = acc_ref[...].reshape(th, ow, -1).astype(o_ref.dtype)
 
 
 def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
@@ -71,57 +106,70 @@ def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
     tcout = tcout or cout
     tcin = tcin or cin
     assert cout % tcout == 0 and cin % tcin == 0
-    n_cin = cin // tcin
 
-    grid = (b, oh // th, cout // tcout, n_cin)
-    body = functools.partial(_sd_conv_body, kt=kt, th=th, ow=ow,
-                             n_cin_tiles=n_cin)
+    grid = (b, oh // th, cout // tcout, cin // tcin)
+    body = functools.partial(_sd_conv_body, kt=kt, th=th, ow=ow)
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, pl.Element(th + kt - 1, (0, 0)), wp, tcin),
-                         lambda bi, i, j, ci: (bi, i * th, 0, ci)),
+            # Unblocked: the index map returns *element* offsets, which is
+            # what lets consecutive row bands overlap by the (KT-1) halo.
+            pl.BlockSpec((1, th + kt - 1, wp, tcin),
+                         lambda bi, i, j, ci: (bi, i * th, 0, ci * tcin),
+                         indexing_mode=pl.unblocked),
             pl.BlockSpec((kt, kt, tcin, tcout),
                          lambda bi, i, j, ci: (0, 0, ci, j)),
         ],
         out_specs=pl.BlockSpec((1, th, ow, tcout),
                                lambda bi, i, j, ci: (bi, i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((th * ow, tcout), jnp.float32)],
+        compiler_params=_compiler_params(3, 1),
         interpret=interpret,
     )(x, w)
 
 
-def _sd_fused_body(x_ref, w_ref, o_ref, *, kt: int, th: int, ow: int,
-                   s: int):
+def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kt: int, th: int,
+                   ow: int, s: int, act: str):
     """Conv + in-VMEM stride-s interleave (the paper's strided write).
 
-    w_ref holds oc-major split filters: channel c = oc*s^2 + (py*s + px).
-    The output block is the interleaved deconv tile (s*TH, s*OW, TCout).
+    w_ref holds oc-major split filters: channel c = oc*s^2 + (py*s + px),
+    sliced to one TCout tile (TCout*s^2 phase channels).  The epilogue at
+    the last cin tile interleaves the s^2 phases, adds the per-oc bias and
+    applies the activation before the single output write — the deconv
+    tile leaves VMEM finished.
     """
-    x = x_ref[0]                      # (TH+KT-1, OW+KT-1, Cin)
-    w = w_ref[...]                    # (KT, KT, Cin, TCout*s*s)
-    cin = x.shape[-1]
-    cphase = w.shape[-1]              # TCout * s^2
-    acc = jnp.zeros((th * ow, cphase), jnp.float32)
-    for kh in range(kt):
-        for kw in range(kt):
-            patch = x[kh:kh + th, kw:kw + ow, :].reshape(th * ow, cin)
-            acc += jnp.dot(patch.astype(jnp.float32),
-                           w[kh, kw].astype(jnp.float32),
-                           preferred_element_type=jnp.float32)
-    tc = cphase // (s * s)
-    y = acc.reshape(th, ow, tc, s, s)          # c -> (oc, py, px)
-    y = y.transpose(0, 3, 1, 4, 2)             # (th, py, ow, px, oc)
-    o_ref[0] = y.reshape(th * s, ow * s, tc).astype(o_ref.dtype)
+    ci = pl.program_id(3)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kt=kt, th=th, ow=ow)
+
+    @pl.when(ci == pl.num_programs(3) - 1)
+    def _epilogue():
+        cphase = acc_ref.shape[-1]                 # TCout * s^2
+        tc = cphase // (s * s)
+        y = acc_ref[...].reshape(th, ow, tc, s, s)  # c -> (oc, py, px)
+        y = y.transpose(0, 3, 1, 4, 2)              # (th, py, ow, px, oc)
+        y = y.reshape(th * s, ow * s, tc)
+        y = y + b_ref[0].astype(jnp.float32)        # per-oc bias
+        o_ref[0] = _apply_act(y, act).astype(o_ref.dtype)
 
 
 def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s: int, *,
-                    th: int = 8, interpret: bool = True) -> jax.Array:
+                    bias: jax.Array | None = None, act: str = "linear",
+                    th: int = 8, tcout: int | None = None,
+                    tcin: int | None = None,
+                    interpret: bool = True) -> jax.Array:
     """Fused SD: split-filter conv + interleaved (pixel-shuffled) write.
 
     x:  (B, Hp, Wp, Cin) with Hp = n*th + KT - 1
     ws_ocmajor: (KT, KT, Cin, Cout*s*s), channel c = oc*s^2 + phase
+    bias: (Cout,) added per output channel in the epilogue (folded-BN
+          beta); ``act`` in {"linear", "relu", "tanh"} applied after.
     returns (B, s*(Hp-KT+1), s*(Wp-KT+1), Cout) — uncropped deconv output.
     """
     b, hp, wp, cin = x.shape
@@ -129,20 +177,32 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s: int, *,
     cout = ws_ocmajor.shape[-1] // (s * s)
     oh, ow = hp - kt + 1, wp - kt + 1
     assert oh % th == 0, (oh, th)
+    tcout = tcout or cout
+    tcin = tcin or cin
+    assert cout % tcout == 0 and cin % tcin == 0
+    if bias is None:
+        bias = jnp.zeros((cout,), jnp.float32)
+    bias2d = bias.astype(jnp.float32).reshape(1, cout)
 
-    grid = (b, oh // th)
-    body = functools.partial(_sd_fused_body, kt=kt, th=th, ow=ow, s=s)
+    grid = (b, oh // th, cout // tcout, cin // tcin)
+    body = functools.partial(_sd_fused_body, kt=kt, th=th, ow=ow, s=s,
+                             act=act)
+    ss = s * s
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, pl.Element(th + kt - 1, (0, 0)), wp, cin),
-                         lambda bi, i: (bi, i * th, 0, 0)),
-            pl.BlockSpec((kt, kt, cin, cout * s * s),
-                         lambda bi, i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, th + kt - 1, wp, tcin),
+                         lambda bi, i, j, ci: (bi, i * th, 0, ci * tcin),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((kt, kt, tcin, tcout * ss),
+                         lambda bi, i, j, ci: (0, 0, ci, j)),
+            pl.BlockSpec((1, tcout), lambda bi, i, j, ci: (0, j)),
         ],
-        out_specs=pl.BlockSpec((1, th * s, ow * s, cout),
-                               lambda bi, i: (bi, i, 0, 0)),
+        out_specs=pl.BlockSpec((1, th * s, ow * s, tcout),
+                               lambda bi, i, j, ci: (bi, i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((b, oh * s, ow * s, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((th * ow, tcout * ss), jnp.float32)],
+        compiler_params=_compiler_params(3, 1),
         interpret=interpret,
-    )(x, ws_ocmajor)
+    )(x, ws_ocmajor, bias2d)

@@ -31,7 +31,7 @@ from repro.distributed.sharding import (MeshContext, batch_shardings,
                                         cache_shardings, mesh_context,
                                         param_shardings)
 from repro.launch.hlo_analysis import (DCI_BW, ICI_BW, collective_stats,
-                                       roofline_terms)
+                                       cost_dict, roofline_terms)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (abstract_cache, abstract_opt_state,
                                 abstract_params, effective_seq, input_specs,
@@ -101,7 +101,7 @@ def _compile_cell(cfg, cell, mesh, mc=None):
 
 
 def _cost_and_coll(compiled):
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled.cost_analysis())
     coll = collective_stats(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)

@@ -115,6 +115,14 @@ class Roofline:
         return dataclasses.asdict(self)
 
 
+def cost_dict(cost) -> Dict[str, float]:
+    """Normalise ``compiled.cost_analysis()`` across jax versions:
+    jax<=0.4.x returns ``[dict]``, newer jax returns ``dict``."""
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return cost
+
+
 def roofline_terms(cost: Dict[str, float], coll: CollectiveStats,
                    *, link_bw: float = ICI_BW,
                    model_flops_per_device: float = 0.0) -> Roofline:

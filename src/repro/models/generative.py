@@ -7,8 +7,12 @@ drift apart).  The deconvolution implementation is switchable:
     model = GenerativeModel(dcgan(), deconv_impl="sd")
 
 ``deconv_impl`` in {"native", "nzp", "sd", "sd_kernel", "shi", "chang"}.
-``sd_kernel`` routes the split convolution through the Pallas TPU kernel
-(interpret-mode on CPU).
+``sd_kernel`` runs deconvs through the presplit-once SD inference engine
+(:mod:`repro.engine`): filters are split into the oc-major kernel layout
+and BN-folded exactly once when params are bound (at ``init``, or lazily
+on the first ``apply`` with foreign params), and every forward call runs
+the *fused* Pallas kernel — split-conv, stride-s interleave, bias and
+activation in one VMEM pass (interpret-mode on CPU).
 
 Inference-time batch norm is folded into per-channel scale/bias (gamma,
 beta) as any deployment on the paper's target processors would do.
@@ -25,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (conv2d, native_deconv, nzp_deconv, sd_deconv,
-                        sd_deconv_presplit, same_deconv_pads, split_filters)
+                        same_deconv_pads)
 from repro.core.accounting import BENCHMARKS, LayerSpec, NetworkSpec
 from repro.core.wrong_baselines import chang_deconv, shi_deconv
 
@@ -43,15 +47,6 @@ def _deconv_dispatch(impl: str) -> Callable:
         return shi_deconv
     if impl == "chang":
         return chang_deconv
-    if impl == "sd_kernel":
-        from repro.kernels.ops import sd_conv2d_valid
-
-        def _sd_pallas(x, w, stride, padding):
-            ws = split_filters(w, stride)
-            return sd_deconv_presplit(
-                x, ws, w.shape[:2], stride, padding,
-                conv_fn=lambda xp, wsp: sd_conv2d_valid(xp, wsp))
-        return _sd_pallas
     raise ValueError(f"unknown deconv_impl {impl!r}")
 
 
@@ -62,7 +57,13 @@ class GenerativeModel:
                  final_tanh: bool = True):
         self.spec = spec
         self.deconv_impl = deconv_impl
-        self._deconv = _deconv_dispatch(deconv_impl)
+        if deconv_impl == "sd_kernel":
+            from repro.engine import SDEngine
+            self._engine: Optional["SDEngine"] = SDEngine(spec)
+            self._deconv = None
+        else:
+            self._engine = None
+            self._deconv = _deconv_dispatch(deconv_impl)
         self.final_tanh = final_tanh
 
     # ---- params ----------------------------------------------------------
@@ -85,10 +86,16 @@ class GenerativeModel:
                     "b": jnp.zeros((layer.cout,), dtype),
                     "scale": jnp.ones((layer.cout,), dtype),  # folded BN
                 }
+        if self._engine is not None:
+            # Offline phase: split + BN-fold every deconv filter exactly
+            # once, here at init.  apply() never touches split_filters.
+            self._engine.bind(params)
         return params
 
     # ---- forward ---------------------------------------------------------
     def apply(self, params: Params, x: jax.Array) -> jax.Array:
+        if self._engine is not None and not self._engine.bound_to(params):
+            self._engine.bind(params)   # foreign params: one-time rebind
         layers = self.spec.layers
         h = x
         for i, layer in enumerate(layers):
@@ -106,6 +113,11 @@ class GenerativeModel:
                 pads = "SAME" if layer.padding == "same" else layer.pad
                 h = conv2d(h, p["w"], layer.s, pads)
                 h = h * p["scale"] + p["b"]
+            elif self._engine is not None:   # deconv, fused engine path
+                # scale is folded into the cached split filters; bias and
+                # the inter-layer ReLU run in the kernel's VMEM epilogue.
+                h = self._engine.run(layer.name, h)
+                continue
             else:  # deconv
                 pads = (same_deconv_pads(layer.k, layer.s)
                         if layer.padding == "same" else layer.pad)

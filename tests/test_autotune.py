@@ -1,0 +1,104 @@
+"""Autotuner (repro.kernels.autotune): plans, candidates, cache."""
+
+import json
+
+import pytest
+
+from repro.kernels.autotune import (ConvGeom, KernelPlan, candidate_plans,
+                                    get_plan, heuristic_plan, load_cache,
+                                    measure, save_cache, tune)
+
+GEOMS = [
+    ConvGeom(1, 12, 12, 256, 128, 3, 2),    # DCGAN d1 (padded)
+    ConvGeom(1, 130, 258, 32, 16, 2, 2),    # MDE up1: prime-ish OH
+    ConvGeom(2, 10, 9, 8, 16, 3, 1),        # plain conv kernel
+    ConvGeom(1, 6, 10, 512, 512, 2, 2),     # deep channels, tiny spatial
+]
+
+
+@pytest.mark.parametrize("geom", GEOMS, ids=lambda g: g.key())
+def test_heuristic_plan_valid(geom):
+    p = heuristic_plan(geom)
+    assert p.th >= 1
+    assert geom.cin % p.tcin == 0
+    assert geom.cout % p.tcout == 0
+    # the accumulator + filter block must stay VMEM-sized
+    assert geom.kt ** 2 * p.tcin * p.tcout * geom.s ** 2 * 4 <= 2 << 20
+
+
+def test_heuristic_no_th1_collapse():
+    """Prime OH must not collapse the row band to 1 (the old _pick_th
+    pathology)."""
+    geom = ConvGeom(1, 130, 258, 32, 16, 2, 2)     # OH = 129
+    assert heuristic_plan(geom).th >= 4
+
+
+@pytest.mark.parametrize("geom", GEOMS, ids=lambda g: g.key())
+def test_candidate_plans_valid(geom):
+    cands = candidate_plans(geom)
+    assert 1 <= len(cands) <= 8
+    assert heuristic_plan(geom) == cands[0]       # heuristic always tried
+    for p in cands:
+        assert geom.cin % p.tcin == 0
+        assert geom.cout % p.tcout == 0
+
+
+def test_from_deconv_geometry():
+    g = ConvGeom.from_deconv(1, 8, 8, 256, 128, 5, 2)   # DCGAN d1
+    assert (g.h, g.w, g.kt) == (12, 12, 3)              # P_I = KT-1 = 2
+    assert g.oh == 10
+
+
+def test_tune_persists_and_short_circuits(tmp_path):
+    cache = str(tmp_path / "plans.json")
+    geom = ConvGeom(1, 12, 12, 16, 8, 3, 2)
+    target = KernelPlan(th=2, tcin=8, tcout=4)
+
+    def runner(plan):
+        return 0.1 if plan == target else 5.0
+
+    won = tune(geom, runner, candidates=[KernelPlan(10, 16, 8), target],
+               path=cache)
+    assert won == target
+    data = json.loads((tmp_path / "plans.json").read_text())
+    entry = data["plans"][geom.key()]
+    assert entry["source"] == "measured" and entry["th"] == 2
+
+    def exploding(plan):
+        raise AssertionError("tune() must not re-measure a cached plan")
+
+    assert tune(geom, exploding, path=cache) == target
+    assert get_plan(geom, path=cache) == target
+
+
+def test_tune_skips_failing_candidates(tmp_path):
+    cache = str(tmp_path / "plans.json")
+    geom = ConvGeom(1, 12, 12, 16, 8, 3, 2)
+    good = KernelPlan(th=4, tcin=16, tcout=8)
+
+    def runner(plan):
+        if plan != good:
+            raise RuntimeError("backend rejected tile")
+        return 1.0
+
+    assert tune(geom, runner, candidates=[KernelPlan(8, 16, 8), good],
+                path=cache) == good
+
+
+def test_get_plan_falls_back_on_invalid_cache_entry(tmp_path):
+    cache = str(tmp_path / "plans.json")
+    geom = ConvGeom(1, 12, 12, 16, 8, 3, 2)
+    # tcin=5 does not divide cin=16: entry must be ignored
+    save_cache({geom.key(): {"th": 2, "tcin": 5, "tcout": 8,
+                             "ms": 1.0, "source": "measured"}}, path=cache)
+    assert get_plan(geom, path=cache) == heuristic_plan(geom)
+
+
+def test_load_cache_tolerates_garbage(tmp_path):
+    cache = tmp_path / "plans.json"
+    cache.write_text("{not json")
+    assert load_cache(str(cache)) == {}
+
+
+def test_measure_returns_positive_ms():
+    assert measure(lambda: sum(range(1000)), iters=3, warmup=1) >= 0.0

@@ -1,0 +1,197 @@
+"""Presplit-once SD inference engine (repro.engine) tests.
+
+The paper's deployment contract: the deconv->split-conv filter transform
+is OFFLINE.  These tests pin that down — ``split_filters`` runs exactly
+once per deconv layer when params are bound, and never on the forward
+path — and check numerical parity of the fused engine path against the
+native deconv reference on all six paper benchmarks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.engine.planner as planner_mod
+import repro.kernels.ops as ops_mod
+from repro.core import native_deconv
+from repro.engine import SDEngine, fold_scale_ocmajor
+from repro.kernels.ops import ws_to_ocmajor
+from repro.models.generative import build
+
+ALL_NETS = ["dcgan", "sngan", "artgan", "gpgan", "mde", "fst"]
+
+
+def _input(model, batch=1, seed=1, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             model.input_shape(batch)) * scale
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar: fused engine == native on every paper benchmark.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_NETS)
+def test_sd_kernel_engine_matches_native(name):
+    ref_model = build(name, "native")
+    params = ref_model.init(jax.random.PRNGKey(0))
+    scale = 0.1 if name in ("gpgan", "mde", "fst") else 1.0
+    x = _input(ref_model, batch=1, scale=scale)
+    ref = ref_model.apply(params, x)
+    assert not bool(jnp.isnan(ref).any())
+    out = build(name, "sd_kernel").apply(params, x)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Split-once semantics.
+# ---------------------------------------------------------------------------
+
+def test_split_filters_called_once_at_init(monkeypatch):
+    calls = []
+    orig = planner_mod.split_filters
+
+    def counting(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(planner_mod, "split_filters", counting)
+    model = build("dcgan", "sd_kernel")
+    params = model.init(jax.random.PRNGKey(0))
+    n_deconv = len(model.spec.deconv_layers())
+    assert len(calls) == n_deconv == 3    # split once per layer, at init
+
+    z = _input(model, batch=2)
+    model.apply(params, z)
+    model.apply(params, z)
+    assert len(calls) == n_deconv         # apply() never splits
+
+
+def test_apply_never_splits_after_bind(monkeypatch):
+    model = build("dcgan", "sd_kernel")
+    params = model.init(jax.random.PRNGKey(0))
+
+    def boom(*args, **kwargs):
+        raise AssertionError("split_filters reached the hot path")
+
+    # Poison every module the forward pass could reach it through.
+    monkeypatch.setattr(planner_mod, "split_filters", boom)
+    monkeypatch.setattr(ops_mod, "split_filters", boom)
+
+    out = model.apply(params, _input(model, batch=2))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_foreign_params_bind_lazily_then_cache(monkeypatch):
+    """apply() with params not from init binds once, then reuses plans."""
+    ref_model = build("dcgan", "native")
+    params = ref_model.init(jax.random.PRNGKey(0))
+    model = build("dcgan", "sd_kernel")
+
+    calls = []
+    orig = planner_mod.split_filters
+
+    def counting(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(planner_mod, "split_filters", counting)
+    z = _input(model, batch=1)
+    a = model.apply(params, z)
+    n = len(calls)
+    assert n == len(model.spec.deconv_layers())
+    b = model.apply(params, z)
+    assert len(calls) == n                 # identity-cached
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rebind_on_inplace_param_mutation():
+    """Replacing a weight inside the *same* dict must invalidate the
+    cached plans (leaf-identity fingerprint, not just dict identity)."""
+    model = build("dcgan", "sd_kernel")
+    ref_model = build("dcgan", "native")
+    params = model.init(jax.random.PRNGKey(0))
+    z = _input(model, batch=1)
+    model.apply(params, z)
+    params["d1"]["w"] = params["d1"]["w"] * 2.0     # in-place dict update
+    np.testing.assert_allclose(np.asarray(ref_model.apply(params, z)),
+                               np.asarray(model.apply(params, z)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rebind_on_new_params():
+    model = build("dcgan", "sd_kernel")
+    ref_model = build("dcgan", "native")
+    p1 = ref_model.init(jax.random.PRNGKey(0))
+    p2 = ref_model.init(jax.random.PRNGKey(42))
+    z = _input(model, batch=1)
+    for p in (p1, p2):
+        np.testing.assert_allclose(np.asarray(ref_model.apply(p, z)),
+                                   np.asarray(model.apply(p, z)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_bind_rejects_tracers():
+    model = build("dcgan", "sd_kernel")
+    params = model.init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def f(p, z):
+        return build("dcgan", "sd_kernel").apply(p, z)
+
+    with pytest.raises(ValueError, match="jit"):
+        f(params, _input(model, batch=1))
+
+
+# ---------------------------------------------------------------------------
+# BN folding.
+# ---------------------------------------------------------------------------
+
+def test_bn_scale_bias_folded_correctly():
+    """Non-trivial folded-BN scale/bias: engine == reference model path."""
+    ref_model = build("sngan", "native")
+    params = ref_model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    for layer in ref_model.spec.layers:
+        if layer.kind == "deconv":
+            p = params[layer.name]
+            p["scale"] = jnp.asarray(
+                0.5 + rng.rand(layer.cout).astype(np.float32))
+            p["b"] = jnp.asarray(rng.randn(layer.cout).astype(np.float32))
+    z = _input(ref_model, batch=2)
+    ref = ref_model.apply(params, z)
+    out = build("sngan", "sd_kernel").apply(params, z)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fold_scale_ocmajor_unit():
+    """Folding per-oc scale into oc-major filters == scaling the deconv."""
+    from repro.core import split_filters
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(4, 4, 3, 5), jnp.float32)
+    scale = jnp.asarray(rng.rand(5), jnp.float32)
+    x = jnp.asarray(rng.randn(1, 6, 6, 3), jnp.float32)
+    s = 2
+    ws = ws_to_ocmajor(split_filters(w, s), s)
+    ws_f = fold_scale_ocmajor(ws, scale, s)
+    from repro.kernels.ops import sd_deconv_presplit_fused
+    a = sd_deconv_presplit_fused(x, ws_f, (4, 4), s, 1)
+    b = native_deconv(x, w, s, 1) * scale
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_engine_describe_and_plans():
+    model = build("dcgan", "sd_kernel")
+    model.init(jax.random.PRNGKey(0))
+    eng = model._engine
+    assert isinstance(eng, SDEngine)
+    plans = eng.plans()
+    assert set(plans) == {l.name for l in model.spec.deconv_layers()}
+    for plan in plans.values():
+        assert plan.tile.th >= 1
+        assert plan.ws_ocmajor.ndim == 4
+    text = eng.describe()
+    assert "DCGAN" in text and "d1" in text

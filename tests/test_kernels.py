@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import native_deconv, same_deconv_pads, split_filters
 from repro.core.deconv import depth_to_space
@@ -54,9 +54,42 @@ def test_sd_conv_channel_tiling():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_fused_channel_tiling():
+    """Fused kernel: Cin accumulation via VMEM scratch + Cout grid tiling
+    agree with the untiled launch."""
+    x = _rand((2, 7, 6, 12), seed=11)
+    w = _rand((5, 5, 12, 8), seed=12)
+    s = 2
+    ref = native_deconv(x, w, s, 1)
+    for th, tcin, tcout in [(2, 4, 2), (4, 12, 4), (2, 6, 8)]:
+        from repro.kernels.autotune import KernelPlan
+        out = sd_deconv_kernel(x, w, s, 1,
+                               plan=KernelPlan(th=th, tcin=tcin, tcout=tcout))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fused_epilogue_bias_and_act():
+    """In-VMEM bias + activation epilogue == composition outside."""
+    x = _rand((1, 6, 6, 4), seed=21)
+    w = _rand((4, 4, 4, 6), seed=22)
+    bias = jnp.asarray(np.random.RandomState(23).randn(6), jnp.float32)
+    s = 2
+    base = native_deconv(x, w, s, 1) + bias
+    for act, fn in [("linear", lambda y: y),
+                    ("relu", lambda y: jnp.maximum(y, 0)),
+                    ("tanh", jnp.tanh)]:
+        out = sd_deconv_kernel(x, w, s, 1, bias=bias, act=act)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(fn(base)),
+                                   rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("K,s,pad", [
     (5, 2, "same"), (4, 2, 1), (3, 2, "same"), (5, 3, 2), (2, 2, 0),
     (7, 4, 3), (5, 1, 2),
+    # s=3 / s=4 beyond the original set, incl. K not divisible by s
+    (3, 3, 1), (6, 3, "same"), (4, 3, 0), (5, 3, "same"),
+    (4, 4, 2), (5, 4, "same"), (8, 4, 3),
 ])
 def test_fused_deconv_kernel(K, s, pad):
     pads = same_deconv_pads(K, s) if pad == "same" else pad
@@ -67,6 +100,46 @@ def test_fused_deconv_kernel(K, s, pad):
     assert out.shape == ref.shape
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("K,s,pads", [
+    (4, 2, ((1, 0), (0, 2))),
+    (5, 2, ((0, 3), (2, 1))),
+    (5, 3, ((2, 0), (1, 3))),
+    (3, 2, ((1, 2), (0, 0))),
+])
+def test_fused_deconv_asymmetric_padding(K, s, pads):
+    """User padding with different top/bottom/left/right crop amounts."""
+    x = _rand((1, 6, 8, 5), seed=K + 10)
+    w = _rand((K, K, 5, 4), seed=s + 10)
+    out = sd_deconv_kernel(x, w, s, pads)
+    ref = native_deconv(x, w, s, pads)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("K,s", [(5, 2), (4, 2), (5, 3), (7, 4)])
+def test_fused_deconv_bf16(K, s):
+    """bf16 inputs, f32 MXU accumulation: compare against the f32
+    reference computed from the same (bf16-rounded) operands."""
+    x32 = _rand((2, 6, 5, 8), seed=K, dtype=jnp.float32)
+    w32 = _rand((K, K, 8, 4), seed=s, dtype=jnp.float32)
+    xb, wb = x32.astype(jnp.bfloat16), w32.astype(jnp.bfloat16)
+    out = sd_deconv_kernel(xb, wb, s, 1)
+    assert out.dtype == jnp.bfloat16
+    ref = native_deconv(xb.astype(jnp.float32), wb.astype(jnp.float32), s, 1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_fused_kernel_padding_validation():
+    """The fused kernel path rejects oversized padding like core impls."""
+    x = _rand((1, 4, 4, 2))
+    w = _rand((3, 3, 2, 2))
+    with pytest.raises(ValueError, match="too large"):
+        sd_deconv_kernel(x, w, 2, 3)
 
 
 def test_fused_matches_unfused_path():

@@ -56,6 +56,10 @@ def test_moe_tp_equals_ep():
 
 def test_aux_loss_balanced_vs_skewed():
     p, x = _setup(E=4, k=1)
+    # Positive activations so a router-column offset shifts every token's
+    # logit the same way (with zero-mean x the 100*sum(x) shift flips
+    # sign per token and the "skew" never takes).
+    x = jnp.abs(x) + 0.1
     l_bal = moe_aux_loss(p, x, 1, 4)
     # skew the router hard toward expert 0
     p2 = dict(p)

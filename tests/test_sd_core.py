@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import assume, given, settings, st
 
 from repro.core import (chang_deconv, deconv_output_shape, depth_to_space,
                         dilate_input, native_deconv, nzp_deconv,
@@ -123,6 +123,32 @@ def test_wrong_baselines_divergence():
                            np.asarray(ref), atol=1e-2)
 
 
+@pytest.mark.parametrize("bad_pad", [
+    3,                      # symmetric, > K-1 = 2
+    (1, 3),                 # per-axis, width too large
+    ((0, 3), (1, 1)),       # asymmetric, one side too large
+])
+def test_padding_too_large_raises_consistently(bad_pad):
+    """native / NZP / SD (and the paper-faithful variant) must reject the
+    same bad paddings with the same error, not silently diverge."""
+    x = _rand((1, 4, 4, 2))
+    w = _rand((3, 3, 2, 2), seed=1)
+    from repro.core.deconv import sd_deconv_paper
+    for impl in (native_deconv, nzp_deconv, sd_deconv, sd_deconv_paper):
+        with pytest.raises(ValueError, match="too large for kernel"):
+            impl(x, w, 2, bad_pad)
+
+
+def test_valid_padding_accepted_by_all():
+    """Boundary case p = K-1 is legal everywhere and still agrees."""
+    x = _rand((1, 5, 5, 2))
+    w = _rand((3, 3, 2, 2), seed=2)
+    ref = native_deconv(x, w, 2, 2)
+    for impl in (nzp_deconv, sd_deconv):
+        np.testing.assert_allclose(np.asarray(impl(x, w, 2, 2)),
+                                   np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
 def test_ssim_identity_and_degradation():
     a = jnp.tanh(_rand((1, 32, 32, 3)))
     assert float(ssim(a, a)) == pytest.approx(1.0, abs=1e-5)
@@ -156,7 +182,6 @@ def test_grad_flows_through_sd():
     pfrac=st.floats(0.0, 1.0), seed=st.integers(0, 2**16),
 )
 def test_property_sd_equals_native(K, s, H, W, cin, cout, pfrac, seed):
-    from hypothesis import assume
     p = int(pfrac * (K - 1))
     oh, ow = deconv_output_shape((H, W), K, s, p)
     assume(oh > 0 and ow > 0)     # degenerate zero-size outputs excluded

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.ssm import (MLSTMState, init_mamba, init_mamba_state,
                               init_mlstm, init_mlstm_state, init_slstm,
