@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import native_deconv, nzp_deconv, sd_deconv, same_deconv_pads
+from repro.core import registry, same_deconv_pads
 from repro.core.accounting import BENCHMARKS
 
 
@@ -63,6 +63,8 @@ def run(report):
     report.header(["net", "nzp_ms", "sd_ms", "speedup",
                    "mac_ratio(pred)"])
     sps = []
+    nzp_deconv = registry.resolve("nzp")
+    sd_deconv = registry.resolve("sd")
     for name, fn in BENCHMARKS.items():
         net = fn()
         t_nzp = t_sd = 0.0

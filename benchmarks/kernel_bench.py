@@ -23,7 +23,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import native_deconv, same_deconv_pads, split_filters
+from repro.core import registry, same_deconv_pads, split_filters
 from repro.core.deconv import sd_deconv_presplit
 from repro.core.accounting import BENCHMARKS
 from repro.kernels import autotune
@@ -53,7 +53,7 @@ def bench_layer(layer, batch=1, iters=5, tune=True, max_candidates=6,
     w = jax.random.normal(kw_, (k, k, cin, cout), jnp.float32) * 0.05
     pads = (same_deconv_pads(k, s) if layer.padding == "same"
             else layer.pad)
-    ref = native_deconv(x, w, s, pads)
+    ref = registry.resolve("native")(x, w, s, pads)
 
     ws_n = split_filters(w, s)                     # offline, both paths
     ws_oc = ws_to_ocmajor(ws_n, s)

@@ -65,11 +65,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (commodity, kernel_bench, procmodel,
-                            roofline_report, sd_roofline, table4_ssim,
-                            tables123)
+                            roofline_report, sd_roofline, serve_bench,
+                            table4_ssim, tables123)
     mods = {"tables123": tables123, "table4_ssim": table4_ssim,
             "procmodel": procmodel, "commodity": commodity,
             "kernel_bench": kernel_bench, "sd_roofline": sd_roofline,
+            "serve_bench": serve_bench,
             "roofline_report": roofline_report}
     wanted = (args.only.split(",") if args.only else list(mods))
     report = Report()

@@ -20,29 +20,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import accounting
-from repro.core.deconv import (native_deconv, nzp_deconv, sd_deconv,
-                               sd_deconv_paper, same_deconv_pads)
+from repro.core import accounting, registry
+from repro.core.deconv import same_deconv_pads
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS, cost_dict
 from repro.models.generative import GenerativeModel
-
-IMPLS = {
-    "nzp": nzp_deconv,
-    "sd_paper": sd_deconv_paper,
-    "sd": sd_deconv,
-    "native": native_deconv,
-}
 
 
 def _deconv_only_fn(net, impl, batch=8):
     """A jit-able fn running every deconv layer of ``net`` with ``impl``."""
     layers = net.deconv_layers()
+    deconv = registry.resolve(impl)
 
     def f(xs, ws):
         outs = []
         for layer, x, w in zip(layers, xs, ws):
             pads = same_deconv_pads(layer.k, layer.s)
-            outs.append(IMPLS[impl](x, w, layer.s, pads))
+            outs.append(deconv(x, w, layer.s, pads))
         return outs
     xs = [jax.ShapeDtypeStruct((batch, *l.in_hw, l.cin), jnp.bfloat16)
           for l in layers]
@@ -73,9 +66,9 @@ def run(report):
     report.header(["net", "impl", "GFLOP", "GB_touched", "compute_ms",
                    "memory_ms", "bound", "useful_frac"])
     for name in ("dcgan", "sngan", "mde", "fst"):
-        base = None
-        for impl in ("nzp", "sd_paper", "sd", "native"):
-            r = analyze(name, impl)
+        rs = {impl: analyze(name, impl)
+              for impl in ("nzp", "sd_paper", "sd", "native")}
+        for impl, r in rs.items():
             bound = ("compute" if r["compute_s"] > r["memory_s"]
                      else "memory")
             report.row([name, impl, f"{r['flops']/1e9:.2f}",
@@ -83,8 +76,7 @@ def run(report):
                         f"{r['compute_s']*1e3:.3f}",
                         f"{r['memory_s']*1e3:.3f}", bound,
                         f"{r['useful_frac']:.3f}"])
-            if impl == "nzp":
-                base = r
+        saved = 1 - rs["sd"]["flops"] / rs["nzp"]["flops"]
         report.note(
-            f"{name}: SD removes {100*(1-analyze(name,'sd')['flops']/base['flops']):.0f}% "
+            f"{name}: SD removes {100*saved:.0f}% "
             "of NZP's compiled FLOPs (paper's core claim, on-HLO)")

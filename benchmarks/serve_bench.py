@@ -1,0 +1,139 @@
+"""Generative serving throughput: SDEngine batched vs per-sample native.
+
+The serving claim behind :mod:`repro.launch.serve_gen`: batching
+requests through the presplit-once SD engine beats serving each request
+with a per-sample native deconv call.  Per paper net and batch size
+(1 / 4 / 16) this sweeps
+
+  engine  — one jitted call over the whole batch through the SDEngine
+            path (``deconv_impl="sd_kernel"``, execution backend chosen
+            per jax backend: fused Pallas kernel on TPU, grouped-XLA
+            elsewhere — exactly what the server runs),
+  native  — the no-batching baseline: a jitted batch-1 native-deconv
+            generator called once per sample (each request's result
+            materialised separately, as a naive service would).
+
+Numerical parity (engine vs native, same params/inputs) is recorded per
+net alongside the timings.  Results go to BENCH_serve.json for the
+cross-PR trajectory.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench            # all nets
+  PYTHONPATH=src python -m benchmarks.serve_bench --nets dcgan,sngan
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.kernels.autotune import measure
+from repro.models.generative import build
+
+ALL_NETS = ("dcgan", "sngan", "artgan", "gpgan", "mde", "fst")
+BATCHES = (1, 4, 16)
+OUT_JSON = "BENCH_serve.json"
+
+
+def _inputs(name, model, batch, seed=1):
+    # gpgan/mde/fst saturate with unit-scale random latents (see tests)
+    scale = 0.1 if name in ("gpgan", "mde", "fst") else 1.0
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             model.input_shape(batch)) * scale
+
+
+def bench_net(name: str, batches=BATCHES, iters=3):
+    native = build(name, "native")
+    params = native.init(jax.random.PRNGKey(0))
+    engine = build(name, "sd_kernel")
+    # one eager apply binds lazily (presplit once) OUTSIDE jit tracing
+    engine.apply(params, _inputs(name, native, 1))
+
+    f_native1 = jax.jit(lambda z: native.apply(params, z))
+    f_engine = jax.jit(lambda z: engine.apply(params, z))
+
+    # parity once per net (batch 4): engine == native on the same params
+    zp = _inputs(name, native, 4)
+    ref = np.asarray(f_native1(zp))
+    out = np.asarray(f_engine(zp))
+    max_err = float(np.max(np.abs(out - ref)))
+    allclose = bool(np.allclose(out, ref, rtol=1e-4, atol=1e-4))
+
+    rows = {}
+    for b in batches:
+        z = _inputs(name, native, b)
+        zs = [z[i:i + 1] for i in range(b)]
+
+        def run_native():
+            for zi in zs:
+                jax.block_until_ready(f_native1(zi))
+
+        def run_engine():
+            jax.block_until_ready(f_engine(z))
+
+        # warm both jit caches (batch-1 native + batch-b engine)
+        t_nat = measure(run_native, iters=iters, warmup=1)
+        t_eng = measure(run_engine, iters=iters, warmup=1)
+        rows[str(b)] = {
+            "engine_ms": round(t_eng, 3),
+            "native_per_sample_ms": round(t_nat, 3),
+            "speedup": round(t_nat / t_eng, 3) if t_eng else None,
+        }
+    return {"parity_allclose": allclose, "max_err": max_err,
+            "engine_backend": engine.engine.backend, "batches": rows}
+
+
+def sweep(nets=ALL_NETS, batches=BATCHES, iters=3, out=OUT_JSON,
+          report=None):
+    results = {"jax_backend": jax.default_backend(), "nets": {}}
+    if report is not None:
+        report.section("Serving throughput — SDEngine batched vs "
+                       "per-sample native deconv")
+        report.header(["net", "batch", "engine_ms", "native_ms",
+                       "speedup", "parity"])
+    for name in nets:
+        r = bench_net(name, batches=batches, iters=iters)
+        results["nets"][name] = r
+        for b, row in r["batches"].items():
+            line = [name, b, row["engine_ms"],
+                    row["native_per_sample_ms"],
+                    f"{row['speedup']}x", r["parity_allclose"]]
+            if report is not None:
+                report.row(line)
+            else:
+                print("  " + " | ".join(str(v) for v in line))
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        msg = f"serving sweep written to {out}"
+        if report is not None:
+            report.note(msg)
+        else:
+            print(msg)
+    return results
+
+
+def run(report):
+    """benchmarks.run hook: a reduced sweep (batch 4, the serving sweet
+    spot) so the full driver stays fast; the standalone main does the
+    complete 1/4/16 sweep."""
+    sweep(nets=("dcgan", "sngan"), batches=(4,), iters=2, out=None,
+          report=report)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nets", default=",".join(ALL_NETS))
+    ap.add_argument("--batches", default="1,4,16")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args(argv)
+    sweep(nets=args.nets.split(","),
+          batches=tuple(int(b) for b in args.batches.split(",")),
+          iters=args.iters, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,23 @@
 """Serve a small LM with batched requests (continuous-batching-lite).
 
-  PYTHONPATH=src python examples/serve_lm.py
+Pure forwarder: :mod:`repro.launch.serve` is THE LM serving entrypoint
+(and :mod:`repro.launch.serve_gen` the generative one) — this example
+only supplies small-demo defaults, so the two can never drift.
+
+  PYTHONPATH=src python examples/serve_lm.py            # demo defaults
+  PYTHONPATH=src python examples/serve_lm.py --requests 4   # override one knob
 """
+
+import sys
 
 from repro.launch.serve import main
 
+DEMO_ARGS = ["--arch", "xlstm-350m", "--reduced", "--requests", "8",
+             "--max-new", "12", "--slots", "4"]
+
 if __name__ == "__main__":
-    main(["--arch", "xlstm-350m", "--reduced", "--requests", "8",
-          "--max-new", "12", "--slots", "4"])
+    # CLI args append after the defaults, so argparse's last-wins rule
+    # lets callers override any value knob (--arch, --requests, ...).
+    # --reduced is a store_true default and cannot be unset here: for a
+    # full-size run use `python -m repro.launch.serve` directly.
+    main(DEMO_ARGS + sys.argv[1:])

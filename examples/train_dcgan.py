@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
+from repro.core import registry
 from repro.core.accounting import NetworkSpec, LayerSpec
 from repro.data import GANLatentPipeline
 from repro.models.generative import (DCGANDiscriminator, GenerativeModel,
@@ -36,9 +37,12 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--small", action="store_true")
     ap.add_argument("--deconv", default="sd",
-                    # sd_kernel is the inference engine (filters cached
-                    # at bind): not trainable, so not offered here
-                    choices=["sd", "native", "nzp"])
+                    # gradients must flow through the deconv: only impls
+                    # the registry marks trainable AND exact are offered
+                    # (sd_kernel/fused cache concrete arrays at bind;
+                    # shi/chang are the wrong-baseline reproductions)
+                    choices=sorted(set(registry.trainable_names())
+                                   & set(registry.exact_names())))
     ap.add_argument("--out", default="runs/dcgan")
     args = ap.parse_args(argv)
 

@@ -1,11 +1,18 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + a fast interpret-mode kernel-parity smoke.
+# CI entry point: tier-1 tests + registry consistency + serving smoke +
+# a fast interpret-mode kernel-parity smoke.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 test suite =="
 python -m pytest -x -q
+
+echo "== executor-registry capabilities consistency =="
+python -c "from repro.core import registry; registry.selfcheck(verbose=True)"
+
+echo "== generative serving smoke (serve_gen --dryrun) =="
+python -m repro.launch.serve_gen --dryrun
 
 echo "== kernel parity smoke (interpret mode) =="
 python - <<'PY'

@@ -1,5 +1,6 @@
 """Core: the paper's Split Deconvolution contribution + accounting."""
 
+from . import registry
 from .deconv import (conv2d, deconv_output_shape, depth_to_space,
                      dilate_input, native_deconv, nzp_deconv, sd_deconv,
                      sd_deconv_presplit, sd_geometry, same_deconv_pads,
@@ -9,6 +10,7 @@ from .ssim import ssim
 from .wrong_baselines import chang_deconv, shi_deconv
 
 __all__ = [
+    "registry",
     "conv2d", "deconv_output_shape", "depth_to_space", "dilate_input",
     "native_deconv", "nzp_deconv", "sd_deconv", "sd_deconv_presplit",
     "sd_geometry", "same_deconv_pads", "space_to_depth", "split_filters",

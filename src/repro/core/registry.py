@@ -1,0 +1,253 @@
+"""Unified deconv executor registry — the ONE place impls are selected.
+
+Every transposed-convolution implementation in the repo registers here
+exactly once, with capability metadata, and every entrypoint (the
+generative models, the kernel wrappers, the training example, the
+benchmarks, the serving stack) resolves implementations through
+:func:`get_impl` / :func:`resolve`.  No ``if impl == "sd"`` conditional
+exists outside this module: adding a backend or an implementation is one
+:func:`register` call here, and it immediately shows up in every
+entrypoint's ``choices``, every error message, and the CI consistency
+check (:func:`selfcheck`).
+
+Capability schema (see DESIGN.md "Executor registry")
+-----------------------------------------------------
+``trainable``       gradients flow through the op and it is safe to call
+                    with traced params under ``jax.jit`` /
+                    ``jax.grad``.  Engine-backed impls cache concrete
+                    arrays at bind time and are inference-only.
+``engine``          the impl runs through :class:`repro.engine.SDEngine`
+                    (presplit-once per-layer plans) rather than a plain
+                    ``fn(x, w, stride, padding)`` call.
+``needs_presplit``  the deployment contract requires the offline
+                    filter-split transform (engine impls; also ``fused``
+                    which splits inline only as a convenience).
+``exact``           numerically equal to ``native`` in f32 (the wrong
+                    baselines ``shi``/``chang`` reproduce papers [30]
+                    [31] and are deliberately NOT exact).
+``dtypes``          dtypes the impl supports end to end.
+``backends``        jax backends the impl's *fast path* targets;
+                    ``"any"`` means pure-XLA.  The fused Pallas kernel
+                    targets TPU and falls back to interpret mode
+                    elsewhere (slow but correct) — the engine therefore
+                    exposes an XLA execution backend for off-TPU
+                    serving (see ``repro.engine``).
+
+All non-engine impls share one call signature::
+
+    fn(x, w, stride, padding=0) -> y        # NHWC / HWIO
+
+Implementations are loaded lazily (``loader``) so importing the
+registry never drags in Pallas/kernel modules, and so the registry can
+live in ``core`` without an import cycle with ``kernels``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class ImplInfo:
+    """One registered deconv implementation + its capabilities."""
+    name: str
+    description: str
+    loader: Callable[[], Callable]
+    trainable: bool = True
+    engine: bool = False
+    needs_presplit: bool = False
+    exact: bool = True
+    dtypes: Tuple[str, ...] = ("float32", "bfloat16")
+    backends: Tuple[str, ...] = ("any",)
+
+    @property
+    def fn(self) -> Callable:
+        """The executable ``fn(x, w, stride, padding)`` (lazy-loaded)."""
+        return self.loader()
+
+    def capabilities(self) -> Dict[str, object]:
+        """Metadata dict (JSON-friendly; used by errors, docs and CI)."""
+        return {
+            "trainable": self.trainable,
+            "engine": self.engine,
+            "needs_presplit": self.needs_presplit,
+            "exact": self.exact,
+            "dtypes": list(self.dtypes),
+            "backends": list(self.backends),
+        }
+
+
+_REGISTRY: Dict[str, ImplInfo] = {}
+
+
+def register(name: str, description: str, loader: Callable[[], Callable],
+             **caps) -> ImplInfo:
+    """Register (or re-register, e.g. in tests) an implementation."""
+    info = ImplInfo(name=name, description=description, loader=loader,
+                    **caps)
+    _REGISTRY[name] = info
+    return info
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def _describe_all() -> str:
+    lines = []
+    for n in names():
+        i = _REGISTRY[n]
+        tags = [t for t, on in (
+            ("trainable", i.trainable), ("engine", i.engine),
+            ("presplit", i.needs_presplit), ("exact", i.exact)) if on]
+        lines.append(f"  {n:<10} [{', '.join(tags)}] {i.description}")
+    return "\n".join(lines)
+
+
+def get_impl(name: str) -> ImplInfo:
+    """Lookup with a self-documenting error on unknown names."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown deconv_impl {name!r}; registered implementations:\n"
+            f"{_describe_all()}") from None
+
+
+def resolve(name: str) -> Callable:
+    """The executable for ``name`` (engine impls resolve to their
+    inline-split convenience wrapper; serving should use SDEngine)."""
+    return get_impl(name).fn
+
+
+def trainable_names() -> List[str]:
+    return [n for n in names() if _REGISTRY[n].trainable]
+
+
+def exact_names() -> List[str]:
+    return [n for n in names() if _REGISTRY[n].exact]
+
+
+def capabilities() -> Dict[str, Dict[str, object]]:
+    """{name: capability-dict} for every registered impl."""
+    return {n: _REGISTRY[n].capabilities() for n in names()}
+
+
+# ---------------------------------------------------------------------------
+# Registrations.  Loaders import lazily: core impls are cheap, kernel-
+# backed impls pull in Pallas only when actually resolved.
+# ---------------------------------------------------------------------------
+
+def _load_native():
+    from repro.core.deconv import native_deconv
+    return native_deconv
+
+
+def _load_nzp():
+    from repro.core.deconv import nzp_deconv
+    return nzp_deconv
+
+
+def _load_sd():
+    from repro.core.deconv import sd_deconv
+    return sd_deconv
+
+
+def _load_sd_paper():
+    from repro.core.deconv import sd_deconv_paper
+    return sd_deconv_paper
+
+
+def _load_fused():
+    from repro.kernels.ops import sd_deconv_kernel
+    return sd_deconv_kernel
+
+
+def _load_shi():
+    from repro.core.wrong_baselines import shi_deconv
+    return shi_deconv
+
+
+def _load_chang():
+    from repro.core.wrong_baselines import chang_deconv
+    return chang_deconv
+
+
+register("native", "lax.conv_general_dilated with lhs_dilation "
+         "(framework-native deconv reference)", _load_native)
+
+register("nzp", "Naive Zero Padding baseline: materialised dilation + "
+         "stride-1 conv (~s^2 wasted MACs, paper Table 2)", _load_nzp)
+
+register("sd", "Split Deconvolution, grouped formulation: ONE stride-1 "
+         "conv over all s^2 sub-filters + pixel-shuffle (XLA)", _load_sd,
+         needs_presplit=False)
+
+register("sd_paper", "Paper-faithful SD (Algorithm 2): s^2 sequential "
+         "small convs + stride-s interleave write", _load_sd_paper)
+
+register("sd_kernel", "SD inference engine: presplit-once, BN-folded "
+         "filters through the fused Pallas kernel (TPU) or the grouped "
+         "XLA path (off-TPU)", _load_fused,
+         trainable=False, engine=True, needs_presplit=True,
+         backends=("tpu", "any"))
+
+register("fused", "fused Pallas SD kernel with inline filter split "
+         "(kernel benchmarking; deployments use sd_kernel + SDEngine)",
+         _load_fused, trainable=False, needs_presplit=True,
+         backends=("tpu",))
+
+register("shi", "wrong baseline [30]: bottom/right zero expansion "
+         "(quality degrades, paper Table 4)", _load_shi, exact=False)
+
+register("chang", "wrong baseline [31]: no per-phase filter rotation "
+         "(quality degrades, paper Table 4)", _load_chang, exact=False)
+
+
+# ---------------------------------------------------------------------------
+# CI consistency check
+# ---------------------------------------------------------------------------
+
+def selfcheck(verbose: bool = False) -> None:
+    """Registry-capabilities consistency check (run by scripts/ci.sh).
+
+    * every loader resolves to a callable,
+    * engine impls are inference-only and presplit,
+    * every ``exact`` impl matches ``native`` on a small deconv,
+    * every ``trainable`` impl differentiates cleanly.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(1, 5, 6, 3), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 4, 3, 2), jnp.float32)
+    ref = get_impl("native").fn(x, w, 2, 1)
+
+    for name in names():
+        info = get_impl(name)
+        fn = info.fn
+        assert callable(fn), f"{name}: loader did not return a callable"
+        if info.engine:
+            assert not info.trainable, f"{name}: engine impls cache " \
+                "concrete arrays at bind and cannot be trainable"
+            assert info.needs_presplit, f"{name}: engine impls presplit"
+        out = fn(x, w, 2, 1)
+        assert out.shape == ref.shape, (name, out.shape, ref.shape)
+        if info.exact:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{name} vs native")
+        if info.trainable:
+            g = jax.grad(lambda wt: jnp.sum(fn(x, wt, 2, 1) ** 2))(w)
+            assert np.isfinite(np.asarray(g)).all(), f"{name}: bad grad"
+        if verbose:
+            print(f"  {name:<10} OK  {info.capabilities()}")
+    if verbose:
+        print(f"registry selfcheck: {len(names())} impls consistent")
+
+
+if __name__ == "__main__":
+    selfcheck(verbose=True)

@@ -3,6 +3,8 @@
 See :mod:`repro.engine.planner` and DESIGN.md.
 """
 
-from .planner import LayerPlan, SDEngine, fold_scale_ocmajor
+from .planner import (BACKENDS, LayerPlan, SDEngine, fold_scale_ocmajor,
+                      resolve_backend)
 
-__all__ = ["LayerPlan", "SDEngine", "fold_scale_ocmajor"]
+__all__ = ["BACKENDS", "LayerPlan", "SDEngine", "fold_scale_ocmajor",
+           "resolve_backend"]

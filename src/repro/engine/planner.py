@@ -37,11 +37,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.accounting import NetworkSpec
-from repro.core.deconv import same_deconv_pads, split_filters
+from repro.core.deconv import (same_deconv_pads, sd_deconv_presplit,
+                               split_filters)
 from repro.kernels import ops
 from repro.kernels.autotune import ConvGeom, KernelPlan, get_plan
 
 Params = Dict[str, Any]
+
+BACKENDS = ("fused", "xla")
+
+
+def resolve_backend(backend: str) -> str:
+    """'fused' = the Pallas kernel (interpret mode off-TPU); 'xla' = the
+    grouped stride-1 conv + pixel-shuffle from the same presplit plans
+    (the fast off-TPU serving path); 'auto' picks per jax backend."""
+    if backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "xla"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown engine backend {backend!r}; "
+                         f"choose from {('auto',) + BACKENDS}")
+    return backend
 
 
 @dataclass(frozen=True)
@@ -51,7 +66,8 @@ class LayerPlan:
     kernel: Tuple[int, int]
     stride: int
     padding: Any                    # int | (ph, pw) | ((pt,pb),(pl,pr))
-    ws_ocmajor: jax.Array           # scale-folded split filters (oc-major)
+    ws_ocmajor: Optional[jax.Array]  # scale-folded filters, oc-major
+    ws_nmajor: Optional[jax.Array]   # same filters, n-major (XLA backend)
     bias: jax.Array                 # (Cout,) f32, added in the epilogue
     act: str                        # "relu" | "linear" (epilogue-fused)
     tile: KernelPlan                # autotuned (th, tcin, tcout)
@@ -68,11 +84,21 @@ def fold_scale_ocmajor(ws_ocmajor: jax.Array, scale: jax.Array,
 
 
 class SDEngine:
-    """Per-network cache of presplit, BN-folded, tile-planned deconvs."""
+    """Per-network cache of presplit, BN-folded, tile-planned deconvs.
 
-    def __init__(self, spec: NetworkSpec, plan_batch: int = 1):
+    ``backend`` selects how the cached plans execute: ``"fused"`` runs
+    the Pallas kernel (the TPU deployment path; interpret mode off-TPU),
+    ``"xla"`` runs the grouped stride-1 conv + pixel-shuffle from the
+    same presplit filters (the fast off-TPU serving path), ``"auto"``
+    picks fused on TPU and xla elsewhere.  The offline phase is
+    identical for both — one split + BN fold per layer at bind.
+    """
+
+    def __init__(self, spec: NetworkSpec, plan_batch: int = 1,
+                 backend: str = "fused"):
         self.spec = spec
         self.plan_batch = plan_batch     # batch used for plan-cache keys
+        self.backend = resolve_backend(backend)
         self._plans: Dict[str, LayerPlan] = {}
         self._bound: Optional[Params] = None
         self._bound_leaves: Optional[tuple] = None
@@ -104,6 +130,12 @@ class SDEngine:
         set — at model init, or lazily on the first apply with foreign
         params).  Must not run under jit tracing: plans cache concrete
         arrays."""
+        if not jax.core.trace_state_clean():
+            # Even concrete params would be staged into tracers here
+            # (omnistaging), leaking into the cached plans.
+            raise ValueError(
+                "SDEngine.bind called under jit tracing; bind the "
+                "engine to concrete params before jitting apply")
         layers = self.spec.layers
         plans: Dict[str, LayerPlan] = {}
         for i, layer in enumerate(layers):
@@ -111,15 +143,21 @@ class SDEngine:
                 continue
             p = params[layer.name]
             w = p["w"]
-            if isinstance(w, jax.core.Tracer):
-                raise ValueError(
-                    "SDEngine.bind called under jit tracing; bind the "
-                    "engine to concrete params before jitting apply")
             s = int(layer.s)
-            ws = ops.ws_to_ocmajor(split_filters(w, s), s)
+            ws_n = split_filters(w, s)
             scale = p.get("scale")
             if scale is not None:
-                ws = fold_scale_ocmajor(ws, scale, s)
+                # n-major channel c = n*Cout + oc: tile the per-oc scale
+                # across the s^2 sub-filter blocks (fold commutes with
+                # the oc-major relayout below — both are permutations).
+                ws_n = ws_n * jnp.tile(scale.astype(ws_n.dtype), s * s)
+            # cache only the layout this engine's backend consumes: the
+            # backend is fixed at construction, and holding both would
+            # double the filter footprint for the server's lifetime
+            ws_oc = (ops.ws_to_ocmajor(ws_n, s)
+                     if self.backend == "fused" else None)
+            if self.backend == "fused":
+                ws_n = None
             bias = p["b"].astype(jnp.float32)
             pads = (same_deconv_pads(layer.k, s)
                     if layer.padding == "same" else layer.pad)
@@ -128,8 +166,8 @@ class SDEngine:
                                         layer.cin, layer.cout, layer.k, s)
             plans[layer.name] = LayerPlan(
                 name=layer.name, kernel=(layer.k, layer.k), stride=s,
-                padding=pads, ws_ocmajor=ws, bias=bias, act=act,
-                tile=get_plan(geom))
+                padding=pads, ws_ocmajor=ws_oc, ws_nmajor=ws_n,
+                bias=bias, act=act, tile=get_plan(geom))
         self._plans = plans
         self._bound = params
         self._bound_leaves = self._plan_leaves(params)
@@ -146,19 +184,25 @@ class SDEngine:
 
     # ---- hot path --------------------------------------------------------
     def run(self, name: str, x: jax.Array) -> jax.Array:
-        """Deconv + folded BN + activation for layer ``name``, entirely
-        through the fused Pallas kernel.  Touches nothing offline."""
+        """Deconv + folded BN + activation for layer ``name`` from the
+        cached plan.  Touches nothing offline on either backend."""
         plan = self._plans[name]
-        return ops.sd_deconv_presplit_fused(
-            x, plan.ws_ocmajor, plan.kernel, plan.stride, plan.padding,
-            bias=plan.bias, act=plan.act, plan=plan.tile)
+        if self.backend == "fused":
+            return ops.sd_deconv_presplit_fused(
+                x, plan.ws_ocmajor, plan.kernel, plan.stride, plan.padding,
+                bias=plan.bias, act=plan.act, plan=plan.tile)
+        ws = plan.ws_nmajor.astype(x.dtype)
+        y = sd_deconv_presplit(x, ws, plan.kernel, plan.stride,
+                               plan.padding)
+        y = y + plan.bias.astype(y.dtype)
+        return jax.nn.relu(y) if plan.act == "relu" else y
 
     # ---- introspection ---------------------------------------------------
     def plans(self) -> Dict[str, LayerPlan]:
         return dict(self._plans)
 
     def describe(self) -> str:
-        lines = [f"SDEngine[{self.spec.name}] "
+        lines = [f"SDEngine[{self.spec.name}] backend={self.backend} "
                  f"({len(self._plans)} deconv layers)"]
         for plan in self._plans.values():
             kt = -(-plan.kernel[0] // plan.stride)

@@ -1,0 +1,72 @@
+"""Request bucketing shared by the serving stacks.
+
+Two servers use these helpers:
+
+* :mod:`repro.launch.serve` (LM) groups queued prompts into decode
+  slots.  Grouping must be by *equal prompt length* — the seed's
+  ``plen = min(...)`` truncated longer prompts in a mixed group,
+  silently changing what the model was asked to continue.
+* :mod:`repro.launch.serve_gen` (generative) groups requests by
+  (arch, dtype) and pads the group to a batch *bucket* so the jit
+  compile cache sees a small closed set of shapes instead of one entry
+  per request count.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+def pow2_bucket(n: int, max_bucket: int | None = None) -> int:
+    """Smallest power of two >= n, capped at ``max_bucket`` (the cap
+    itself is returned when smaller, even if not a power of two).
+
+    The compile-cache key for a padded batch: every request count maps
+    to one of log2(max) shapes, so a serving process compiles each
+    (arch, bucket, dtype) cell at most once.
+    """
+    if n < 1:
+        raise ValueError(f"bucket size for n={n}")
+    b = 1
+    while b < n:
+        b *= 2
+    if max_bucket is not None:
+        b = min(b, max_bucket)
+    return b
+
+
+def take_group(queue: List[T], key_fn: Callable[[T], object],
+               max_group: int) -> Tuple[List[T], List[T]]:
+    """Pop the next compatible group from a FIFO queue.
+
+    Takes the queue head, then up to ``max_group - 1`` further items
+    with the *same key* (preserving order), leaving everything else
+    queued.  Head-of-line requests are never starved: the group is
+    always built around the oldest waiting item.
+    """
+    if not queue:
+        return [], []
+    key = key_fn(queue[0])
+    group: List[T] = []
+    rest: List[T] = []
+    for item in queue:
+        if len(group) < max_group and key_fn(item) == key:
+            group.append(item)
+        else:
+            rest.append(item)
+    return group, rest
+
+
+def drain_groups(queue: Sequence[T], key_fn: Callable[[T], object],
+                 max_group: int) -> List[List[T]]:
+    """Split a whole queue into compatible FIFO groups (for batch-mode
+    serving and tests; the live loop calls :func:`take_group` per
+    refill boundary)."""
+    q = list(queue)
+    groups: List[List[T]] = []
+    while q:
+        group, q = take_group(q, key_fn, max_group)
+        groups.append(group)
+    return groups

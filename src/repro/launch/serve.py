@@ -1,9 +1,16 @@
-"""Batched serving driver: prefill + greedy decode with a request queue.
+"""Batched LM serving: prefill + greedy decode with a request queue.
+
+This is THE LM serving entrypoint (``examples/serve_lm.py`` is a thin
+forwarder; the generative-network counterpart is
+:mod:`repro.launch.serve_gen`).
 
 Continuous-batching-lite: requests are grouped into fixed decode slots;
 finished sequences free their slot for queued requests at the next
 refill boundary.  The decode step is a single jitted function over the
-whole slot batch (the decode_32k cell's shape).
+whole slot batch (the decode_32k cell's shape).  Slot groups are formed
+by *prompt length* (``launch/batching.take_group``) so prompts of mixed
+length are never truncated to the group minimum — every request is
+prefilled on its full prompt.
 
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --reduced \
       --requests 8 --max-new 16
@@ -19,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get
+from repro.launch.batching import pow2_bucket, take_group
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.lm import build_lm
 
@@ -36,18 +44,21 @@ def serve(cfg, prompts: List[List[int]], max_new: int = 16,
     t0 = time.time()
     n_steps = 0
     while queue:
-        group = queue[:slots]
-        queue = queue[slots:]
-        # left-pad-free: group prompts to common length by truncation
-        plen = min(len(p) for _, p in group)
-        batch = jnp.asarray([p[:plen] for _, p in group], jnp.int32)
+        # group only same-length prompts: no token is ever dropped
+        group, queue = take_group(queue, lambda r: len(r[1]), slots)
+        n = len(group)
+        # pad the BATCH dim (repeat row 0, results discarded) to a pow2
+        # bucket so prefill/decode compile per bucket, not per group size
+        bucket = pow2_bucket(n, slots)
+        rows = [p for _, p in group] + [group[0][1]] * (bucket - n)
+        batch = jnp.asarray(rows, jnp.int32)
         cache = lm.init_cache(batch.shape[0], max_len)
         logits, cache = prefill(params, {"inputs": batch}, cache)
         toks = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs = [[int(toks[i, 0])] for i in range(len(group))]
+        outs = [[int(toks[i, 0])] for i in range(n)]
         for _ in range(max_new - 1):
             toks, logits, cache = decode(params, {"inputs": toks}, cache)
-            for i in range(len(group)):
+            for i in range(n):
                 outs[i].append(int(toks[i, 0]))
             n_steps += 1
         for (rid, _), o in zip(group, outs):

@@ -2,17 +2,20 @@
 
 Every network is built from its ``NetworkSpec`` (the same spec the MAC
 accounting uses, so the benchmarked FLOPs and the executed model can never
-drift apart).  The deconvolution implementation is switchable:
+drift apart).  The deconvolution implementation is switchable and is
+resolved through the executor registry (:mod:`repro.core.registry`):
 
     model = GenerativeModel(dcgan(), deconv_impl="sd")
 
-``deconv_impl`` in {"native", "nzp", "sd", "sd_kernel", "shi", "chang"}.
-``sd_kernel`` runs deconvs through the presplit-once SD inference engine
-(:mod:`repro.engine`): filters are split into the oc-major kernel layout
+``registry.names()`` lists every registered impl; unknown names raise a
+``ValueError`` enumerating them with their capabilities.  Engine impls
+(``sd_kernel``) run deconvs through the presplit-once SD inference
+engine (:mod:`repro.engine`): filters are split into the kernel layout
 and BN-folded exactly once when params are bound (at ``init``, or lazily
 on the first ``apply`` with foreign params), and every forward call runs
-the *fused* Pallas kernel — split-conv, stride-s interleave, bias and
-activation in one VMEM pass (interpret-mode on CPU).
+either the *fused* Pallas kernel — split-conv, stride-s interleave, bias
+and activation in one VMEM pass — or the engine's grouped-XLA execution
+backend, with no splitting on the hot path either way.
 
 Inference-time batch norm is folded into per-channel scale/bias (gamma,
 beta) as any deployment on the paper's target processors would do.
@@ -21,49 +24,34 @@ beta) as any deployment on the paper's target processors would do.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (conv2d, native_deconv, nzp_deconv, sd_deconv,
-                        same_deconv_pads)
-from repro.core.accounting import BENCHMARKS, LayerSpec, NetworkSpec
-from repro.core.wrong_baselines import chang_deconv, shi_deconv
+from repro.core import conv2d, registry, same_deconv_pads
+from repro.core.accounting import BENCHMARKS, NetworkSpec
 
 Params = Dict[str, Any]
-
-
-def _deconv_dispatch(impl: str) -> Callable:
-    if impl == "native":
-        return native_deconv
-    if impl == "nzp":
-        return nzp_deconv
-    if impl == "sd":
-        return sd_deconv
-    if impl == "shi":
-        return shi_deconv
-    if impl == "chang":
-        return chang_deconv
-    raise ValueError(f"unknown deconv_impl {impl!r}")
 
 
 class GenerativeModel:
     """Spec-driven generator/decoder network."""
 
     def __init__(self, spec: NetworkSpec, deconv_impl: str = "sd",
-                 final_tanh: bool = True):
+                 final_tanh: bool = True, engine_backend: str = "auto"):
         self.spec = spec
         self.deconv_impl = deconv_impl
-        if deconv_impl == "sd_kernel":
+        info = registry.get_impl(deconv_impl)
+        if info.engine:
             from repro.engine import SDEngine
-            self._engine: Optional["SDEngine"] = SDEngine(spec)
+            self._engine: Optional["SDEngine"] = SDEngine(
+                spec, backend=engine_backend)
             self._deconv = None
         else:
             self._engine = None
-            self._deconv = _deconv_dispatch(deconv_impl)
+            self._deconv = info.fn
         self.final_tanh = final_tanh
 
     # ---- params ----------------------------------------------------------
@@ -131,6 +119,11 @@ class GenerativeModel:
         return self.apply(params, x)
 
     # ---- convenience -----------------------------------------------------
+    @property
+    def engine(self):
+        """The SDEngine behind an engine impl (None for plain impls)."""
+        return self._engine
+
     def input_shape(self, batch: int):
         first = self.spec.layers[0]
         if first.kind == "fc":
@@ -142,9 +135,12 @@ class GenerativeModel:
                    for leaf in params.values() for a in leaf.values())
 
 
-def build(name: str, deconv_impl: str = "sd") -> GenerativeModel:
-    """Factory: build('dcgan', 'sd')."""
-    return GenerativeModel(BENCHMARKS[name](), deconv_impl=deconv_impl)
+def build(name: str, deconv_impl: str = "sd",
+          engine_backend: str = "auto") -> GenerativeModel:
+    """Factory: build('dcgan', 'sd').  ``engine_backend`` only matters
+    for engine impls (see :class:`repro.engine.SDEngine`)."""
+    return GenerativeModel(BENCHMARKS[name](), deconv_impl=deconv_impl,
+                           engine_backend=engine_backend)
 
 
 # --------------------------------------------------------------------------

@@ -59,3 +59,18 @@ def test_serve_loop_end_to_end():
     assert all(len(v) == 4 for v in results.values())
     assert all(0 <= t < cfg.vocab_padded
                for v in results.values() for t in v)
+
+
+def test_serve_mixed_length_prompts_not_truncated():
+    """Regression: a longer prompt grouped with a shorter one used to be
+    silently truncated to the group minimum (plen = min(...)).  With
+    length-bucketed grouping, a prompt served in a mixed queue must
+    decode exactly as when served alone (greedy decode, fixed seed)."""
+    cfg = get("stablelm-12b").reduced()
+    short = [1, 2, 3]
+    long = [7, 8, 9, 10, 11, 12, 13]
+    alone, _ = serve(cfg, [long], max_new=4, slots=2, max_len=32)
+    mixed, stats = serve(cfg, [short, long], max_new=4, slots=2,
+                         max_len=32)
+    assert set(mixed) == {0, 1}
+    assert mixed[1] == alone[0]     # full prompt survived the grouping

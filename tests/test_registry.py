@@ -1,0 +1,80 @@
+"""Executor-registry tests: capability metadata, error quality, and the
+single-point-of-dispatch contract."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import native_deconv, registry, sd_deconv
+from repro.models.generative import GenerativeModel, build
+
+
+def test_unknown_impl_raises_with_catalog():
+    """Unknown deconv_impl -> ValueError listing every registered impl
+    and its capability tags (not an opaque KeyError)."""
+    with pytest.raises(ValueError) as ei:
+        build("dcgan", "sd_krnel")          # typo'd name
+    msg = str(ei.value)
+    assert "sd_krnel" in msg
+    for name in registry.names():
+        assert name in msg
+    # the capability tags make the error self-documenting
+    assert "trainable" in msg and "engine" in msg
+
+
+def test_unknown_impl_raises_from_resolve():
+    with pytest.raises(ValueError, match="registered implementations"):
+        registry.resolve("nope")
+
+
+def test_resolve_returns_the_real_functions():
+    assert registry.resolve("native") is native_deconv
+    assert registry.resolve("sd") is sd_deconv
+
+
+def test_capability_schema_complete():
+    caps = registry.capabilities()
+    assert set(caps) == set(registry.names())
+    for name, c in caps.items():
+        assert set(c) == {"trainable", "engine", "needs_presplit",
+                         "exact", "dtypes", "backends"}, name
+
+
+def test_engine_impls_are_inference_only():
+    for name in registry.names():
+        info = registry.get_impl(name)
+        if info.engine:
+            assert not info.trainable
+            assert info.needs_presplit
+
+
+def test_trainable_set():
+    trainable = set(registry.trainable_names())
+    assert {"native", "nzp", "sd", "sd_paper"} <= trainable
+    assert "sd_kernel" not in trainable and "fused" not in trainable
+
+
+def test_exact_set_excludes_wrong_baselines():
+    exact = set(registry.exact_names())
+    assert "shi" not in exact and "chang" not in exact
+    assert {"native", "nzp", "sd", "sd_paper", "sd_kernel"} <= exact
+
+
+def test_model_engine_flag_follows_registry():
+    m = GenerativeModel(build("dcgan", "native").spec, "sd_kernel")
+    assert m._engine is not None and m._deconv is None
+    m2 = GenerativeModel(build("dcgan", "native").spec, "sd")
+    assert m2._engine is None and callable(m2._deconv)
+
+
+def test_selfcheck():
+    """The CI consistency check must pass from a clean import."""
+    registry.selfcheck()
+
+
+def test_train_dcgan_choice_filter():
+    """The filter the training example uses (trainable AND exact) must
+    offer the differentiable impls and exclude engine/wrong-baselines."""
+    want = sorted(set(registry.trainable_names())
+                  & set(registry.exact_names()))
+    assert want == ["native", "nzp", "sd", "sd_paper"]

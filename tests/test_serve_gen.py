@@ -1,0 +1,243 @@
+"""Batched generative serving stack (launch/serve_gen) + SDEngine under
+serving conditions: bucketing, compile-cache reuse, dtype rebinds,
+cross-instance plan reuse, and end-to-end parity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accounting import LayerSpec, NetworkSpec
+from repro.engine import SDEngine, resolve_backend
+from repro.kernels.autotune import ConvGeom, KernelPlan
+from repro.launch.batching import drain_groups, pow2_bucket, take_group
+from repro.launch.serve_gen import (GenRequest, GenServer, main,
+                                    reduced_spec)
+from repro.models.generative import GenerativeModel
+
+SPEC = reduced_spec()
+
+
+def _server(**kw):
+    kw.setdefault("nets", ["g"])
+    kw.setdefault("specs", {"g": SPEC})
+    return GenServer(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing helpers (shared by LM + generative serving)
+# ---------------------------------------------------------------------------
+
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 2, 3, 4, 5, 16, 17)] == \
+        [1, 2, 4, 4, 8, 16, 32]
+    assert pow2_bucket(17, max_bucket=16) == 16
+    with pytest.raises(ValueError):
+        pow2_bucket(0)
+
+
+def test_take_group_same_key_fifo():
+    q = [(0, "a"), (1, "b"), (2, "a"), (3, "a"), (4, "b")]
+    group, rest = take_group(q, lambda r: r[1], max_group=2)
+    assert group == [(0, "a"), (2, "a")]        # head's key, FIFO order
+    assert rest == [(1, "b"), (3, "a"), (4, "b")]
+    group2, rest2 = take_group(rest, lambda r: r[1], max_group=2)
+    assert group2 == [(1, "b"), (4, "b")]
+    assert rest2 == [(3, "a")]
+
+
+def test_drain_groups_covers_everything():
+    q = list(range(10))
+    groups = drain_groups(q, lambda r: r % 3, max_group=4)
+    assert sorted(x for g in groups for x in g) == q
+    for g in groups:
+        assert len({x % 3 for x in g}) == 1 and len(g) <= 4
+
+
+# ---------------------------------------------------------------------------
+# The serving stack
+# ---------------------------------------------------------------------------
+
+def test_dryrun_smoke():
+    results, stats = main(["--dryrun"])
+    assert stats["requests"] == 2
+    assert stats["compiles"] == 1
+    assert all(np.isfinite(np.asarray(v)).all() for v in results.values())
+
+
+def test_compile_cache_keyed_on_bucket():
+    """Varying request counts that land in the same bucket must NOT
+    retrace; a new bucket compiles exactly once more."""
+    server = _server(max_batch=8)
+    server.serve(server.random_requests("g", 3))      # bucket 4
+    assert server.compile_count == 1
+    server.serve(server.random_requests("g", 4, seed=2))   # bucket 4 again
+    assert server.compile_count == 1
+    server.serve(server.random_requests("g", 2, seed=3))   # bucket 2: new
+    assert server.compile_count == 2
+    assert {k[1] for k in server._compiled} == {2, 4}
+
+
+def test_padding_cropped_and_outputs_match_unbatched():
+    """Bucket padding must never leak into results: each request's
+    output equals the same latent pushed through the model alone."""
+    server = _server(max_batch=8)
+    reqs = server.random_requests("g", 3)             # padded 3 -> 4
+    results, stats = server.serve(reqs)
+    model, params = server.model("g")
+    for r in reqs:
+        solo = model.apply(params, jnp.asarray(r.latent)[None])[0]
+        np.testing.assert_allclose(np.asarray(results[r.rid]),
+                                   np.asarray(solo), rtol=1e-5, atol=1e-5)
+
+
+def test_server_parity_vs_native_reference():
+    """Engine-served outputs == the native-deconv reference model."""
+    server = _server(max_batch=4)
+    reqs = server.random_requests("g", 4)
+    results, _ = server.serve(reqs)
+    model, params = server.model("g")
+    ref_model = GenerativeModel(SPEC, "native")
+    x = jnp.stack([jnp.asarray(r.latent) for r in reqs])
+    ref = ref_model.apply(params, x)
+    for i, r in enumerate(reqs):
+        np.testing.assert_allclose(np.asarray(results[r.rid]),
+                                   np.asarray(ref[i]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_bucket_respects_dp_divisibility_and_cap():
+    """Buckets must divide by dp and never exceed the (dp-reconciled)
+    max_batch cap."""
+    server = _server(max_batch=16)
+    server.dp = 3                    # bucket math only; no mesh needed
+    server.max_batch = max(3, (16 // 3) * 3)      # init reconciliation
+    assert server.max_batch == 15
+    for n in (1, 2, 4, 5, 8, 13, 15):
+        b = server.bucket(n)
+        assert b % 3 == 0 and n <= b <= 15, (n, b)
+
+
+def test_multi_net_fifo_grouping():
+    spec_b = NetworkSpec("g2", list(SPEC.layers))
+    server = GenServer(nets=["g", "g2"],
+                       specs={"g": SPEC, "g2": spec_b}, max_batch=4)
+    ra = server.random_requests("g", 2)
+    rb = server.random_requests("g2", 2, seed=5)
+    reqs = [ra[0], rb[0], ra[1], rb[1]]
+    for i, r in enumerate(reqs):
+        r.rid = i
+    results, stats = server.serve(reqs)
+    assert set(results) == {0, 1, 2, 3}
+    assert stats["groups"] == 2                 # one per net
+
+
+def test_dp_shard_map_smoke():
+    """--dp 2 over a 2-device CPU mesh (subprocess: device count is
+    fixed at jax init)."""
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get(
+                   "PYTHONPATH", ""),
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=2"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_gen", "--dryrun",
+         "--dp", "2"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "served 2 requests" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# SDEngine under serving conditions
+# ---------------------------------------------------------------------------
+
+def test_engine_backend_resolution():
+    assert resolve_backend("fused") == "fused"
+    assert resolve_backend("xla") == "xla"
+    assert resolve_backend("auto") in ("fused", "xla")
+    with pytest.raises(ValueError, match="backend"):
+        resolve_backend("cuda-graphs")
+
+
+def test_xla_and_fused_backends_agree():
+    """Both engine execution backends run the SAME presplit plans and
+    must agree with each other and with native."""
+    params = GenerativeModel(SPEC, "native").init(jax.random.PRNGKey(0))
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    ref = GenerativeModel(SPEC, "native").apply(params, z)
+    outs = {}
+    for backend in ("xla", "fused"):
+        m = GenerativeModel(SPEC, "sd_kernel", engine_backend=backend)
+        outs[backend] = m.apply(params, z)
+        np.testing.assert_allclose(np.asarray(outs[backend]),
+                                   np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_engine_rebind_new_dtype_bf16():
+    """Serving rebinding: the same engine fed bf16 params must rebuild
+    its plans (identity fingerprint) and produce bf16-accurate output."""
+    model = GenerativeModel(SPEC, "sd_kernel", engine_backend="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    out_f32 = model.apply(params, z)
+
+    params_bf16 = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
+    out_bf16 = model.apply(params_bf16, z.astype(jnp.bfloat16))
+    eng = model._engine
+    assert eng.bound_to(params_bf16) and not eng.bound_to(params)
+    for plan in eng.plans().values():
+        assert plan.ws_nmajor.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(out_bf16, np.float32)).all()
+    np.testing.assert_allclose(np.asarray(out_bf16, np.float32),
+                               np.asarray(out_f32), rtol=0.1, atol=0.1)
+
+
+def test_varying_batch_hits_engine_not_rebind():
+    """Different batch sizes across calls must reuse the bound plans
+    (batch is not part of the plan fingerprint)."""
+    import repro.engine.planner as planner_mod
+    model = GenerativeModel(SPEC, "sd_kernel", engine_backend="xla")
+    params = model.init(jax.random.PRNGKey(0))
+    calls = []
+    orig = planner_mod.split_filters
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    planner_mod.split_filters = counting
+    try:
+        for b in (1, 3, 8, 3, 1):
+            model.apply(params, jax.random.normal(
+                jax.random.PRNGKey(b), (b, 16)))
+    finally:
+        planner_mod.split_filters = orig
+    assert calls == []          # bound at init; no rebind for any batch
+
+
+def test_plan_cache_shared_across_engine_instances(tmp_path, monkeypatch):
+    """A measured tile plan written by one process/instance is picked up
+    by every SDEngine binding the same geometry (JSON plan cache)."""
+    cache = tmp_path / "plans.json"
+    geom = ConvGeom.from_deconv(1, 4, 4, 32, 16, 5, 2)   # d1 of SPEC
+    entry = {"th": 2, "tcin": 16, "tcout": 8, "ms": 0.1,
+             "source": "measured", "backend": jax.default_backend()}
+    cache.write_text(json.dumps(
+        {"version": 1, "plans": {geom.key(): entry}}))
+    monkeypatch.setenv("REPRO_SD_PLAN_CACHE", str(cache))
+
+    params = GenerativeModel(SPEC, "native").init(jax.random.PRNGKey(0))
+    engines = [SDEngine(SPEC).bind(params) for _ in range(2)]
+    want = KernelPlan(th=2, tcin=16, tcout=8)
+    for eng in engines:
+        assert eng.plans()["d1"].tile == want
+    # both instances resolved the identical measured plan — and the
+    # second bind never re-measured (get_plan is lookup-only)
+    assert engines[0].plans()["d1"].tile == engines[1].plans()["d1"].tile
