@@ -1,0 +1,117 @@
+"""Training-step microbenchmark: fwd+bwd, native vs functional SD.
+
+The ``repro.sd`` redesign made the split-deconvolution path trainable
+(``conv_transpose`` + a ``custom_vjp`` whose backward is standard
+convolutions over the split layout).  This sweep times one jitted
+``jax.grad`` step — scalar loss through a single deconv layer,
+gradients w.r.t. input and filter — for the three DCGAN generator
+deconv layers, comparing
+
+  native — ``lax.conv_general_dilated`` deconv, XLA's autodiff backward,
+  sd     — ``repro.sd.conv_transpose``: split-layout forward, the
+           custom conv-expressed backward (what ``train_dcgan`` runs
+           with ``--deconv-impl sd_kernel``/``sd_fn``).
+
+Grad parity (sd vs native, 1e-4) is recorded alongside the timings.
+Results go to BENCH_train.json for the cross-PR trajectory.
+
+  PYTHONPATH=src python -m benchmarks.train_bench
+  PYTHONPATH=src python -m benchmarks.train_bench --batch 8 --iters 5
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.sd as sd
+from repro.core.accounting import dcgan
+from repro.core.deconv import native_deconv, same_deconv_pads
+from repro.kernels.autotune import measure
+
+OUT_JSON = "BENCH_train.json"
+
+
+def bench_layer(layer, batch=4, iters=3):
+    pads = (same_deconv_pads(layer.k, layer.s)
+            if layer.padding == "same" else layer.pad)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(batch, *layer.in_hw, layer.cin) * 0.1,
+                    jnp.float32)
+    w = jnp.asarray(rng.randn(layer.k, layer.k, layer.cin, layer.cout)
+                    / np.sqrt(layer.k * layer.k * layer.cin), jnp.float32)
+    plan = sd.plan(w.shape, layer.s, pads)
+
+    def loss_native(xx, ww):
+        return jnp.sum(native_deconv(xx, ww, layer.s, pads) ** 2)
+
+    def loss_sd(xx, ww):
+        return jnp.sum(sd.conv_transpose(plan, xx, ww) ** 2)
+
+    g_native = jax.jit(jax.grad(loss_native, argnums=(0, 1)))
+    g_sd = jax.jit(jax.grad(loss_sd, argnums=(0, 1)))
+
+    # parity first (also warms both executables)
+    (dx_n, dw_n), (dx_s, dw_s) = g_native(x, w), g_sd(x, w)
+    allclose = (bool(np.allclose(dx_n, dx_s, rtol=1e-4, atol=1e-4))
+                and bool(np.allclose(dw_n, dw_s, rtol=1e-4, atol=1e-4)))
+
+    t_nat = measure(lambda: jax.block_until_ready(g_native(x, w)),
+                    iters=iters, warmup=1)
+    t_sd = measure(lambda: jax.block_until_ready(g_sd(x, w)),
+                   iters=iters, warmup=1)
+    return {"native_ms": round(t_nat, 3), "sd_ms": round(t_sd, 3),
+            "sd_over_native": round(t_sd / t_nat, 3) if t_nat else None,
+            "grad_parity": allclose}
+
+
+def sweep(batch=4, iters=3, out=OUT_JSON, report=None):
+    layers = [l for l in dcgan().layers if l.kind == "deconv"]
+    results = {"jax_backend": jax.default_backend(), "batch": batch,
+               "layers": {}}
+    if report is not None:
+        report.section("Training step — native vs functional SD "
+                       "(fwd+bwd, jitted grad)")
+        report.header(["layer", "native_ms", "sd_ms", "sd/native",
+                       "grad_parity"])
+    for layer in layers:
+        r = bench_layer(layer, batch=batch, iters=iters)
+        results["layers"][layer.name] = r
+        line = [f"dcgan/{layer.name}", r["native_ms"], r["sd_ms"],
+                r["sd_over_native"], r["grad_parity"]]
+        if report is not None:
+            report.row(line)
+        else:
+            print("  " + " | ".join(str(v) for v in line))
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        msg = f"train sweep written to {out}"
+        if report is not None:
+            report.note(msg)
+        else:
+            print(msg)
+    return results
+
+
+def run(report):
+    """benchmarks.run hook: reduced iters so the full driver stays fast;
+    the standalone main does the complete sweep."""
+    sweep(batch=2, iters=2, out=None, report=report)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args(argv)
+    sweep(batch=args.batch, iters=args.iters, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,13 +36,20 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--small", action="store_true")
-    ap.add_argument("--deconv", default="sd",
+    ap.add_argument("--deconv-impl", "--deconv", dest="deconv",
+                    default="sd",
                     # gradients must flow through the deconv: only impls
-                    # the registry marks trainable AND exact are offered
-                    # (sd_kernel/fused cache concrete arrays at bind;
-                    # shi/chang are the wrong-baseline reproductions)
+                    # the registry marks trainable AND exact are offered.
+                    # Since the repro.sd redesign that includes sd_kernel
+                    # and sd_fn — traced params route through the
+                    # custom_vjp functional path (shi/chang stay out:
+                    # wrong-baseline reproductions)
                     choices=sorted(set(registry.trainable_names())
                                    & set(registry.exact_names())))
+    ap.add_argument("--grad-check", action="store_true",
+                    help="before training, check jax.grad of the "
+                    "generator loss through --deconv-impl against the "
+                    "native reference (1e-4)")
     ap.add_argument("--out", default="runs/dcgan")
     args = ap.parse_args(argv)
 
@@ -88,6 +95,26 @@ def main(argv=None):
         gp, g_opt = adamw_update(gp, g, g_opt, lr=2e-4, b1=0.5,
                                  weight_decay=0.0)
         return gp, g_opt, l
+
+    if args.grad_check:
+        # Same loss, same params: grads through the chosen impl must
+        # match the native-deconv reference (the repro.sd custom_vjp
+        # contract that makes sd_kernel/sd_fn trainable).
+        import numpy as np
+        ref = (GenerativeModel(small_spec(), deconv_impl="native")
+               if args.small else build("dcgan", deconv_impl="native"))
+        z0 = pipe.batch(0)
+
+        def gen_loss(model):
+            return lambda p: bce(disc.apply(dp, model.apply(p, z0)), True)
+
+        g_impl = jax.jit(jax.grad(gen_loss(gen)))(gp)
+        g_ref = jax.grad(gen_loss(ref))(gp)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4),
+            g_impl, g_ref)
+        print(f"grad check: {args.deconv} grads match native (1e-4)")
 
     d_hist, g_hist = [], []
     for step in range(args.steps):

@@ -11,6 +11,12 @@ python -m pytest -x -q
 echo "== executor-registry capabilities consistency =="
 python -c "from repro.core import registry; registry.selfcheck(verbose=True)"
 
+echo "== functional SD API selfcheck (repro.sd) =="
+python -c "import repro.sd; repro.sd.selfcheck(verbose=True)"
+
+echo "== trainable kernel-path smoke (1-step DCGAN, grad parity) =="
+python examples/train_dcgan.py --steps 1 --small --deconv-impl sd_kernel --grad-check
+
 echo "== generative serving smoke (serve_gen --dryrun) =="
 python -m repro.launch.serve_gen --dryrun
 

@@ -32,8 +32,14 @@ Capability schema (see DESIGN.md "Executor registry")
                     elsewhere (slow but correct) — the engine therefore
                     exposes an XLA execution backend for off-TPU
                     serving (see ``repro.engine``).
+``api``             the call convention behind :meth:`ImplInfo.fn`:
+                    ``"fn"`` is a hand-written plain executor;
+                    ``"functional"`` resolves to the stateless
+                    plan-based :mod:`repro.sd` core (``conv_transpose``
+                    with a ``custom_vjp`` — differentiable and
+                    jit-composable by construction).
 
-All non-engine impls share one call signature::
+All impls share one call signature::
 
     fn(x, w, stride, padding=0) -> y        # NHWC / HWIO
 
@@ -44,6 +50,7 @@ live in ``core`` without an import cycle with ``kernels``.
 
 from __future__ import annotations
 
+import difflib
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Tuple
 
@@ -60,6 +67,7 @@ class ImplInfo:
     exact: bool = True
     dtypes: Tuple[str, ...] = ("float32", "bfloat16")
     backends: Tuple[str, ...] = ("any",)
+    api: str = "fn"                 # "fn" | "functional" (repro.sd)
 
     @property
     def fn(self) -> Callable:
@@ -75,6 +83,7 @@ class ImplInfo:
             "exact": self.exact,
             "dtypes": list(self.dtypes),
             "backends": list(self.backends),
+            "api": self.api,
         }
 
 
@@ -98,7 +107,7 @@ def _describe_all() -> str:
     lines = []
     for n in names():
         i = _REGISTRY[n]
-        tags = [t for t, on in (
+        tags = [f"api={i.api}"] + [t for t, on in (
             ("trainable", i.trainable), ("engine", i.engine),
             ("presplit", i.needs_presplit), ("exact", i.exact)) if on]
         lines.append(f"  {n:<10} [{', '.join(tags)}] {i.description}")
@@ -106,13 +115,16 @@ def _describe_all() -> str:
 
 
 def get_impl(name: str) -> ImplInfo:
-    """Lookup with a self-documenting error on unknown names."""
+    """Lookup with a self-documenting error on unknown names: suggests
+    the nearest registered name and prints the capability catalog."""
     try:
         return _REGISTRY[name]
     except KeyError:
+        near = difflib.get_close_matches(name, names(), n=1, cutoff=0.5)
+        hint = f" — did you mean {near[0]!r}?" if near else ""
         raise ValueError(
-            f"unknown deconv_impl {name!r}; registered implementations:\n"
-            f"{_describe_all()}") from None
+            f"unknown deconv_impl {name!r}{hint}; "
+            f"registered implementations:\n{_describe_all()}") from None
 
 
 def resolve(name: str) -> Callable:
@@ -164,6 +176,11 @@ def _load_fused():
     return sd_deconv_kernel
 
 
+def _load_functional():
+    from repro.sd import functional_deconv
+    return functional_deconv
+
+
 def _load_shi():
     from repro.core.wrong_baselines import shi_deconv
     return shi_deconv
@@ -187,11 +204,17 @@ register("sd", "Split Deconvolution, grouped formulation: ONE stride-1 "
 register("sd_paper", "Paper-faithful SD (Algorithm 2): s^2 sequential "
          "small convs + stride-s interleave write", _load_sd_paper)
 
+register("sd_fn", "stateless plan-based SD (repro.sd.conv_transpose): "
+         "pure, jit/vmap-composable, custom_vjp backward as standard "
+         "convolutions over the split layout", _load_functional,
+         trainable=True, api="functional")
+
 register("sd_kernel", "SD inference engine: presplit-once, BN-folded "
          "filters through the fused Pallas kernel (TPU) or the grouped "
-         "XLA path (off-TPU)", _load_fused,
-         trainable=False, engine=True, needs_presplit=True,
-         backends=("tpu", "any"))
+         "XLA path (off-TPU); traced params route through the "
+         "differentiable repro.sd functional core", _load_functional,
+         trainable=True, engine=True, needs_presplit=True,
+         backends=("tpu", "any"), api="functional")
 
 register("fused", "fused Pallas SD kernel with inline filter split "
          "(kernel benchmarking; deployments use sd_kernel + SDEngine)",
@@ -213,7 +236,9 @@ def selfcheck(verbose: bool = False) -> None:
     """Registry-capabilities consistency check (run by scripts/ci.sh).
 
     * every loader resolves to a callable,
-    * engine impls are inference-only and presplit,
+    * engine impls honour the presplit deployment contract, and are
+      trainable only when they resolve to the functional repro.sd core
+      (plain engine caches hold concrete arrays — no gradients there),
     * every ``exact`` impl matches ``native`` on a small deconv,
     * every ``trainable`` impl differentiates cleanly.
     """
@@ -230,10 +255,12 @@ def selfcheck(verbose: bool = False) -> None:
         info = get_impl(name)
         fn = info.fn
         assert callable(fn), f"{name}: loader did not return a callable"
+        assert info.api in ("fn", "functional"), f"{name}: bad api"
         if info.engine:
-            assert not info.trainable, f"{name}: engine impls cache " \
-                "concrete arrays at bind and cannot be trainable"
             assert info.needs_presplit, f"{name}: engine impls presplit"
+            assert not info.trainable or info.api == "functional", \
+                f"{name}: an engine impl is trainable only through the " \
+                "functional repro.sd path"
         out = fn(x, w, 2, 1)
         assert out.shape == ref.shape, (name, out.shape, ref.shape)
         if info.exact:

@@ -1,76 +1,54 @@
-"""Presplit-once SD inference engine.
+"""Presplit-once SD inference engine — a plan cache over :mod:`repro.sd`.
 
 The paper's speedup story requires the deconv -> split-conv filter
 transform to be **offline**: the processor only ever executes dense
-stride-1 convolutions.  The seed repo re-ran :func:`split_filters` on
-every forward call.  This module makes the transform genuinely one-time:
+stride-1 convolutions.  Since the ``repro.sd`` redesign, the transform
+itself lives in :class:`repro.sd.DeconvPlan` (a pytree: static geometry
+in aux_data, split filters as leaves) — this module is the thin layer
+that makes it a *serving engine*:
 
-* :meth:`SDEngine.bind` walks a :class:`NetworkSpec` + param dict once,
-  and for every deconv layer
-
-  1. splits the filter into the oc-major kernel layout
-     (``split_filters`` + ``ws_to_ocmajor``),
-  2. folds the inference-time batch-norm ``scale`` (gamma / sqrt(var))
-     into the split filters — a transposed conv is linear in its filter,
-     so scaling filter output-channels == scaling the output,
-  3. keeps the per-channel ``bias`` (beta) and the layer activation for
-     the kernel's in-VMEM epilogue,
-  4. looks up the (th, tcin, tcout) tile plan from the autotuner cache.
-
-  The result is one immutable :class:`LayerPlan` per deconv layer.
-
+* :meth:`SDEngine.bind` walks a :class:`NetworkSpec` + param dict once
+  and, per deconv layer, builds a **bound** plan: ``sd.plan(...)`` for
+  the geometry, an autotuned ``(th, tcin, tcout)`` kernel tile from the
+  JSON plan cache (:mod:`repro.kernels.autotune`), then
+  ``plan.bind(w, scale, bias)`` — one ``split_filters`` call, the
+  inference-BN scale folded into the split filters (a transposed conv
+  is linear in its filter), the bias and inter-layer activation kept
+  for the epilogue.  Plans are cached keyed to the bound params by
+  *leaf identity*.
 * :meth:`SDEngine.run` executes a layer through
-  :func:`repro.kernels.ops.sd_deconv_presplit_fused` using only the
-  cached plan — no splitting, no BN arithmetic, no plan search on the
-  hot path (asserted by tests/test_engine.py via monkeypatching).
+  :func:`repro.sd.execute` using only the cached plan — no splitting,
+  no BN arithmetic, no plan search on the hot path (asserted by
+  tests/test_engine.py via monkeypatching).
 
-Plans are keyed to the bound param dict by identity; binding different
-params (or mutated copies passed as a new dict) rebuilds the plans.
+``bind`` no longer rejects jit tracers by raising: binding is simply
+skipped under a trace (caching traced plans would leak tracers across
+trace boundaries), and the models route traced params through the
+stateless differentiable :func:`repro.sd.conv_transpose` instead — so
+``jax.jit(model.apply)(params, x)`` and training through ``sd_kernel``
+both work.  Bound plans themselves are pytrees and may be passed
+*through* jit as arguments (the serving stack does exactly that).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.accounting import NetworkSpec
-from repro.core.deconv import (same_deconv_pads, sd_deconv_presplit,
-                               split_filters)
-from repro.kernels import ops
-from repro.kernels.autotune import ConvGeom, KernelPlan, get_plan
+from repro.core.accounting import LayerSpec, NetworkSpec
+from repro.core.deconv import same_deconv_pads
+from repro.kernels.autotune import ConvGeom, get_plan
+from repro.sd import functional as sd_functional
+from repro.sd.plan import (BACKENDS, DeconvPlan, plan as make_plan,
+                           resolve_backend)
 
 Params = Dict[str, Any]
 
-BACKENDS = ("fused", "xla")
-
-
-def resolve_backend(backend: str) -> str:
-    """'fused' = the Pallas kernel (interpret mode off-TPU); 'xla' = the
-    grouped stride-1 conv + pixel-shuffle from the same presplit plans
-    (the fast off-TPU serving path); 'auto' picks per jax backend."""
-    if backend == "auto":
-        return "fused" if jax.default_backend() == "tpu" else "xla"
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown engine backend {backend!r}; "
-                         f"choose from {('auto',) + BACKENDS}")
-    return backend
-
-
-@dataclass(frozen=True)
-class LayerPlan:
-    """Everything the hot path needs to run one deconv layer."""
-    name: str
-    kernel: Tuple[int, int]
-    stride: int
-    padding: Any                    # int | (ph, pw) | ((pt,pb),(pl,pr))
-    ws_ocmajor: Optional[jax.Array]  # scale-folded filters, oc-major
-    ws_nmajor: Optional[jax.Array]   # same filters, n-major (XLA backend)
-    bias: jax.Array                 # (Cout,) f32, added in the epilogue
-    act: str                        # "relu" | "linear" (epilogue-fused)
-    tile: KernelPlan                # autotuned (th, tcin, tcout)
+# Engine plans ARE repro.sd plans now; the old name survives for callers
+# that predate the repro.sd split (tests, benchmarks, introspection).
+LayerPlan = DeconvPlan
 
 
 def fold_scale_ocmajor(ws_ocmajor: jax.Array, scale: jax.Array,
@@ -99,7 +77,7 @@ class SDEngine:
         self.spec = spec
         self.plan_batch = plan_batch     # batch used for plan-cache keys
         self.backend = resolve_backend(backend)
-        self._plans: Dict[str, LayerPlan] = {}
+        self._plans: Dict[str, DeconvPlan] = {}
         self._bound: Optional[Params] = None
         self._bound_leaves: Optional[tuple] = None
 
@@ -125,52 +103,55 @@ class SDEngine:
         return tuple(leaves)
 
     # ---- offline phase ---------------------------------------------------
-    def bind(self, params: Params) -> "SDEngine":
-        """Build all layer plans from ``params`` (called once per param
-        set — at model init, or lazily on the first apply with foreign
-        params).  Must not run under jit tracing: plans cache concrete
-        arrays."""
-        if not jax.core.trace_state_clean():
-            # Even concrete params would be staged into tracers here
-            # (omnistaging), leaking into the cached plans.
-            raise ValueError(
-                "SDEngine.bind called under jit tracing; bind the "
-                "engine to concrete params before jitting apply")
+    def layer_plan(self, layer: LayerSpec, act: str) -> DeconvPlan:
+        """Geometry-only plan for one deconv layer: split layout +
+        autotuned kernel tile, no filter data.  Static and trace-safe."""
+        pads = (same_deconv_pads(layer.k, layer.s)
+                if layer.padding == "same" else layer.pad)
+        geom = ConvGeom.from_deconv(self.plan_batch, *layer.in_hw,
+                                    layer.cin, layer.cout, layer.k,
+                                    layer.s)
+        return make_plan(
+            (layer.k, layer.k, layer.cin, layer.cout), layer.s, pads,
+            backend=self.backend, act=act, tile=get_plan(geom))
+
+    def build_plans(self, params: Params) -> Dict[str, DeconvPlan]:
+        """Bound plans for every deconv layer — pure (no engine-state
+        mutation), so it also works on traced params inside a jit: the
+        resulting plans are pytrees of the trace's tracers."""
         layers = self.spec.layers
-        plans: Dict[str, LayerPlan] = {}
+        plans: Dict[str, DeconvPlan] = {}
         for i, layer in enumerate(layers):
             if layer.kind != "deconv":
                 continue
             p = params[layer.name]
-            w = p["w"]
-            s = int(layer.s)
-            ws_n = split_filters(w, s)
-            scale = p.get("scale")
-            if scale is not None:
-                # n-major channel c = n*Cout + oc: tile the per-oc scale
-                # across the s^2 sub-filter blocks (fold commutes with
-                # the oc-major relayout below — both are permutations).
-                ws_n = ws_n * jnp.tile(scale.astype(ws_n.dtype), s * s)
-            # cache only the layout this engine's backend consumes: the
-            # backend is fixed at construction, and holding both would
-            # double the filter footprint for the server's lifetime
-            ws_oc = (ops.ws_to_ocmajor(ws_n, s)
-                     if self.backend == "fused" else None)
-            if self.backend == "fused":
-                ws_n = None
-            bias = p["b"].astype(jnp.float32)
-            pads = (same_deconv_pads(layer.k, s)
-                    if layer.padding == "same" else layer.pad)
             act = "linear" if i == len(layers) - 1 else "relu"
-            geom = ConvGeom.from_deconv(self.plan_batch, *layer.in_hw,
-                                        layer.cin, layer.cout, layer.k, s)
-            plans[layer.name] = LayerPlan(
-                name=layer.name, kernel=(layer.k, layer.k), stride=s,
-                padding=pads, ws_ocmajor=ws_oc, ws_nmajor=ws_n,
-                bias=bias, act=act, tile=get_plan(geom))
-        self._plans = plans
+            plans[layer.name] = self.layer_plan(layer, act).bind(
+                p["w"], scale=p.get("scale"),
+                bias=p["b"].astype(jnp.float32))
+        return plans
+
+    def bind(self, params: Params) -> "SDEngine":
+        """Build and cache all layer plans from ``params`` (called once
+        per param set — at model init, or lazily on the first apply with
+        foreign params).  The old blanket under-jit rejection is gone —
+        concrete params bind fine inside a trace (plans stay concrete)
+        — but *traced* params still raise: caching tracers would leak
+        them across trace boundaries and silently serve stale weights.
+        Traced params belong on the stateless
+        ``repro.sd.conv_transpose`` path (``models.generative`` routes
+        them there automatically)."""
+        leaves = self._plan_leaves(params)
+        if leaves is not None and any(
+                isinstance(l, jax.core.Tracer) for l in leaves):
+            raise ValueError(
+                "SDEngine.bind called with traced params; the engine "
+                "caches concrete plans — use repro.sd.conv_transpose "
+                "for traced params (GenerativeModel.apply does this "
+                "automatically under jit/grad)")
+        self._plans = self.build_plans(params)
         self._bound = params
-        self._bound_leaves = self._plan_leaves(params)
+        self._bound_leaves = leaves
         return self
 
     def bound_to(self, params: Params) -> bool:
@@ -186,28 +167,19 @@ class SDEngine:
     def run(self, name: str, x: jax.Array) -> jax.Array:
         """Deconv + folded BN + activation for layer ``name`` from the
         cached plan.  Touches nothing offline on either backend."""
-        plan = self._plans[name]
-        if self.backend == "fused":
-            return ops.sd_deconv_presplit_fused(
-                x, plan.ws_ocmajor, plan.kernel, plan.stride, plan.padding,
-                bias=plan.bias, act=plan.act, plan=plan.tile)
-        ws = plan.ws_nmajor.astype(x.dtype)
-        y = sd_deconv_presplit(x, ws, plan.kernel, plan.stride,
-                               plan.padding)
-        y = y + plan.bias.astype(y.dtype)
-        return jax.nn.relu(y) if plan.act == "relu" else y
+        return sd_functional.execute(self._plans[name], x)
 
     # ---- introspection ---------------------------------------------------
-    def plans(self) -> Dict[str, LayerPlan]:
+    def plans(self) -> Dict[str, DeconvPlan]:
         return dict(self._plans)
 
     def describe(self) -> str:
         lines = [f"SDEngine[{self.spec.name}] backend={self.backend} "
                  f"({len(self._plans)} deconv layers)"]
-        for plan in self._plans.values():
-            kt = -(-plan.kernel[0] // plan.stride)
+        for name, plan in self._plans.items():
+            kt = -(-plan.kernel[0] // plan.s)
             lines.append(
-                f"  {plan.name}: K={plan.kernel[0]} s={plan.stride} "
+                f"  {name}: K={plan.kernel[0]} s={plan.s} "
                 f"KT={kt} act={plan.act} tile=(th={plan.tile.th}, "
                 f"tcin={plan.tile.tcin}, tcout={plan.tile.tcout})")
         return "\n".join(lines)

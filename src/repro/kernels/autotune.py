@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 from dataclasses import asdict, dataclass
 from typing import Callable, Dict, List, Optional
@@ -184,12 +185,33 @@ def load_cache(path: Optional[str] = None) -> Dict[str, dict]:
 
 
 def save_cache(plans: Dict[str, dict], path: Optional[str] = None) -> str:
+    """Atomically persist the plan cache.
+
+    Concurrent benchmark/serve processes all write the same JSON file;
+    each writer gets a *unique* temp file in the target directory
+    (``mkstemp`` — a fixed ``.tmp`` name would let two writers
+    interleave into one temp file), fsyncs it, then ``os.replace``\\ s it
+    over the cache in one atomic rename.  Readers therefore only ever
+    see a complete JSON document: last writer wins, no torn files.
+    """
     p = cache_path(path)
-    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
-    tmp = p + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"version": 1, "plans": plans}, f, indent=1, sort_keys=True)
-    os.replace(tmp, p)
+    d = os.path.dirname(p) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(p) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": 1, "plans": plans}, f, indent=1,
+                      sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     _MEM[p] = dict(plans)
     return p
 

@@ -67,11 +67,14 @@ def sd_conv2d_valid(x: jax.Array, w: jax.Array, th: int | None = None,
 
 
 def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
-    """Relayout split filters from n-major (core) to oc-major (kernel)."""
-    kt1, kt2, cin, nc = ws.shape
-    cout = nc // (s * s)
-    w = ws.reshape(kt1, kt2, cin, s * s, cout)
-    return w.transpose(0, 1, 2, 4, 3).reshape(kt1, kt2, cin, cout * s * s)
+    """Relayout split filters from n-major (core) to oc-major (kernel).
+
+    Canonical implementation lives in :mod:`repro.sd.plan` (the plan
+    layer owns filter layouts now); re-exported here for the kernel
+    benchmarks and tests that predate ``repro.sd``.
+    """
+    from repro.sd.plan import to_ocmajor
+    return to_ocmajor(ws, s)
 
 
 @functools.partial(jax.jit,

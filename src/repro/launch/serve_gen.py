@@ -81,6 +81,7 @@ class GenServer:
             if n not in self._specs:
                 self._specs[n] = BENCHMARKS[n]()
         self._models: Dict[str, Tuple[GenerativeModel, Any]] = {}
+        self._serving: Dict[str, Tuple[Any, Any, Any]] = {}
         self._compiled: Dict[Tuple[str, int, str], Any] = {}
         self.compile_count = 0          # incremented at trace time
         self._mesh = None
@@ -105,6 +106,22 @@ class GenServer:
             self._models[net] = (m, params)
         return self._models[net]
 
+    def _serving_args(self, net: str):
+        """(non-deconv params, bound plans) for the compiled call.  The
+        deconv weights live pre-split inside the plans — shipping the
+        raw filters too would feed the executable dead operands (and
+        replicate them across the dp mesh).  Cached per net, keyed on
+        the live params object, so the serving loop does no per-group
+        dict rebuilding; a rebind (new params) invalidates."""
+        model, params = self.model(net)
+        cached = self._serving.get(net)
+        if cached is None or cached[0] is not params:
+            deconv = {l.name for l in model.spec.deconv_layers()}
+            lean = {k: v for k, v in params.items() if k not in deconv}
+            self._serving[net] = (params, lean, model.engine.plans())
+        _, lean, plans = self._serving[net]
+        return lean, plans
+
     def bucket(self, n: int) -> int:
         b = pow2_bucket(n, self.max_batch)
         if self.dp > 1:
@@ -114,20 +131,30 @@ class GenServer:
         return b
 
     def compiled(self, net: str, bucket: int):
-        """The jitted padded-batch executable for (net, bucket, dtype)."""
+        """The jitted padded-batch executable for (net, bucket, dtype).
+
+        Since the ``repro.sd`` redesign the engine's bound plans are
+        pytrees, so params AND plans are passed *through* jit as
+        arguments (``GenerativeModel.apply_with_plans``) rather than
+        closed over: rebinding weights (new checkpoint, dtype sweep)
+        reuses the compiled executable — only shapes key the cache.
+        """
         key = (net, bucket, self.dtype.name)
         if key not in self._compiled:
-            model, params = self.model(net)
+            model, _ = self.model(net)
 
-            def f(x):
+            def f(params, plans, x):
                 self.compile_count += 1      # runs only while tracing
-                return model.apply(params, x)
+                return model.apply_with_plans(params, plans, x)
 
             if self._mesh is not None:
                 ndim = len(model.input_shape(bucket))
                 spec = P(*(("data",) + (None,) * (ndim - 1)))
                 from jax.experimental.shard_map import shard_map
-                f = shard_map(f, mesh=self._mesh, in_specs=(spec,),
+                # params/plans are replicated (P() prefix), the batch
+                # axis of x/y is sharded over the 'data' mesh axis
+                f = shard_map(f, mesh=self._mesh,
+                              in_specs=(P(), P(), spec),
                               out_specs=spec, check_rep=False)
             self._compiled[key] = jax.jit(f)
         return self._compiled[key]
@@ -137,11 +164,12 @@ class GenServer:
         """Pad a same-net group to its bucket, run, crop the padding."""
         n = len(latents)
         bucket = self.bucket(n)
+        lean_params, plans = self._serving_args(net)
         x = jnp.stack([jnp.asarray(z, self.dtype) for z in latents])
         if bucket > n:
             pad = jnp.zeros((bucket - n, *x.shape[1:]), self.dtype)
             x = jnp.concatenate([x, pad])
-        y = self.compiled(net, bucket)(x)
+        y = self.compiled(net, bucket)(lean_params, plans, x)
         return y[:n]
 
     def serve(self, requests: List[GenRequest]):

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import conv2d, registry, same_deconv_pads
 from repro.core.accounting import BENCHMARKS, NetworkSpec
+from repro import sd
 
 Params = Dict[str, Any]
 
@@ -52,6 +53,7 @@ class GenerativeModel:
         else:
             self._engine = None
             self._deconv = info.fn
+        self._fplans: Dict[str, Any] = {}   # geometry plans, traced path
         self.final_tanh = final_tanh
 
     # ---- params ----------------------------------------------------------
@@ -81,13 +83,43 @@ class GenerativeModel:
         return params
 
     # ---- forward ---------------------------------------------------------
-    def apply(self, params: Params, x: jax.Array) -> jax.Array:
-        if self._engine is not None and not self._engine.bound_to(params):
-            self._engine.bind(params)   # foreign params: one-time rebind
+    def _engine_ready(self, params: Params) -> bool:
+        """True when cached engine plans are usable for these params.
+        Concrete foreign params rebind the engine once; traced params
+        (inside ``jit``/``grad``) take the stateless differentiable
+        :func:`repro.sd.conv_transpose` path instead — caching traced
+        plans would leak tracers, and the functional path is what makes
+        ``sd_kernel`` trainable."""
+        if self._engine is None:
+            return False
+        if self._engine.bound_to(params):
+            return True
+        if any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves(params)):
+            return False
+        self._engine.bind(params)       # foreign params: one-time rebind
+        return True
+
+    def _functional_plan(self, layer):
+        """Geometry-only DeconvPlan for the traced-params path (cached:
+        it is static data, safe to reuse across traces)."""
+        if layer.name not in self._fplans:
+            act = "linear"   # act/scale/bias composed outside, like native
+            self._fplans[layer.name] = self._engine.layer_plan(layer, act)
+        return self._fplans[layer.name]
+
+    def _forward(self, params: Params, x: jax.Array,
+                 deconv_step) -> jax.Array:
+        """The one shared layer loop.  ``deconv_step(layer, p, h) ->
+        (h, epilogue_done)`` supplies the deconv strategy; everything
+        else (fc matmul + reshape, conv + BN, inter-layer ReLU, final
+        tanh) lives here exactly once, so every execution path — plain
+        impls, cached engine plans, traced-params functional, serving
+        plans-as-arguments — shares identical non-deconv semantics."""
         layers = self.spec.layers
         h = x
         for i, layer in enumerate(layers):
-            p = params[layer.name]
+            p = params.get(layer.name)   # deconv steps may not need it
             last = i == len(layers) - 1
             if layer.kind == "fc":
                 h = h.reshape(h.shape[0], -1)
@@ -101,19 +133,47 @@ class GenerativeModel:
                 pads = "SAME" if layer.padding == "same" else layer.pad
                 h = conv2d(h, p["w"], layer.s, pads)
                 h = h * p["scale"] + p["b"]
-            elif self._engine is not None:   # deconv, fused engine path
-                # scale is folded into the cached split filters; bias and
-                # the inter-layer ReLU run in the kernel's VMEM epilogue.
-                h = self._engine.run(layer.name, h)
-                continue
-            else:  # deconv
-                pads = (same_deconv_pads(layer.k, layer.s)
-                        if layer.padding == "same" else layer.pad)
-                h = self._deconv(h, p["w"], layer.s, pads)
-                h = h * p["scale"] + p["b"]
+            else:                        # deconv: strategy-dependent
+                h, epilogue_done = deconv_step(layer, p, h)
+                if epilogue_done:
+                    continue
             if not last:
                 h = jax.nn.relu(h)
         return jnp.tanh(h) if self.final_tanh else h
+
+    def apply(self, params: Params, x: jax.Array) -> jax.Array:
+        if self._engine_ready(params):
+            # scale is folded into the cached split filters; bias and
+            # the inter-layer ReLU run in the kernel/plan epilogue.
+            def step(layer, p, h):
+                return self._engine.run(layer.name, h), True
+        elif self._engine is not None:   # traced params: differentiable
+            def step(layer, p, h):
+                h = sd.conv_transpose(self._functional_plan(layer), h,
+                                      p["w"])
+                return h * p["scale"] + p["b"], False
+        else:                            # plain registry executor
+            def step(layer, p, h):
+                pads = (same_deconv_pads(layer.k, layer.s)
+                        if layer.padding == "same" else layer.pad)
+                h = self._deconv(h, p["w"], layer.s, pads)
+                return h * p["scale"] + p["b"], False
+        return self._forward(params, x, step)
+
+    def apply_with_plans(self, params: Params,
+                         plans: Dict[str, "sd.DeconvPlan"],
+                         x: jax.Array) -> jax.Array:
+        """Forward pass with the deconv layers' *bound* plans passed in
+        explicitly (``engine.plans()``), instead of read from engine
+        state.  Pure in all three arguments — params AND plans are
+        pytrees, so the serving stack jits this once per shape and
+        swaps weights/plans per call without recompiling.  ``params``
+        only needs the fc/conv entries (deconv weights live pre-split
+        inside the plans — the server passes the filtered dict)."""
+        def step(layer, p, h):           # bias + act in the bound plan
+            return sd.execute(plans[layer.name], h), True
+
+        return self._forward(params, x, step)
 
     def __call__(self, params: Params, x: jax.Array) -> jax.Array:
         return self.apply(params, x)

@@ -1,0 +1,62 @@
+"""Old-API adapters over the functional SD core.
+
+The pre-``repro.sd`` codebase had two call conventions:
+
+* plain executors ``fn(x, w, stride, padding) -> y`` (the registry's
+  ``api="fn"`` impls), and
+* the stateful ``SDEngine.bind(params)`` + ``engine.run(name, x)`` pair
+  (which hard-rejected jit tracers).
+
+This module bridges both onto :mod:`repro.sd`:
+
+* :func:`functional_deconv` exposes ``conv_transpose`` under the plain
+  executor signature, with a per-process cache of geometry plans (plans
+  are static dataclasses — caching them is trace-safe and costs one
+  dict lookup).  This is what the registry's ``api="functional"``
+  entries (``sd_fn``, ``sd_kernel``) resolve to, which is how
+  ``examples/train_dcgan.py`` gets a *trainable* kernel path.
+* ``SDEngine`` itself now delegates to ``repro.sd`` plans
+  (:mod:`repro.engine.planner`); ``bind`` survives as the serving-side
+  plan cache but is no longer the only door — traced params flow
+  through :func:`repro.sd.conv_transpose` instead of raising.  See
+  DESIGN.md "Functional API" for the deprecation story.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+
+from repro.core.deconv import _pads, _pair
+from .functional import conv_transpose
+from .plan import DeconvPlan, plan as make_plan, resolve_backend
+
+_PLAN_CACHE: Dict[Tuple, DeconvPlan] = {}
+
+
+def plan_for(filter_shape, stride, padding=0,
+             backend: str = "auto") -> DeconvPlan:
+    """Geometry-plan cache keyed on static call data.  Trace-safe: the
+    key is shapes/ints/strings only and the cached value holds no
+    arrays."""
+    resolved = resolve_backend(backend)
+    key = (tuple(int(d) for d in filter_shape), _pair(stride),
+           _pads(padding), resolved)
+    if key not in _PLAN_CACHE:
+        _PLAN_CACHE[key] = make_plan(filter_shape, stride, padding,
+                                     backend=resolved)
+    return _PLAN_CACHE[key]
+
+
+def functional_deconv(x: jax.Array, w: jax.Array, stride,
+                      padding=0, *, backend: str = "auto") -> jax.Array:
+    """``fn(x, w, stride, padding)`` adapter over
+    :func:`repro.sd.conv_transpose` — differentiable, jit-composable,
+    Pallas-fused on TPU and grouped-XLA elsewhere."""
+    return conv_transpose(plan_for(w.shape, stride, padding, backend),
+                          x, w)
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()

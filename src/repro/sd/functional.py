@@ -1,0 +1,124 @@
+"""Stateless split-deconvolution entry points.
+
+Two runtime forms over the same :class:`~repro.sd.plan.DeconvPlan`:
+
+* :func:`conv_transpose` — the training/authoring form.  Takes the
+  *original* HWIO deconv filter, splits it in-trace (a pure layout op),
+  runs the plan's backend, and is differentiable through a
+  ``jax.custom_vjp`` whose backward is standard convolutions over the
+  split layout (:mod:`repro.sd.grad`).  Because the backward never
+  differentiates the forward, the fused Pallas kernel is trainable too.
+* :func:`execute` — the deployment form.  Takes a *bound* plan (filters
+  pre-split exactly once via ``plan.bind``), runs bias + activation in
+  the epilogue, and never touches ``split_filters``.  Bound plans are
+  pytrees, so this composes with ``jit``/``shard_map`` with the plan
+  passed as an ordinary argument.
+
+Both forms compute exactly the transposed convolution of
+``repro.core.deconv.native_deconv`` (plus the optional epilogue).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deconv import sd_deconv_presplit, split_filters
+from . import grad as _grad
+from .plan import DeconvPlan, to_ocmajor
+
+
+def _run_presplit(plan: DeconvPlan, x: jax.Array, ws: jax.Array,
+                  layout: str, bias: Optional[jax.Array],
+                  act: str) -> jax.Array:
+    """Dispatch pre-split filters to the plan's execution backend."""
+    if plan.backend == "fused":
+        from repro.kernels import ops                 # lazy: pulls Pallas
+        ws_oc = ws if layout == "ocmajor" else to_ocmajor(ws, plan.s)
+        return ops.sd_deconv_presplit_fused(
+            x, ws_oc, plan.kernel, plan.s, plan.padding,
+            bias=bias, act=act, plan=plan.tile)
+    ws_n = ws if layout == "nmajor" else None
+    assert ws_n is not None, "xla backend consumes n-major filters"
+    y = sd_deconv_presplit(x, ws_n.astype(x.dtype), plan.kernel,
+                           plan.stride, plan.padding)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if act == "relu":
+        y = jax.nn.relu(y)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# conv_transpose: pure, differentiable, jit/vmap/shard_map-composable.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def conv_transpose(plan: DeconvPlan, x: jax.Array, w: jax.Array,
+                   b: Optional[jax.Array] = None) -> jax.Array:
+    """Transposed convolution of ``x`` with ``w`` via the split layout.
+
+    ``plan`` must be geometry-only (unbound) — it carries no arrays, so
+    it is a static pytree that crosses ``jit`` boundaries as an
+    argument and hashes into the compile cache.  ``w`` is the plain
+    HWIO deconv filter; ``b`` an optional per-output-channel bias.
+    Differentiable in ``x``, ``w`` and ``b`` (see :mod:`repro.sd.grad`);
+    no epilogue activation is applied (compose it outside, where it is
+    differentiable for free).
+    """
+    return _fwd_value(plan, x, w, b)
+
+
+def _fwd_value(plan, x, w, b):
+    if plan.bound:
+        raise ValueError(
+            "conv_transpose takes a geometry-only plan plus the raw "
+            "filter; use repro.sd.execute(plan, x) for bound plans")
+    ws = split_filters(w, plan.stride)
+    y = _run_presplit(plan, x, ws, "nmajor", None, "linear")
+    return y if b is None else y + b.astype(y.dtype)
+
+
+def _fwd(plan, x, w, b):
+    return _fwd_value(plan, x, w, b), (x, w, b)
+
+
+def _bwd(plan, res, dy):
+    x, w, b = res
+    dx, dw = _grad.conv_transpose_vjp(plan, x, w, dy)
+    # f32 accumulation for the bias reduction (bf16 partial sums drift);
+    # cast to the bias primal's dtype like dx/dw — an f32 bias under
+    # bf16 activations must get an f32 cotangent back.
+    db = (jnp.sum(dy.astype(jnp.float32), axis=(0, 1, 2)).astype(b.dtype)
+          if b is not None else None)
+    return dx, dw, db
+
+
+conv_transpose.defvjp(_fwd, _bwd)
+
+
+def split_weights(plan: DeconvPlan, w: jax.Array) -> jax.Array:
+    """The offline filter transform for ``plan`` (n-major layout).
+    Differentiable (pure pad + permutation)."""
+    return split_filters(w, plan.stride)
+
+
+# ---------------------------------------------------------------------------
+# execute: the presplit-once deployment path.
+# ---------------------------------------------------------------------------
+
+def execute(plan: DeconvPlan, x: jax.Array) -> jax.Array:
+    """Run a *bound* plan: pre-split (scale-folded) filters, bias and
+    activation epilogue.  The hot path of :class:`repro.engine.SDEngine`
+    — no splitting, no BN arithmetic, no plan search here."""
+    if not plan.bound:
+        raise ValueError("execute() needs a bound plan; call "
+                         "plan.bind(w, scale, bias) once offline, or use "
+                         "conv_transpose(plan, x, w) for the stateless form")
+    return _run_presplit(plan, x, plan.ws, plan.layout, plan.bias,
+                         plan.act)

@@ -1,0 +1,94 @@
+"""The backward pass of split deconvolution, as standard convolutions.
+
+This is what makes :func:`repro.sd.conv_transpose` differentiable even
+when its forward runs through the fused Pallas kernel (which has no
+autodiff rule): the ``custom_vjp`` backward never differentiates the
+forward — it *is* the paper's transform applied to the adjoint problem,
+and every compute-heavy step is a dense stride-1 convolution, i.e. the
+same op class the paper keeps the processor on.
+
+Derivation.  The forward (``core.sd_deconv_presplit``) is
+
+    xp  = pad(x, P_I)                                    (static zeros)
+    y1  = conv_valid(xp, ws)          ws = split_filters(w)   [the GEMM]
+    ps  = depth_to_space(y1)                              (permutation)
+    y   = crop(ps, P_K + user padding) (+ b)
+
+Each step is linear, so the VJP is the chain of adjoints, right to left:
+
+* crop^T      — zero-embed the cotangent ``dy`` back into the ps array;
+* d2s^T       — ``space_to_depth`` (d2s is a permutation);
+* conv^T(x)   — the input grad of a stride-1 VALID correlation: a FULL
+                stride-1 conv of ``dy1`` with the split filters rotated
+                180 deg and in/out channels swapped;
+* conv^T(w)   — the filter grad: a stride-1 VALID conv with batch and
+                channel axes exchanged (``xp`` as lhs feature maps,
+                ``dy1`` as the filter bank);
+* split^T     — :func:`repro.sd.plan.unsplit_filters` (inverse
+                permutation + crop of the expansion zeros) maps the
+                split-layout filter grad onto the original ``w``;
+* pad^T       — crop the ``P_I`` halo off the input grad.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.deconv import (_pads, sd_geometry, space_to_depth,
+                               split_filters)
+from .plan import DeconvPlan, unsplit_filters
+
+
+def _conv_valid_input_grad(dy1: jax.Array, ws: jax.Array) -> jax.Array:
+    """VJP of ``y1 = conv_valid_stride1(xp, ws)`` w.r.t. ``xp``: a FULL
+    stride-1 conv with the spatially-rotated, channel-swapped filters."""
+    kth, ktw = ws.shape[0], ws.shape[1]
+    w_t = ws[::-1, ::-1].transpose(0, 1, 3, 2)     # rot180, swap ic/oc
+    return lax.conv_general_dilated(
+        dy1, w_t, window_strides=(1, 1),
+        padding=[(kth - 1, kth - 1), (ktw - 1, ktw - 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_valid_filter_grad(xp: jax.Array, dy1: jax.Array) -> jax.Array:
+    """VJP of ``y1 = conv_valid_stride1(xp, ws)`` w.r.t. ``ws``: a VALID
+    stride-1 conv treating channels as batch and batch as channels."""
+    lhs = xp.transpose(3, 1, 2, 0)                 # (Cin, Hp, Wp, B)
+    rhs = dy1.transpose(1, 2, 0, 3)                # (Oh1, Ow1, B, s^2*Co)
+    out = lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out.transpose(1, 2, 0, 3)               # (KT, KT, Cin, s^2*Co)
+
+
+def conv_transpose_vjp(plan: DeconvPlan, x: jax.Array, w: jax.Array,
+                       dy: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """``(dx, dw)`` for ``y = conv_transpose(plan, x, w)``.
+
+    Both gradients are computed over the *split layout* — the cotangent
+    is pixel-unshuffled once and the two convolutions above run on
+    ``K_T``-tap stride-1 geometry, so the backward enjoys the same
+    no-inserted-zeros property as the forward.
+    """
+    (pt, pb), (pl, pr) = _pads(plan.padding)
+    (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry(plan.kernel,
+                                                     plan.stride)
+    h, wd = x.shape[1], x.shape[2]
+    ws = split_filters(w, plan.stride)
+
+    # crop^T: embed dy at offset (P_K + top/left crop); the bottom/right
+    # margins are exactly the bottom/right crops (see sd_deconv_presplit).
+    dps = jnp.pad(dy, ((0, 0), (pkh + pt, pb), (pkw + pl, pr), (0, 0)))
+    dy1 = space_to_depth(dps, plan.stride)         # d2s^T
+
+    dxp = _conv_valid_input_grad(dy1, ws.astype(dy1.dtype))
+    dx = dxp[:, pih:pih + h, piw:piw + wd, :]      # pad^T
+
+    xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
+    dws = _conv_valid_filter_grad(xp, dy1)
+    dw = unsplit_filters(dws, plan.kernel, plan.stride)    # split^T
+    return dx.astype(x.dtype), dw.astype(w.dtype)

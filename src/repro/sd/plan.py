@@ -1,0 +1,216 @@
+"""DeconvPlan: the split-deconvolution layout as a jit-crossable pytree.
+
+The paper's transform has two halves: a *static* geometry (how a
+(K, s, padding) deconv decomposes into ``s^2`` stride-1 sub-filters of
+``K_T = ceil(K/s)`` taps, and where the pixel-shuffled output is
+cropped) and the *filter data* laid out for that geometry.  This module
+keeps them in one frozen dataclass registered as a JAX pytree:
+
+* the geometry — kernel, stride, padding, channel counts, execution
+  backend, epilogue activation, filter layout and (optionally) the
+  autotuned kernel tile — is **aux_data**: hashable, compared by value,
+  and therefore part of the jit cache key, exactly like static_argnums;
+* the filter arrays of a *bound* plan (``ws``: the pre-split filters,
+  with any folded per-channel scale; ``bias``) are **leaves**, so a
+  bound plan crosses ``jit`` / ``grad`` / ``shard_map`` boundaries as a
+  plain argument — no tracer rejection, no closure capture, and weight
+  updates never force a retrace.
+
+``plan()`` builds an unbound (geometry-only) plan; ``DeconvPlan.bind``
+splits a filter once and returns a bound plan.  The runtime entry
+points live in :mod:`repro.sd.functional`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deconv import (_check_padding, _pads, _pair,
+                               deconv_output_shape, sd_geometry,
+                               split_filters)
+from repro.kernels.autotune import KernelPlan
+
+BACKENDS = ("fused", "xla")
+LAYOUTS = ("nmajor", "ocmajor")
+
+
+def resolve_backend(backend: str) -> str:
+    """'fused' = the Pallas kernel (interpret mode off-TPU); 'xla' = the
+    grouped stride-1 conv + pixel-shuffle; 'auto' picks per jax backend."""
+    if backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "xla"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown SD backend {backend!r}; "
+                         f"choose from {('auto',) + BACKENDS}")
+    return backend
+
+
+def to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
+    """Relayout split filters from n-major (what ``depth_to_space``
+    consumes) to oc-major (what the fused Pallas kernel consumes)."""
+    kt1, kt2, cin, nc = ws.shape
+    cout = nc // (s * s)
+    w = ws.reshape(kt1, kt2, cin, s * s, cout)
+    return w.transpose(0, 1, 2, 4, 3).reshape(kt1, kt2, cin, cout * s * s)
+
+
+def unsplit_filters(ws: jax.Array, kernel, stride) -> jax.Array:
+    """Exact inverse (== linear adjoint) of :func:`split_filters`.
+
+    ``split_filters`` is a zero-pad followed by a permutation, so its
+    adjoint is the inverse permutation followed by the crop of the
+    ``P_K`` expansion zeros.  This is what maps split-layout filter
+    *gradients* back onto the original deconv filter, and also the
+    "compressed SD" storage transform of paper Table 3.
+    """
+    sh, sw = _pair(stride)
+    kh, kw = _pair(kernel)
+    (kth, ktw), (pkh, pkw), _ = sd_geometry((kh, kw), (sh, sw))
+    kt1, kt2, cin, nc = ws.shape
+    cout = nc // (sh * sw)
+    we = ws.reshape(kth, ktw, cin, sh, sw, cout)
+    we = we.transpose(0, 3, 1, 4, 2, 5)           # invert (0,2,4,1,3,5)
+    we = we[::-1, :, ::-1, :, :, :]               # undo the m-flips
+    we = we.reshape(sh * kth, sw * ktw, cin, cout)
+    return we[pkh:, pkw:]                         # crop the expansion pad
+
+
+@dataclass(frozen=True)
+class DeconvPlan:
+    """Split layout of one transposed convolution.
+
+    Static geometry (pytree aux_data): ``kernel``, ``stride``,
+    ``padding`` (normalised to ``((pt, pb), (pl, pr))``), ``cin``,
+    ``cout``, ``backend``, ``act``, ``layout``, ``tile``.
+
+    Leaves (only set on a *bound* plan): ``ws`` — the pre-split filters
+    in ``layout`` order with any per-channel scale folded in — and
+    ``bias``.
+    """
+    kernel: Tuple[int, int]
+    stride: Tuple[int, int]
+    padding: Tuple[Tuple[int, int], Tuple[int, int]]
+    cin: int
+    cout: int
+    backend: str = "xla"
+    act: str = "linear"                    # "linear" | "relu" | "tanh"
+    layout: str = "nmajor"
+    tile: Optional[KernelPlan] = None      # autotuned (th, tcin, tcout)
+    ws: Optional[jax.Array] = None         # leaf: pre-split filters
+    bias: Optional[jax.Array] = None       # leaf: per-oc bias
+
+    # ---- derived geometry ------------------------------------------------
+    @property
+    def s(self) -> int:
+        """Square stride as an int (the fused kernel requires it)."""
+        sh, sw = self.stride
+        if sh != sw:
+            raise ValueError(f"non-square stride {self.stride}")
+        return sh
+
+    @property
+    def kt(self) -> Tuple[int, int]:
+        return sd_geometry(self.kernel, self.stride)[0]
+
+    @property
+    def pk(self) -> Tuple[int, int]:
+        return sd_geometry(self.kernel, self.stride)[1]
+
+    @property
+    def pi(self) -> Tuple[int, int]:
+        return sd_geometry(self.kernel, self.stride)[2]
+
+    def out_shape(self, in_hw: Tuple[int, int]) -> Tuple[int, int]:
+        return deconv_output_shape(in_hw, self.kernel, self.stride,
+                                   self.padding)
+
+    @property
+    def bound(self) -> bool:
+        return self.ws is not None
+
+    # Legacy LayerPlan field names (engine tests and introspection).
+    @property
+    def ws_ocmajor(self) -> Optional[jax.Array]:
+        return self.ws if self.layout == "ocmajor" else None
+
+    @property
+    def ws_nmajor(self) -> Optional[jax.Array]:
+        return self.ws if self.layout == "nmajor" else None
+
+    # ---- binding ---------------------------------------------------------
+    def bind(self, w: jax.Array, scale: Optional[jax.Array] = None,
+             bias: Optional[jax.Array] = None,
+             act: Optional[str] = None) -> "DeconvPlan":
+        """Split ``w`` once (the paper's offline transform) and return a
+        bound plan.  ``scale`` (folded inference-BN gamma/sqrt(var)) is
+        multiplied into the split filters — a deconv is linear in its
+        filter, so scaling filter output-channels == scaling the output.
+        The filters are stored in the layout this plan's backend
+        consumes (oc-major for the fused kernel, n-major for XLA).
+        """
+        if w.shape != (*self.kernel, self.cin, self.cout):
+            raise ValueError(f"filter shape {w.shape} does not match plan "
+                             f"{(*self.kernel, self.cin, self.cout)}")
+        sh, sw = self.stride
+        ws = split_filters(w, self.stride)
+        if scale is not None:
+            # n-major channel c = n*Cout + oc: tile the per-oc scale
+            # across the s^2 sub-filter blocks.
+            ws = ws * jnp.tile(scale.astype(ws.dtype), sh * sw)
+        layout = "ocmajor" if self.backend == "fused" else "nmajor"
+        if layout == "ocmajor":
+            ws = to_ocmajor(ws, self.s)
+        return replace(self, ws=ws, bias=bias, layout=layout,
+                       act=self.act if act is None else act)
+
+    def unbind(self) -> "DeconvPlan":
+        return replace(self, ws=None, bias=None, layout="nmajor")
+
+    def with_tile(self, tile: Optional[KernelPlan]) -> "DeconvPlan":
+        return replace(self, tile=tile)
+
+
+def plan(filter_shape: Sequence[int], stride, padding=0,
+         backend: str = "auto", act: str = "linear",
+         tile: Optional[KernelPlan] = None) -> DeconvPlan:
+    """Compute the split layout for a deconv filter shape.
+
+    ``filter_shape`` is HWIO ``(K_h, K_w, C_in, C_out)``; ``padding``
+    accepts ``int``, ``(ph, pw)`` or ``((pt, pb), (pl, pr))`` exactly
+    like the :mod:`repro.core.deconv` implementations, and invalid
+    crops are rejected identically.  The result is geometry-only
+    (no filter data): pass it straight to
+    :func:`repro.sd.conv_transpose`, or :meth:`DeconvPlan.bind` a
+    filter for the presplit execution path.
+    """
+    kh, kw, cin, cout = (int(d) for d in filter_shape)
+    _check_padding((kh, kw), padding)
+    return DeconvPlan(kernel=(kh, kw), stride=_pair(stride),
+                      padding=_pads(padding), cin=cin, cout=cout,
+                      backend=resolve_backend(backend), act=act, tile=tile)
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration: arrays are leaves, geometry is aux_data.
+# ---------------------------------------------------------------------------
+
+def _flatten(p: DeconvPlan):
+    children = (p.ws, p.bias)
+    aux = (p.kernel, p.stride, p.padding, p.cin, p.cout, p.backend,
+           p.act, p.layout, p.tile)
+    return children, aux
+
+
+def _unflatten(aux, children) -> DeconvPlan:
+    ws, bias = children
+    (kernel, stride, padding, cin, cout, backend, act, layout, tile) = aux
+    return DeconvPlan(kernel=kernel, stride=stride, padding=padding,
+                      cin=cin, cout=cout, backend=backend, act=act,
+                      layout=layout, tile=tile, ws=ws, bias=bias)
+
+
+jax.tree_util.register_pytree_node(DeconvPlan, _flatten, _unflatten)

@@ -102,3 +102,61 @@ def test_load_cache_tolerates_garbage(tmp_path):
 
 def test_measure_returns_positive_ms():
     assert measure(lambda: sum(range(1000)), iters=3, warmup=1) >= 0.0
+
+
+def test_corrupted_cache_recovers_on_next_save(tmp_path):
+    """A torn/corrupt JSON cache must read as empty and be healed by the
+    next atomic save — concurrent benchmark/serve processes can race."""
+    import repro.kernels.autotune as at
+    cache = tmp_path / "plans.json"
+    cache.write_text('{"version": 1, "plans": {"b1_h12')   # torn write
+    at._MEM.pop(str(cache), None)
+    assert load_cache(str(cache)) == {}
+
+    geom = ConvGeom(1, 12, 12, 16, 8, 3, 2)
+    target = KernelPlan(th=2, tcin=8, tcout=4)
+    won = tune(geom, lambda p: 0.1 if p == target else 5.0,
+               candidates=[KernelPlan(4, 16, 8), target],
+               path=str(cache))
+    assert won == target
+
+    at._MEM.pop(str(cache), None)              # force a real disk read
+    data = json.loads(cache.read_text())       # valid JSON again
+    assert data["plans"][geom.key()]["th"] == 2
+    assert get_plan(geom, path=str(cache)) == target
+
+
+def test_save_cache_atomic_no_stray_tmp_files(tmp_path):
+    """save_cache goes through a unique mkstemp + os.replace: after any
+    number of saves the directory holds exactly the cache file (a fixed
+    shared .tmp name would let two writers interleave)."""
+    cache = tmp_path / "plans.json"
+    for i in range(3):
+        save_cache({f"k{i}": {"th": 1, "tcin": 1, "tcout": 1}},
+                   path=str(cache))
+    assert [p.name for p in tmp_path.iterdir()] == ["plans.json"]
+    data = json.loads(cache.read_text())
+    assert data["plans"] == {"k2": {"th": 1, "tcin": 1, "tcout": 1}}
+
+
+def test_save_cache_failure_leaves_old_cache_intact(tmp_path, monkeypatch):
+    """If the JSON dump dies mid-write the previous cache file must
+    survive untouched (the temp file is discarded, never renamed)."""
+    import repro.kernels.autotune as at
+    cache = tmp_path / "plans.json"
+    save_cache({"good": {"th": 1, "tcin": 1, "tcout": 1}}, path=str(cache))
+
+    class Boom(RuntimeError):
+        pass
+
+    def exploding_dump(*a, **k):
+        raise Boom("disk full")
+
+    monkeypatch.setattr(at.json, "dump", exploding_dump)
+    with pytest.raises(Boom):
+        save_cache({"bad": {}}, path=str(cache))
+    monkeypatch.undo()
+    at._MEM.pop(str(cache), None)
+    assert [p.name for p in tmp_path.iterdir()] == ["plans.json"]
+    assert load_cache(str(cache)) == {"good": {"th": 1, "tcin": 1,
+                                               "tcout": 1}}

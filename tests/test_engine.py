@@ -12,8 +12,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.engine.planner as planner_mod
+import importlib
+
 import repro.kernels.ops as ops_mod
+import repro.sd.functional as sd_functional_mod
+
+# NOTE: `import repro.sd.plan as m` would bind the sd.plan *function*
+# (the package re-export shadows the submodule attribute); go through
+# sys.modules via importlib to get the module for monkeypatching.
+sd_plan_mod = importlib.import_module("repro.sd.plan")
 from repro.core import native_deconv
 from repro.engine import SDEngine, fold_scale_ocmajor
 from repro.kernels.ops import ws_to_ocmajor
@@ -50,13 +57,13 @@ def test_sd_kernel_engine_matches_native(name):
 
 def test_split_filters_called_once_at_init(monkeypatch):
     calls = []
-    orig = planner_mod.split_filters
+    orig = sd_plan_mod.split_filters
 
     def counting(*args, **kwargs):
         calls.append(1)
         return orig(*args, **kwargs)
 
-    monkeypatch.setattr(planner_mod, "split_filters", counting)
+    monkeypatch.setattr(sd_plan_mod, "split_filters", counting)
     model = build("dcgan", "sd_kernel")
     params = model.init(jax.random.PRNGKey(0))
     n_deconv = len(model.spec.deconv_layers())
@@ -76,7 +83,8 @@ def test_apply_never_splits_after_bind(monkeypatch):
         raise AssertionError("split_filters reached the hot path")
 
     # Poison every module the forward pass could reach it through.
-    monkeypatch.setattr(planner_mod, "split_filters", boom)
+    monkeypatch.setattr(sd_plan_mod, "split_filters", boom)
+    monkeypatch.setattr(sd_functional_mod, "split_filters", boom)
     monkeypatch.setattr(ops_mod, "split_filters", boom)
 
     out = model.apply(params, _input(model, batch=2))
@@ -90,13 +98,13 @@ def test_foreign_params_bind_lazily_then_cache(monkeypatch):
     model = build("dcgan", "sd_kernel")
 
     calls = []
-    orig = planner_mod.split_filters
+    orig = sd_plan_mod.split_filters
 
     def counting(*args, **kwargs):
         calls.append(1)
         return orig(*args, **kwargs)
 
-    monkeypatch.setattr(planner_mod, "split_filters", counting)
+    monkeypatch.setattr(sd_plan_mod, "split_filters", counting)
     z = _input(model, batch=1)
     a = model.apply(params, z)
     n = len(calls)
@@ -132,16 +140,54 @@ def test_rebind_on_new_params():
                                    rtol=1e-4, atol=1e-4)
 
 
-def test_bind_rejects_tracers():
+def test_jit_apply_with_traced_params_matches_native():
+    """The old SDEngine.bind hard-rejected jit tracers; since the
+    repro.sd redesign traced params route through the stateless
+    conv_transpose path — jit composes, outputs match native, and the
+    engine never caches tracers."""
     model = build("dcgan", "sd_kernel")
-    params = model.init(jax.random.PRNGKey(0))
+    params = build("dcgan", "native").init(jax.random.PRNGKey(0))
+    z = _input(model, batch=1)
+    ref = build("dcgan", "native").apply(params, z)
+
+    fresh = build("dcgan", "sd_kernel")
 
     @jax.jit
-    def f(p, z):
-        return build("dcgan", "sd_kernel").apply(p, z)
+    def f(p, zz):
+        return fresh.apply(p, zz)
 
-    with pytest.raises(ValueError, match="jit"):
-        f(params, _input(model, batch=1))
+    out = f(params, z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    assert fresh.engine.plans() == {}      # no tracers cached
+
+    # and it differentiates: jit(grad(loss)) through the engine impl
+    def loss(model_):
+        return lambda p: jnp.sum(model_.apply(p, z) ** 2)
+
+    g = jax.jit(jax.grad(loss(build("dcgan", "sd_kernel"))))(params)
+    g_ref = jax.grad(loss(build("dcgan", "native")))(params)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4),
+        g, g_ref)
+
+
+def test_direct_bind_with_traced_params_raises():
+    """GenerativeModel routes traced params around the engine, but a
+    *direct* SDEngine.bind with tracers must still fail loudly — caching
+    tracer plans would silently serve stale weights after the trace."""
+    model = build("dcgan", "sd_kernel")
+    params = model.init(jax.random.PRNGKey(0))
+    eng = SDEngine(model.spec, backend="xla")
+
+    @jax.jit
+    def f(p):
+        eng.bind(p)
+        return 0.0
+
+    with pytest.raises(ValueError, match="traced params"):
+        f(params)
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,15 @@ def test_unknown_impl_raises_with_catalog():
     for name in registry.names():
         assert name in msg
     # the capability tags make the error self-documenting
-    assert "trainable" in msg and "engine" in msg
+    assert "trainable" in msg and "engine" in msg and "api=" in msg
+    # ...and the nearest registered name is suggested (difflib)
+    assert "did you mean 'sd_kernel'" in msg
+
+
+def test_unknown_impl_without_near_match_has_no_suggestion():
+    with pytest.raises(ValueError) as ei:
+        registry.get_impl("zzzzqqqq")
+    assert "did you mean" not in str(ei.value)
 
 
 def test_unknown_impl_raises_from_resolve():
@@ -37,27 +45,34 @@ def test_capability_schema_complete():
     assert set(caps) == set(registry.names())
     for name, c in caps.items():
         assert set(c) == {"trainable", "engine", "needs_presplit",
-                         "exact", "dtypes", "backends"}, name
+                         "exact", "dtypes", "backends", "api"}, name
+        assert c["api"] in ("fn", "functional"), name
 
 
-def test_engine_impls_are_inference_only():
+def test_engine_impls_presplit_and_train_only_via_functional():
+    """Engine impls keep the presplit deployment contract; since the
+    repro.sd redesign they may be trainable, but only by resolving to
+    the functional (custom_vjp) core — never the raw engine cache."""
     for name in registry.names():
         info = registry.get_impl(name)
         if info.engine:
-            assert not info.trainable
             assert info.needs_presplit
+            if info.trainable:
+                assert info.api == "functional"
 
 
 def test_trainable_set():
     trainable = set(registry.trainable_names())
-    assert {"native", "nzp", "sd", "sd_paper"} <= trainable
-    assert "sd_kernel" not in trainable and "fused" not in trainable
+    assert {"native", "nzp", "sd", "sd_paper", "sd_fn",
+            "sd_kernel"} <= trainable
+    assert "fused" not in trainable     # raw Pallas inline: no vjp
 
 
 def test_exact_set_excludes_wrong_baselines():
     exact = set(registry.exact_names())
     assert "shi" not in exact and "chang" not in exact
-    assert {"native", "nzp", "sd", "sd_paper", "sd_kernel"} <= exact
+    assert {"native", "nzp", "sd", "sd_paper", "sd_kernel",
+            "sd_fn"} <= exact
 
 
 def test_model_engine_flag_follows_registry():
@@ -77,4 +92,5 @@ def test_train_dcgan_choice_filter():
     offer the differentiable impls and exclude engine/wrong-baselines."""
     want = sorted(set(registry.trainable_names())
                   & set(registry.exact_names()))
-    assert want == ["native", "nzp", "sd", "sd_paper"]
+    assert want == ["native", "nzp", "sd", "sd_fn", "sd_kernel",
+                    "sd_paper"]

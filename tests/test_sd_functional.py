@@ -1,0 +1,259 @@
+"""repro.sd — the stateless, differentiable, jit-composable SD API.
+
+Pins the redesign's contract: ``conv_transpose`` is a pure function of
+(plan, x, w, b) whose ``custom_vjp`` backward (standard convolutions
+over the split layout) matches native-deconv autodiff; plans are
+pytrees that cross ``jit`` boundaries as arguments; ``execute`` runs
+bound (presplit-once) plans without ever touching ``split_filters``.
+"""
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sd as sd
+from repro.core.accounting import BENCHMARKS
+from repro.core.deconv import (native_deconv, same_deconv_pads,
+                               split_filters)
+
+# the package re-export `sd.plan` (function) shadows the submodule
+# attribute; importlib resolves the module for monkeypatching
+sd_plan_mod = importlib.import_module("repro.sd.plan")
+
+
+def _data(shape_x, shape_w, dtype=jnp.float32, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(*shape_x), dtype)
+    w = jnp.asarray(rng.randn(*shape_w), dtype)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# Forward + gradient parity vs native autodiff.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,padding", [
+    (2, 1),
+    (2, ((2, 1), (0, 2))),          # asymmetric padding
+    (3, 2),
+    (3, ((1, 0), (2, 1))),          # asymmetric padding
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grad_parity_vs_native(stride, padding, dtype):
+    x, w = _data((2, 5, 6, 3), (5, 5, 3, 4), dtype)
+    b = jnp.asarray(np.random.RandomState(3).randn(4), dtype)
+    plan = sd.plan(w.shape, stride, padding)
+
+    ref = native_deconv(x, w, stride, padding) + b
+    out = sd.conv_transpose(plan, x, w, b)
+    assert out.dtype == ref.dtype
+
+    def loss_sd(xx, ww, bb):
+        y = sd.conv_transpose(plan, xx, ww, bb)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    def loss_ref(xx, ww, bb):
+        y = native_deconv(xx, ww, stride, padding) + bb
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    g_sd = jax.grad(loss_sd, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    # bf16: the split-layout and native forwards round differently per
+    # element (~0.8% mantissa quantum), which the squared loss doubles
+    # into the cotangent — 0.1 is the honest bf16 agreement bar.
+    tol = dict(rtol=1e-4, atol=1e-4) if dtype == jnp.float32 else \
+        dict(rtol=1e-1, atol=1e-1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+    for got, want, name in zip(g_sd, g_ref, ("dx", "dw", "db")):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   err_msg=name, **tol)
+
+
+@pytest.mark.parametrize("net", sorted(BENCHMARKS))
+def test_grad_parity_paper_geometries(net):
+    """f32 grads through conv_transpose match native on every deconv
+    layer geometry of the six paper nets (acceptance bar)."""
+    for layer in BENCHMARKS[net]().deconv_layers():
+        pads = (same_deconv_pads(layer.k, layer.s)
+                if layer.padding == "same" else layer.pad)
+        x, w = _data((1, *layer.in_hw, layer.cin),
+                     (layer.k, layer.k, layer.cin, layer.cout))
+        x, w = x * 0.1, w * (1.0 / np.sqrt(layer.k * layer.k * layer.cin))
+        plan = sd.plan(w.shape, layer.s, pads)
+
+        def loss_sd(ww):
+            return jnp.sum(sd.conv_transpose(plan, x, ww) ** 2)
+
+        def loss_ref(ww):
+            return jnp.sum(native_deconv(x, ww, layer.s, pads) ** 2)
+
+        g_sd = jax.grad(loss_sd)(w)
+        g_ref = jax.grad(loss_ref)(w)
+        np.testing.assert_allclose(
+            np.asarray(g_sd), np.asarray(g_ref), rtol=1e-4, atol=1e-4,
+            err_msg=f"{net}/{layer.name} K={layer.k} s={layer.s}")
+
+
+def test_jit_grad_with_plan_as_pytree_argument():
+    """The acceptance bar: jax.jit(jax.grad(loss)) with the plan passed
+    as an ordinary (pytree) argument — no tracer rejection, and the
+    geometry lands in the jit cache key via aux_data."""
+    x, w = _data((1, 4, 4, 3), (4, 4, 3, 2))
+    plan = sd.plan(w.shape, 2, 1)
+
+    @jax.jit
+    def g(pl, xx, ww):
+        return jax.grad(
+            lambda w_: jnp.sum(sd.conv_transpose(pl, xx, w_) ** 2))(ww)
+
+    got = g(plan, x, w)
+    want = jax.grad(
+        lambda w_: jnp.sum(native_deconv(x, w_, 2, 1) ** 2))(w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # a different geometry retraces (aux_data keys the cache), same
+    # geometry does not crash or confuse the cache
+    plan3 = sd.plan(w.shape, 2, 0)
+    assert g(plan3, x, w).shape == w.shape
+
+
+def test_vmap_over_batch():
+    x, w = _data((3, 5, 4, 6), (3, 3, 6, 2))
+    plan = sd.plan(w.shape, 2, 1)
+    xb = jnp.stack([x, 2.0 * x, -x])
+    out = jax.vmap(sd.conv_transpose, in_axes=(None, 0, None))(plan, xb, w)
+    for i, scale in enumerate((1.0, 2.0, -1.0)):
+        np.testing.assert_allclose(
+            np.asarray(out[i]),
+            np.asarray(native_deconv(scale * x, w, 2, 1)),
+            rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plans as pytrees.
+# ---------------------------------------------------------------------------
+
+def test_plan_pytree_roundtrip():
+    x, w = _data((1, 4, 4, 3), (4, 4, 3, 2))
+    scale = jnp.asarray([0.5, 2.0])
+    bias = jnp.asarray([0.1, -0.2])
+
+    unbound = sd.plan(w.shape, 2, 1, act="relu")
+    leaves, treedef = jax.tree_util.tree_flatten(unbound)
+    assert leaves == []                     # geometry-only: zero leaves
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt == unbound               # static fields compare equal
+
+    bound = unbound.bind(w, scale=scale, bias=bias)
+    leaves, treedef = jax.tree_util.tree_flatten(bound)
+    assert len(leaves) == 2                 # (ws, bias) are the leaves
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    for field in ("kernel", "stride", "padding", "cin", "cout",
+                  "backend", "act", "layout", "tile"):
+        assert getattr(rebuilt, field) == getattr(bound, field)
+    assert rebuilt.ws is bound.ws and rebuilt.bias is bound.bias
+
+
+def test_bound_plan_crosses_jit_without_retrace():
+    """A bound plan is a jit *argument*: swapping filter values of the
+    same geometry reuses the compiled executable."""
+    x, w = _data((1, 4, 4, 3), (4, 4, 3, 2))
+    plan = sd.plan(w.shape, 2, 1)
+    traces = []
+
+    @jax.jit
+    def f(pl, xx):
+        traces.append(1)
+        return sd.execute(pl, xx)
+
+    b1 = plan.bind(w, bias=jnp.zeros(2))
+    b2 = plan.bind(2.0 * w, bias=jnp.ones(2))
+    y1, y2 = f(b1, x), f(b2, x)
+    assert len(traces) == 1                 # same shapes: one trace
+    np.testing.assert_allclose(np.asarray(y1),
+                               np.asarray(native_deconv(x, w, 2, 1)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(y2),
+        np.asarray(native_deconv(x, 2.0 * w, 2, 1) + 1.0),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_execute_requires_bound_and_conv_transpose_requires_unbound():
+    x, w = _data((1, 4, 4, 3), (4, 4, 3, 2))
+    plan = sd.plan(w.shape, 2, 1)
+    with pytest.raises(ValueError, match="bound"):
+        sd.execute(plan, x)
+    with pytest.raises(ValueError, match="geometry-only"):
+        sd.conv_transpose(plan.bind(w), x, w)
+
+
+def test_execute_never_splits(monkeypatch):
+    """The deployment contract: a bound plan's hot path never touches
+    split_filters (the transform happened once, at bind)."""
+    x, w = _data((1, 4, 4, 3), (4, 4, 3, 2))
+    bound = sd.plan(w.shape, 2, 1).bind(w)
+
+    def boom(*a, **k):
+        raise AssertionError("split_filters reached execute()")
+
+    monkeypatch.setattr(sd_plan_mod, "split_filters", boom)
+    monkeypatch.setattr(
+        importlib.import_module("repro.sd.functional"),
+        "split_filters", boom)
+    out = sd.execute(bound, x)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_unsplit_filters_inverts_split():
+    for k, s in [(5, 2), (4, 2), (3, 2), (3, 3), (5, 3), (2, 2)]:
+        _, w = _data((1, 1, 1, 1), (k, k, 3, 4), seed=k * 7 + s)
+        ws = split_filters(w, s)
+        back = sd.unsplit_filters(ws, (k, k), s)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch + compat adapter.
+# ---------------------------------------------------------------------------
+
+def test_fused_backend_grads_via_custom_vjp():
+    """The fused Pallas forward has no autodiff rule; the custom_vjp
+    conv-expressed backward makes it trainable anyway."""
+    x, w = _data((1, 5, 5, 4), (5, 5, 4, 2))
+    plan = sd.plan(w.shape, 2, 1, backend="fused")
+    out = sd.conv_transpose(plan, x, w)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(native_deconv(x, w, 2, 1)),
+                               rtol=1e-4, atol=1e-4)
+    g = jax.grad(lambda ww: jnp.sum(sd.conv_transpose(plan, x, ww) ** 2))(w)
+    want = jax.grad(lambda ww: jnp.sum(native_deconv(x, ww, 2, 1) ** 2))(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_functional_deconv_adapter_and_plan_cache():
+    x, w = _data((1, 4, 4, 3), (4, 4, 3, 2))
+    sd.clear_plan_cache()
+    out = sd.functional_deconv(x, w, 2, 1)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(native_deconv(x, w, 2, 1)),
+                               rtol=1e-4, atol=1e-4)
+    p1 = sd.plan_for(w.shape, 2, 1)
+    p2 = sd.plan_for(w.shape, 2, 1)
+    assert p1 is p2                          # geometry plans are cached
+    assert sd.plan_for(w.shape, 2, 0) is not p1
+
+
+def test_invalid_padding_rejected_like_core():
+    with pytest.raises(ValueError, match="padding"):
+        sd.plan((4, 4, 3, 2), 2, 4)
+
+
+def test_selfcheck():
+    sd.selfcheck()

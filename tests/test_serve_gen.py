@@ -202,23 +202,26 @@ def test_engine_rebind_new_dtype_bf16():
 def test_varying_batch_hits_engine_not_rebind():
     """Different batch sizes across calls must reuse the bound plans
     (batch is not part of the plan fingerprint)."""
-    import repro.engine.planner as planner_mod
+    import importlib
+    # the package re-export `sd.plan` (function) shadows the submodule
+    # attribute; importlib resolves the module for monkeypatching
+    sd_plan_mod = importlib.import_module("repro.sd.plan")
     model = GenerativeModel(SPEC, "sd_kernel", engine_backend="xla")
     params = model.init(jax.random.PRNGKey(0))
     calls = []
-    orig = planner_mod.split_filters
+    orig = sd_plan_mod.split_filters
 
     def counting(*a, **k):
         calls.append(1)
         return orig(*a, **k)
 
-    planner_mod.split_filters = counting
+    sd_plan_mod.split_filters = counting
     try:
         for b in (1, 3, 8, 3, 1):
             model.apply(params, jax.random.normal(
                 jax.random.PRNGKey(b), (b, 16)))
     finally:
-        planner_mod.split_filters = orig
+        sd_plan_mod.split_filters = orig
     assert calls == []          # bound at init; no rebind for any batch
 
 
@@ -241,3 +244,29 @@ def test_plan_cache_shared_across_engine_instances(tmp_path, monkeypatch):
     # both instances resolved the identical measured plan — and the
     # second bind never re-measured (get_plan is lookup-only)
     assert engines[0].plans()["d1"].tile == engines[1].plans()["d1"].tile
+
+
+def test_rebind_new_weights_reuses_compiled_executable():
+    """Since the repro.sd redesign, params and bound plans are jit
+    *arguments* (pytrees) of the compiled cell: serving a new weight set
+    for the same (net, bucket, dtype) must not retrace."""
+    server = _server(max_batch=4)
+    reqs = server.random_requests("g", 4)
+    server.serve(reqs)
+    assert server.compile_count == 1
+
+    model, _ = server.model("g")
+    new_params = GenerativeModel(SPEC, "native").init(
+        jax.random.PRNGKey(7))
+    model._engine.bind(new_params)
+    server._models["g"] = (model, new_params)
+
+    results, _ = server.serve(reqs)
+    assert server.compile_count == 1        # same executable, new weights
+    ref_model = GenerativeModel(SPEC, "native")
+    x = jnp.stack([jnp.asarray(r.latent) for r in reqs])
+    ref = ref_model.apply(new_params, x)
+    for i, r in enumerate(reqs):
+        np.testing.assert_allclose(np.asarray(results[r.rid]),
+                                   np.asarray(ref[i]),
+                                   rtol=1e-4, atol=1e-4)
