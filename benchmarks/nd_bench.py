@@ -1,0 +1,166 @@
+"""N-D (1-D audio / 3-D voxel) split-deconv sweep: presplit vs native.
+
+The rank-generalisation claim: the presplit-once SD path serves 1-D and
+3-D transposed convolutions from the SAME engine substrate, and beats
+the no-batching baseline a naive service would run.  Per geometry and
+batch size this sweeps
+
+  presplit — one jitted ``repro.sd.execute`` call over the whole batch
+             from a *bound* plan (filters split exactly once, offline;
+             execution backend chosen per jax backend, exactly what
+             ``serve_gen`` runs),
+  native   — the per-sample baseline: a jitted batch-1
+             ``jax.lax.conv_transpose`` called once per sample (each
+             request materialised separately).
+
+Numerical parity (presplit vs native, same filters/inputs) is recorded
+per geometry alongside the timings.  Results go to BENCH_nd.json for
+the cross-PR trajectory.
+
+  PYTHONPATH=src python -m benchmarks.nd_bench             # full sweep
+  PYTHONPATH=src python -m benchmarks.nd_bench --smoke     # CI (tiny)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import zlib
+
+import jax
+import numpy as np
+
+import repro.sd as sd
+from repro.core.deconv import same_deconv_pads
+from repro.kernels.autotune import measure
+
+OUT_JSON = "BENCH_nd.json"
+BATCHES = (1, 4, 8)
+
+# (tag, rank, spatial_in, cin, cout, K, s) — the new workloads' layer
+# geometries (WaveGAN 25/4 upsamplers, VoxGAN 4/2 voxel upsamplers).
+SWEEP = [
+    ("wavegan_up1", 1, (16,), 64, 32, 25, 4),
+    ("wavegan_up2", 1, (64,), 32, 16, 25, 4),
+    ("wavegan_out", 1, (256,), 16, 1, 25, 4),
+    ("voxgan_up1", 3, (4, 4, 4), 64, 32, 4, 2),
+    ("voxgan_up2", 3, (8, 8, 8), 32, 16, 4, 2),
+    ("voxgan_out", 3, (16, 16, 16), 16, 1, 4, 2),
+]
+SMOKE_SWEEP = [
+    ("smoke_1d", 1, (16,), 8, 4, 9, 2),
+    ("smoke_3d", 3, (4, 4, 4), 8, 4, 4, 2),
+]
+
+
+def _conv_transpose_dn(rank):
+    sp = {1: "H", 2: "HW", 3: "DHW"}[rank]
+    return ("N" + sp + "C", sp + "OI", "N" + sp + "C")
+
+
+def bench_case(tag, rank, space, cin, cout, k, s, batches=BATCHES,
+               iters=3):
+    rng = np.random.RandomState(zlib.crc32(tag.encode()) % (2 ** 31))
+    w = jax.numpy.asarray(rng.randn(*(k,) * rank, cin, cout)
+                          * (1.0 / np.sqrt(k ** rank * cin)), "float32")
+    kernel, stride = (k,) * rank, (s,) * rank
+    pads = same_deconv_pads(kernel, stride)
+    bound = sd.plan(w.shape, stride, pads).bind(w)
+
+    # per-sample native: what a service without the presplit engine runs
+    dn = _conv_transpose_dn(rank)
+    crop_lo = [lo for lo, _ in pads]
+
+    @jax.jit
+    def native1(z):
+        full = jax.lax.conv_transpose(z, w, stride, "VALID",
+                                      dimension_numbers=dn,
+                                      transpose_kernel=True)
+        starts = [0] + crop_lo + [0]
+        limits = [1] + [st + n * s for st, n in zip(crop_lo, space)] \
+            + [cout]
+        return jax.lax.slice(full, starts, limits)
+
+    run_presplit = jax.jit(sd.execute)
+    entry = {"rank": rank, "in": list(space), "cin": cin, "cout": cout,
+             "K": k, "s": s, "backend": bound.backend, "batches": {}}
+    for batch in batches:
+        z = jax.random.normal(jax.random.PRNGKey(batch),
+                              (batch, *space, cin), "float32")
+        ref = np.concatenate([np.asarray(native1(z[i:i + 1]))
+                              for i in range(batch)])
+        out = np.asarray(run_presplit(bound, z))
+        parity = bool(np.allclose(ref, out, rtol=1e-4, atol=1e-4))
+
+        def run_native():
+            for i in range(batch):
+                native1(z[i:i + 1]).block_until_ready()
+
+        def run_sd():
+            run_presplit(bound, z).block_until_ready()
+
+        ms_native = measure(run_native, iters=iters)
+        ms_sd = measure(run_sd, iters=iters)
+        entry["batches"][str(batch)] = {
+            "native_per_sample_ms": round(ms_native, 4),
+            "presplit_ms": round(ms_sd, 4),
+            "speedup": round(ms_native / ms_sd, 3) if ms_sd else None,
+            "parity": parity,
+        }
+    return entry
+
+
+def sweep(cases=None, batches=BATCHES, iters=3, out=OUT_JSON,
+          report=None):
+    results = {"backend": jax.default_backend(), "geometries": {}}
+    if report is not None:
+        report.section("N-D split-deconv sweep (presplit vs per-sample "
+                       "native conv_transpose)")
+        report.header(["geometry", "rank", "batch", "native ms",
+                       "presplit ms", "speedup", "parity"])
+    for case in (cases or SWEEP):
+        tag = case[0]
+        entry = bench_case(*case, batches=batches, iters=iters)
+        results["geometries"][tag] = entry
+        if report is not None:
+            for batch, r in entry["batches"].items():
+                report.row([tag, entry["rank"], batch,
+                            r["native_per_sample_ms"], r["presplit_ms"],
+                            f"{r['speedup']}x", r["parity"]])
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+    return results
+
+
+def run(report):
+    """benchmarks.run entry point."""
+    sweep(report=report)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, batches (1, 4) — the CI gate")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args(argv)
+    cases = SMOKE_SWEEP if args.smoke else SWEEP
+    batches = (1, 4) if args.smoke else BATCHES
+    results = sweep(cases=cases, batches=batches, iters=args.iters,
+                    out=args.out)
+    ok = True
+    for tag, entry in results["geometries"].items():
+        for batch, r in entry["batches"].items():
+            ok &= r["parity"]
+            print(f"{tag:<14} b={batch:<3} native {r['native_per_sample_ms']:8.3f}ms "
+                  f"presplit {r['presplit_ms']:8.3f}ms  "
+                  f"{r['speedup']}x  parity={r['parity']}")
+    if not ok:
+        raise SystemExit("N-D parity failure")
+    print(f"written {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -64,14 +64,14 @@ def main() -> None:
                     help="dump every report table as JSON to PATH")
     args = ap.parse_args()
 
-    from benchmarks import (commodity, kernel_bench, procmodel,
+    from benchmarks import (commodity, kernel_bench, nd_bench, procmodel,
                             roofline_report, sd_roofline, serve_bench,
                             table4_ssim, tables123, train_bench)
     mods = {"tables123": tables123, "table4_ssim": table4_ssim,
             "procmodel": procmodel, "commodity": commodity,
             "kernel_bench": kernel_bench, "sd_roofline": sd_roofline,
             "serve_bench": serve_bench, "train_bench": train_bench,
-            "roofline_report": roofline_report}
+            "nd_bench": nd_bench, "roofline_report": roofline_report}
     wanted = (args.only.split(",") if args.only else list(mods))
     report = Report()
     t0 = time.time()

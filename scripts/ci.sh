@@ -17,8 +17,37 @@ python -c "import repro.sd; repro.sd.selfcheck(verbose=True)"
 echo "== trainable kernel-path smoke (1-step DCGAN, grad parity) =="
 python examples/train_dcgan.py --steps 1 --small --deconv-impl sd_kernel --grad-check
 
-echo "== generative serving smoke (serve_gen --dryrun) =="
+echo "== generative serving smoke (serve_gen --dryrun: 2-D/1-D/3-D/seg) =="
 python -m repro.launch.serve_gen --dryrun
+
+echo "== N-D sweep smoke (nd_bench --smoke, parity-gated) =="
+python -m benchmarks.nd_bench --smoke --iters 1 --out /tmp/BENCH_nd_smoke.json
+
+echo "== N-D grad parity (1-D and 3-D conv_transpose vs native autodiff) =="
+python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+import repro.sd as sd
+from repro.core.deconv import native_deconv
+
+rng = np.random.RandomState(0)
+for shape_x, shape_w, s, p, op in [((2, 9, 3), (5, 3, 2), 2, 1, 1),
+                                   ((1, 3, 4, 4, 2), (4, 4, 4, 2, 2),
+                                    2, 1, 0)]:
+    x = jnp.asarray(rng.randn(*shape_x), jnp.float32)
+    w = jnp.asarray(rng.randn(*shape_w), jnp.float32)
+    plan = sd.plan(w.shape, s, p, output_padding=op)
+    np.testing.assert_allclose(
+        np.asarray(sd.conv_transpose(plan, x, w)),
+        np.asarray(native_deconv(x, w, s, p, output_padding=op)),
+        rtol=1e-5, atol=1e-5)
+    g = jax.grad(lambda ww: jnp.sum(sd.conv_transpose(plan, x, ww)**2))(w)
+    gr = jax.grad(lambda ww: jnp.sum(
+        native_deconv(x, ww, s, p, output_padding=op)**2))(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+print("N-D grad parity: OK")
+PY
 
 echo "== kernel parity smoke (interpret mode) =="
 python - <<'PY'

@@ -1,19 +1,20 @@
 """Core: the paper's Split Deconvolution contribution + accounting."""
 
 from . import registry
-from .deconv import (conv2d, deconv_output_shape, depth_to_space,
+from .deconv import (conv2d, conv_nd, deconv_output_shape, depth_to_space,
                      dilate_input, native_deconv, nzp_deconv, sd_deconv,
                      sd_deconv_presplit, sd_geometry, same_deconv_pads,
-                     space_to_depth, split_filters)
-from .accounting import BENCHMARKS, LayerSpec, NetworkSpec
+                     space_to_depth, split_filters, unsplit_filters)
+from .accounting import BENCHMARKS, WORKLOADS, LayerSpec, NetworkSpec
 from .ssim import ssim
 from .wrong_baselines import chang_deconv, shi_deconv
 
 __all__ = [
     "registry",
-    "conv2d", "deconv_output_shape", "depth_to_space", "dilate_input",
-    "native_deconv", "nzp_deconv", "sd_deconv", "sd_deconv_presplit",
-    "sd_geometry", "same_deconv_pads", "space_to_depth", "split_filters",
-    "BENCHMARKS", "LayerSpec", "NetworkSpec", "ssim",
+    "conv2d", "conv_nd", "deconv_output_shape", "depth_to_space",
+    "dilate_input", "native_deconv", "nzp_deconv", "sd_deconv",
+    "sd_deconv_presplit", "sd_geometry", "same_deconv_pads",
+    "space_to_depth", "split_filters", "unsplit_filters",
+    "BENCHMARKS", "WORKLOADS", "LayerSpec", "NetworkSpec", "ssim",
     "chang_deconv", "shi_deconv",
 ]

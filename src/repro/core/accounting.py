@@ -33,56 +33,65 @@ def _pair(v):
 
 @dataclass(frozen=True)
 class LayerSpec:
-    """One layer of a benchmark network, with resolved input geometry."""
+    """One layer of a benchmark network, with resolved input geometry.
+
+    ``in_hw`` is the input *spatial* shape; its length sets the layer's
+    spatial rank (1 = audio, 2 = images — the historical default — and
+    3 = volumetric).  Kernels and strides stay scalar (hypercubic), as
+    in every benchmarked network.
+    """
     kind: str                      # 'conv' | 'deconv' | 'fc'
     cin: int
     cout: int
-    k: int = 0                     # spatial kernel (square)
+    k: int = 0                     # spatial kernel (hypercubic)
     s: int = 1                     # stride
-    in_hw: Tuple[int, int] = (1, 1)
+    in_hw: Tuple[int, ...] = (1, 1)
     padding: str = "same"          # 'same' (TF semantics) or int in .pad
     pad: int = 0
     name: str = ""
 
     # ---- geometry -------------------------------------------------------
-    def out_hw(self) -> Tuple[int, int]:
-        h, w = self.in_hw
+    @property
+    def rank(self) -> int:
+        """Spatial rank of the layer (len of its input spatial shape)."""
+        return len(self.in_hw)
+
+    def out_hw(self) -> Tuple[int, ...]:
         if self.kind == "fc":
-            return (1, 1)
+            return (1,) * self.rank
         if self.kind == "conv":
             if self.padding == "same":
-                return (-(-h // self.s), -(-w // self.s))
-            return ((h + 2 * self.pad - self.k) // self.s + 1,
-                    (w + 2 * self.pad - self.k) // self.s + 1)
+                return tuple(-(-n // self.s) for n in self.in_hw)
+            return tuple((n + 2 * self.pad - self.k) // self.s + 1
+                         for n in self.in_hw)
         # deconv
         if self.padding == "same":
-            return (h * self.s, w * self.s)
-        return ((h - 1) * self.s + self.k - 2 * self.pad,
-                (w - 1) * self.s + self.k - 2 * self.pad)
+            return tuple(n * self.s for n in self.in_hw)
+        return tuple((n - 1) * self.s + self.k - 2 * self.pad
+                     for n in self.in_hw)
 
     # ---- accounting -----------------------------------------------------
     def macs(self) -> int:
         """Original (useful) multiply-accumulate count."""
-        h, w = self.in_hw
-        oh, ow = self.out_hw()
         if self.kind == "fc":
             return self.cin * self.cout
+        taps = self.k ** self.rank * self.cin * self.cout
         if self.kind == "conv":
-            return oh * ow * self.k * self.k * self.cin * self.cout
-        return h * w * self.k * self.k * self.cin * self.cout
+            return math.prod(self.out_hw()) * taps
+        return math.prod(self.in_hw) * taps
 
     def nzp_macs(self) -> int:
         if self.kind != "deconv":
             return self.macs()
-        oh, ow = self.out_hw()
-        return oh * ow * self.k * self.k * self.cin * self.cout
+        return (math.prod(self.out_hw())
+                * self.k ** self.rank * self.cin * self.cout)
 
     def sd_expansion(self) -> float:
-        """MAC/param expansion ratio of general SD: (s*ceil(K/s)/K)^2."""
+        """MAC/param expansion ratio of general SD: (s*ceil(K/s)/K)^d."""
         if self.kind != "deconv" or self.s == 1:
             return 1.0
         kt = -(-self.k // self.s)
-        return (self.s * kt / self.k) ** 2
+        return (self.s * kt / self.k) ** self.rank
 
     def sd_macs(self) -> int:
         return int(round(self.macs() * self.sd_expansion()))
@@ -90,7 +99,7 @@ class LayerSpec:
     def params(self) -> int:
         if self.kind == "fc":
             return self.cin * self.cout
-        return self.k * self.k * self.cin * self.cout
+        return self.k ** self.rank * self.cin * self.cout
 
     def sd_params(self) -> int:
         return int(round(self.params() * self.sd_expansion()))
@@ -104,6 +113,10 @@ class NetworkSpec:
     name: str
     layers: List[LayerSpec]
     note: str = ""
+    # Head semantics: generators squash to [-1, 1]; dense-prediction
+    # heads (segmentation logits) must NOT.  Carried on the spec so the
+    # model factory and the serving stack can never disagree.
+    final_tanh: bool = True
 
     def deconv_layers(self) -> List[LayerSpec]:
         return [l for l in self.layers if l.kind == "deconv"]
@@ -256,6 +269,60 @@ def fst() -> NetworkSpec:
 
 BENCHMARKS = {"dcgan": dcgan, "artgan": artgan, "sngan": sngan,
               "gpgan": gpgan, "mde": mde, "fst": fst}
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper N-D workloads (ROADMAP "as many scenarios as you can
+# imagine"): the same split-deconv substrate applied to audio (1-D),
+# volumetric generation (3-D) and dense segmentation decoding.  These are
+# NOT part of the paper's six benchmarks and never enter the Table 1-3
+# parity checks (BENCHMARKS stays exactly the paper's set); they are
+# servable/buildable through the same registry + engine + serving stack.
+# ---------------------------------------------------------------------------
+
+def wavegan() -> NetworkSpec:
+    """WaveGAN-style 1-D audio generator (Donahue et al.), scaled to a
+    1024-sample clip: 25-tap stride-4 transposed convs (K % s == 1, so
+    the SD expansion is (4*7/25)^1 = 1.12x — the 1-D analogue of
+    DCGAN's 5x5/s2)."""
+    return NetworkSpec("WaveGAN", [
+        LayerSpec("fc", 100, 16 * 64, name="project"),
+        LayerSpec("deconv", 64, 32, k=25, s=4, in_hw=(16,), name="up1"),
+        LayerSpec("deconv", 32, 16, k=25, s=4, in_hw=(64,), name="up2"),
+        LayerSpec("deconv", 16, 1, k=25, s=4, in_hw=(256,),
+                  name="to_audio"),
+    ], note="1-D audio synthesis; final tanh = waveform in [-1, 1]")
+
+
+def voxgan() -> NetworkSpec:
+    """3D-GAN-style voxel generator (Wu et al.), 4^3 -> 32^3 occupancy
+    grid via 4x4x4 stride-2 transposed convs (K % s == 0: SD is
+    expansion-free in every dim)."""
+    return NetworkSpec("VoxGAN", [
+        LayerSpec("fc", 64, 4 ** 3 * 64, name="project"),
+        LayerSpec("deconv", 64, 32, k=4, s=2, in_hw=(4, 4, 4), name="up1"),
+        LayerSpec("deconv", 32, 16, k=4, s=2, in_hw=(8, 8, 8), name="up2"),
+        LayerSpec("deconv", 16, 1, k=4, s=2, in_hw=(16, 16, 16),
+                  name="to_vox"),
+    ], note="3-D volumetric generation; final tanh = occupancy in [-1, 1]")
+
+
+def segnet() -> NetworkSpec:
+    """SegNet-style encoder-decoder segmentation head: strided conv
+    encoder, deconv decoder back to input resolution, dense per-pixel
+    class logits (``final_tanh=False``)."""
+    return NetworkSpec("SegNet", [
+        LayerSpec("conv", 3, 32, k=3, s=2, in_hw=(32, 32), name="e1"),
+        LayerSpec("conv", 32, 64, k=3, s=2, in_hw=(16, 16), name="e2"),
+        LayerSpec("deconv", 64, 32, k=4, s=2, in_hw=(8, 8), name="d1"),
+        LayerSpec("deconv", 32, 16, k=4, s=2, in_hw=(16, 16), name="d2"),
+        LayerSpec("conv", 16, 21, k=3, s=1, in_hw=(32, 32), name="logits"),
+    ], note="2-D dense prediction; 21-class (VOC-sized) logit head",
+        final_tanh=False)
+
+
+WORKLOADS = {**BENCHMARKS, "wavegan": wavegan, "voxgan": voxgan,
+             "segnet": segnet}
 
 # Paper's published numbers, for side-by-side verification (millions).
 PAPER_TABLE1 = {  # (total, deconv)

@@ -32,6 +32,14 @@ Capability schema (see DESIGN.md "Executor registry")
                     elsewhere (slow but correct) — the engine therefore
                     exposes an XLA execution backend for off-TPU
                     serving (see ``repro.engine``).
+``ranks``           spatial ranks the impl executes (1 = audio, 2 =
+                    images, 3 = volumetric).  Rank-polymorphic impls
+                    infer the rank from ``w.ndim - 2``.
+``rank_backends``   per-rank refinement of ``backends``: how each rank
+                    actually executes (e.g. the fused path lowers 1-D
+                    as H=1 2-D on TPU but runs the 3-D cross-slice
+                    interleave through grouped XLA).  Defaults to
+                    ``backends`` for every supported rank.
 ``api``             the call convention behind :meth:`ImplInfo.fn`:
                     ``"fn"`` is a hand-written plain executor;
                     ``"functional"`` resolves to the stateless
@@ -68,11 +76,23 @@ class ImplInfo:
     dtypes: Tuple[str, ...] = ("float32", "bfloat16")
     backends: Tuple[str, ...] = ("any",)
     api: str = "fn"                 # "fn" | "functional" (repro.sd)
+    ranks: Tuple[int, ...] = (2,)   # supported spatial ranks
+    # ((rank, (backend, ...)), ...) overrides; see backends_by_rank()
+    rank_backends: Tuple[Tuple[int, Tuple[str, ...]], ...] = ()
 
     @property
     def fn(self) -> Callable:
         """The executable ``fn(x, w, stride, padding)`` (lazy-loaded)."""
         return self.loader()
+
+    def backends_by_rank(self) -> Dict[int, Tuple[str, ...]]:
+        """{rank: fast-path backends} — the per-rank execution metadata
+        that decides how each spatial rank lowers (e.g. fused-Pallas for
+        ranks 1-2, Pallas-conv + grouped-XLA interleave for rank 3)."""
+        table = {r: tuple(self.backends) for r in self.ranks}
+        for rank, bks in self.rank_backends:
+            table[int(rank)] = tuple(bks)
+        return table
 
     def capabilities(self) -> Dict[str, object]:
         """Metadata dict (JSON-friendly; used by errors, docs and CI)."""
@@ -84,6 +104,9 @@ class ImplInfo:
             "dtypes": list(self.dtypes),
             "backends": list(self.backends),
             "api": self.api,
+            "ranks": list(self.ranks),
+            "backends_by_rank": {r: list(b) for r, b in
+                                 sorted(self.backends_by_rank().items())},
         }
 
 
@@ -107,9 +130,12 @@ def _describe_all() -> str:
     lines = []
     for n in names():
         i = _REGISTRY[n]
-        tags = [f"api={i.api}"] + [t for t, on in (
-            ("trainable", i.trainable), ("engine", i.engine),
-            ("presplit", i.needs_presplit), ("exact", i.exact)) if on]
+        tags = ([f"api={i.api}",
+                 "ranks=" + "".join(str(r) for r in i.ranks)]
+                + [t for t, on in (
+                    ("trainable", i.trainable), ("engine", i.engine),
+                    ("presplit", i.needs_presplit), ("exact", i.exact))
+                   if on])
         lines.append(f"  {n:<10} [{', '.join(tags)}] {i.description}")
     return "\n".join(lines)
 
@@ -192,14 +218,16 @@ def _load_chang():
 
 
 register("native", "lax.conv_general_dilated with lhs_dilation "
-         "(framework-native deconv reference)", _load_native)
+         "(framework-native deconv reference)", _load_native,
+         ranks=(1, 2, 3))
 
 register("nzp", "Naive Zero Padding baseline: materialised dilation + "
-         "stride-1 conv (~s^2 wasted MACs, paper Table 2)", _load_nzp)
+         "stride-1 conv (~s^d wasted MACs, paper Table 2)", _load_nzp,
+         ranks=(1, 2, 3))
 
 register("sd", "Split Deconvolution, grouped formulation: ONE stride-1 "
-         "conv over all s^2 sub-filters + pixel-shuffle (XLA)", _load_sd,
-         needs_presplit=False)
+         "conv over all prod(s) sub-filters + pixel-shuffle (XLA)",
+         _load_sd, needs_presplit=False, ranks=(1, 2, 3))
 
 register("sd_paper", "Paper-faithful SD (Algorithm 2): s^2 sequential "
          "small convs + stride-s interleave write", _load_sd_paper)
@@ -207,14 +235,18 @@ register("sd_paper", "Paper-faithful SD (Algorithm 2): s^2 sequential "
 register("sd_fn", "stateless plan-based SD (repro.sd.conv_transpose): "
          "pure, jit/vmap-composable, custom_vjp backward as standard "
          "convolutions over the split layout", _load_functional,
-         trainable=True, api="functional")
+         trainable=True, api="functional", ranks=(1, 2, 3))
 
 register("sd_kernel", "SD inference engine: presplit-once, BN-folded "
          "filters through the fused Pallas kernel (TPU) or the grouped "
          "XLA path (off-TPU); traced params route through the "
-         "differentiable repro.sd functional core", _load_functional,
+         "differentiable repro.sd functional core.  1-D lowers as H=1 "
+         "2-D through the same kernel; 3-D folds depth into batch for "
+         "the intra-slice Pallas convs with a grouped-XLA cross-slice "
+         "interleave", _load_functional,
          trainable=True, engine=True, needs_presplit=True,
-         backends=("tpu", "any"), api="functional")
+         backends=("tpu", "any"), api="functional", ranks=(1, 2, 3),
+         rank_backends=((3, ("tpu", "any", "xla-interleave")),))
 
 register("fused", "fused Pallas SD kernel with inline filter split "
          "(kernel benchmarking; deployments use sd_kernel + SDEngine)",
@@ -239,37 +271,59 @@ def selfcheck(verbose: bool = False) -> None:
     * engine impls honour the presplit deployment contract, and are
       trainable only when they resolve to the functional repro.sd core
       (plain engine caches hold concrete arrays — no gradients there),
-    * every ``exact`` impl matches ``native`` on a small deconv,
-    * every ``trainable`` impl differentiates cleanly.
+    * every ``exact`` impl matches ``native`` on a small deconv — at
+      **every spatial rank its ``ranks`` metadata claims** (1-D/3-D
+      inputs are pushed through rank-polymorphic impls),
+    * ``rank_backends`` entries only refine ranks that are declared,
+    * every ``trainable`` impl differentiates cleanly at every rank it
+      declares.
     """
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     rng = np.random.RandomState(0)
-    x = jnp.asarray(rng.randn(1, 5, 6, 3), jnp.float32)
-    w = jnp.asarray(rng.randn(4, 4, 3, 2), jnp.float32)
-    ref = get_impl("native").fn(x, w, 2, 1)
+    data = {  # per rank: (x, w) for a small stride-2 pad-1 deconv
+        1: (jnp.asarray(rng.randn(1, 6, 3), jnp.float32),
+            jnp.asarray(rng.randn(4, 3, 2), jnp.float32)),
+        2: (jnp.asarray(rng.randn(1, 5, 6, 3), jnp.float32),
+            jnp.asarray(rng.randn(4, 4, 3, 2), jnp.float32)),
+        3: (jnp.asarray(rng.randn(1, 3, 4, 4, 2), jnp.float32),
+            jnp.asarray(rng.randn(4, 4, 4, 2, 2), jnp.float32)),
+    }
+    native = get_impl("native").fn
+    refs = {r: native(xr, wr, 2, 1) for r, (xr, wr) in data.items()}
 
     for name in names():
         info = get_impl(name)
         fn = info.fn
         assert callable(fn), f"{name}: loader did not return a callable"
         assert info.api in ("fn", "functional"), f"{name}: bad api"
+        assert 2 in info.ranks, f"{name}: every impl serves rank 2"
+        table = info.backends_by_rank()
+        assert set(table) == set(info.ranks), \
+            f"{name}: rank_backends refines undeclared ranks " \
+            f"({sorted(table)} vs {info.ranks})"
         if info.engine:
             assert info.needs_presplit, f"{name}: engine impls presplit"
             assert not info.trainable or info.api == "functional", \
                 f"{name}: an engine impl is trainable only through the " \
                 "functional repro.sd path"
-        out = fn(x, w, 2, 1)
-        assert out.shape == ref.shape, (name, out.shape, ref.shape)
-        if info.exact:
-            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                                       rtol=1e-4, atol=1e-4,
-                                       err_msg=f"{name} vs native")
-        if info.trainable:
-            g = jax.grad(lambda wt: jnp.sum(fn(x, wt, 2, 1) ** 2))(w)
-            assert np.isfinite(np.asarray(g)).all(), f"{name}: bad grad"
+        for rank in info.ranks:
+            xr, wr = data[rank]
+            out = fn(xr, wr, 2, 1)
+            assert out.shape == refs[rank].shape, \
+                (name, rank, out.shape, refs[rank].shape)
+            if info.exact:
+                np.testing.assert_allclose(
+                    np.asarray(out), np.asarray(refs[rank]),
+                    rtol=1e-4, atol=1e-4,
+                    err_msg=f"{name} vs native (rank {rank})")
+            if info.trainable:
+                g = jax.grad(
+                    lambda wt: jnp.sum(fn(xr, wt, 2, 1) ** 2))(wr)
+                assert np.isfinite(np.asarray(g)).all(), \
+                    f"{name}: bad grad (rank {rank})"
         if verbose:
             print(f"  {name:<10} OK  {info.capabilities()}")
     if verbose:

@@ -105,15 +105,24 @@ class SDEngine:
     # ---- offline phase ---------------------------------------------------
     def layer_plan(self, layer: LayerSpec, act: str) -> DeconvPlan:
         """Geometry-only plan for one deconv layer: split layout +
-        autotuned kernel tile, no filter data.  Static and trace-safe."""
-        pads = (same_deconv_pads(layer.k, layer.s)
+        autotuned kernel tile, no filter data.  Static and trace-safe.
+        Rank follows the layer's input spatial shape (1-D/2-D/3-D);
+        autotuned tiles exist for the 2-D kernel geometry — other ranks
+        resolve their tile at call time from the lowered geometry."""
+        rank = layer.rank
+        kernel = (layer.k,) * rank
+        stride = (layer.s,) * rank
+        pads = (same_deconv_pads(kernel, stride)
                 if layer.padding == "same" else layer.pad)
-        geom = ConvGeom.from_deconv(self.plan_batch, *layer.in_hw,
-                                    layer.cin, layer.cout, layer.k,
-                                    layer.s)
+        tile = None
+        if rank == 2:
+            geom = ConvGeom.from_deconv(self.plan_batch, *layer.in_hw,
+                                        layer.cin, layer.cout, layer.k,
+                                        layer.s)
+            tile = get_plan(geom)
         return make_plan(
-            (layer.k, layer.k, layer.cin, layer.cout), layer.s, pads,
-            backend=self.backend, act=act, tile=get_plan(geom))
+            (*kernel, layer.cin, layer.cout), stride, pads,
+            backend=self.backend, act=act, tile=tile)
 
     def build_plans(self, params: Params) -> Dict[str, DeconvPlan]:
         """Bound plans for every deconv layer — pure (no engine-state
@@ -178,8 +187,10 @@ class SDEngine:
                  f"({len(self._plans)} deconv layers)"]
         for name, plan in self._plans.items():
             kt = -(-plan.kernel[0] // plan.s)
+            tile = (f"tile=(th={plan.tile.th}, tcin={plan.tile.tcin}, "
+                    f"tcout={plan.tile.tcout})"
+                    if plan.tile is not None else "tile=call-time")
             lines.append(
-                f"  {name}: K={plan.kernel[0]} s={plan.s} "
-                f"KT={kt} act={plan.act} tile=(th={plan.tile.th}, "
-                f"tcin={plan.tile.tcin}, tcout={plan.tile.tcout})")
+                f"  {name}: rank={plan.rank} K={plan.kernel[0]} "
+                f"s={plan.s} KT={kt} act={plan.act} {tile}")
         return "\n".join(lines)

@@ -68,7 +68,14 @@ class KernelPlan:
 
 @dataclass(frozen=True)
 class ConvGeom:
-    """Geometry of the executed stride-1 split conv (see module doc)."""
+    """Geometry of the executed stride-1 split conv (see module doc).
+
+    ``ktw``/``sw`` (0 = "same as ``kt``/``s``", the square 2-D default)
+    describe rectangular kernels and per-dim interleave factors — the
+    1-D rank lowering runs a ``(1, KT)`` filter with interleave
+    ``(1, s)`` through the same Pallas kernel.  Square geometries keep
+    their historical cache keys.
+    """
     b: int
     h: int          # padded input rows (Hp)
     w: int          # padded input cols (Wp)
@@ -76,10 +83,15 @@ class ConvGeom:
     cout: int       # oc units (deconv C_out; == conv C_out when s == 1)
     kt: int
     s: int          # interleave factor (1: plain conv kernel)
+    ktw: int = 0    # col-kernel taps (0: square, == kt)
+    sw: int = 0     # col interleave (0: square, == s)
 
     def key(self) -> str:
-        return (f"b{self.b}_h{self.h}w{self.w}_ci{self.cin}"
+        base = (f"b{self.b}_h{self.h}w{self.w}_ci{self.cin}"
                 f"_co{self.cout}_kt{self.kt}_s{self.s}")
+        if self.ktw or self.sw:
+            base += f"_ktw{self.ktw or self.kt}_sw{self.sw or self.s}"
+        return base
 
     @property
     def oh(self) -> int:
@@ -126,10 +138,12 @@ def heuristic_plan(geom: ConvGeom) -> KernelPlan:
     oh = geom.oh
     th = min(_row_tile_options(oh), key=lambda t: (_row_cost(oh, t), -t))
     tcin, tcout = geom.cin, geom.cout
+    kt_area = geom.kt * (geom.ktw or geom.kt)
+    phases = geom.s * (geom.sw or geom.s)
     # Keep the per-step filter block under ~2 MiB f32 so weights + halo +
     # accumulator fit VMEM comfortably: tile the deeper channel axis.
-    while (geom.kt ** 2 * tcin * tcout * geom.s ** 2) * 4 > 2 << 20:
-        if tcin >= tcout * geom.s ** 2 and tcin % 2 == 0:
+    while (kt_area * tcin * tcout * phases) * 4 > 2 << 20:
+        if tcin >= tcout * phases and tcin % 2 == 0:
             tcin //= 2
         elif tcout % 2 == 0:
             tcout //= 2

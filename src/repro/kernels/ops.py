@@ -14,7 +14,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.deconv import (_check_padding, _pads, deconv_output_shape,
+from repro.core.deconv import (_check_output_padding, _check_padding,
+                               _ntuple, _pads, _pads_nd, crop_interleaved,
+                               deconv_output_shape, depth_to_space,
                                sd_geometry, split_filters)
 from . import autotune
 from . import sd_conv as _k
@@ -60,8 +62,9 @@ def sd_conv2d_valid(x: jax.Array, w: jax.Array, th: int | None = None,
     next call instead of being baked in at first trace.
     """
     b, h, wd, cin = x.shape
-    kt, _, _, cout = w.shape
-    plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kt, 1),
+    kth, ktw, _, cout = w.shape
+    plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kth, 1,
+                                  ktw=0 if ktw == kth else ktw),
                          th, tcin, tcout)
     return _sd_conv2d_valid_jit(x, w, plan.th, plan.tcin, plan.tcout)
 
@@ -79,9 +82,10 @@ def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
 
 @functools.partial(jax.jit,
                    static_argnames=("s", "act", "th", "tcin", "tcout"))
-def _sd_deconv_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s: int,
+def _sd_deconv_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s,
                          bias: jax.Array | None, act: str, th: int,
                          tcin: int, tcout: int) -> jax.Array:
+    sh = s if isinstance(s, int) else s[0]
     oh = x.shape[1] - ws_ocmajor.shape[0] + 1
     pad_rows = (-oh) % th
     if pad_rows:
@@ -89,33 +93,38 @@ def _sd_deconv_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s: int,
     y = _k.sd_fused_pallas(x, ws_ocmajor, s, bias=bias, act=act,
                            th=th, tcin=tcin, tcout=tcout,
                            interpret=not _on_tpu())
-    return y[:, :oh * s] if pad_rows else y
+    return y[:, :oh * sh] if pad_rows else y
 
 
-def sd_deconv_fused(x: jax.Array, ws_ocmajor: jax.Array, s: int,
+def sd_deconv_fused(x: jax.Array, ws_ocmajor: jax.Array, s,
                     bias: jax.Array | None = None, act: str = "linear",
                     th: int | None = None, tcin: int | None = None,
                     tcout: int | None = None) -> jax.Array:
     """Fused split-conv + interleave (+ bias/activation epilogue).
 
     x is the P_I-padded input; returns the uncropped interleaved output.
-    Plan lookup is outside jit (see sd_conv2d_valid).
+    ``s`` is an int (square 2-D) or an ``(sh, sw)`` pair (the 1-D
+    lowering).  Plan lookup is outside jit (see sd_conv2d_valid).
     """
+    sh, sw = (s, s) if isinstance(s, int) else (int(s[0]), int(s[1]))
     b, h, wd, cin = x.shape
-    kt = ws_ocmajor.shape[0]
-    cout = ws_ocmajor.shape[-1] // (s * s)
-    plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kt, s),
+    kth, ktw = ws_ocmajor.shape[0], ws_ocmajor.shape[1]
+    cout = ws_ocmajor.shape[-1] // (sh * sw)
+    plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kth, sh,
+                                  ktw=0 if ktw == kth else ktw,
+                                  sw=0 if sw == sh else sw),
                          th, tcin, tcout)
     return _sd_deconv_fused_jit(x, ws_ocmajor, s, bias, act,
                                 plan.th, plan.tcin, plan.tcout)
 
 
 def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
-                             kernel, stride: int, padding=0, *,
+                             kernel, stride, padding=0, *,
+                             output_padding=0,
                              bias: jax.Array | None = None,
                              act: str = "linear",
                              plan: KernelPlan | None = None) -> jax.Array:
-    """Transposed conv from *pre-split* oc-major filters via the fused
+    """2-D transposed conv from *pre-split* oc-major filters via the fused
     Pallas kernel: P_I input pad -> fused conv/interleave/epilogue ->
     P_K + user-padding crop.
 
@@ -123,20 +132,120 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
     folded BN scale), ``bias`` and ``plan`` come from the per-layer plan
     cache, so nothing here touches ``split_filters``.
     """
-    s = int(stride)
+    s = _ntuple(stride, 2)
+    op = _ntuple(output_padding, 2)
     kh, kw = kernel
     _check_padding((kh, kw), padding)
-    (pt, pb), (pl_, pr) = _pads(padding)
-    (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry((kh, kw), (s, s))
-    oh, ow = deconv_output_shape(x.shape[1:3], (kh, kw), s, padding)
+    _check_output_padding(op, s)
+    pads = _pads(padding)
+    (kth, ktw), pk, (pih, piw) = sd_geometry((kh, kw), s)
+    out_space = deconv_output_shape(x.shape[1:3], (kh, kw), s, padding,
+                                    output_padding)
     xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
-    kw_args = dict(bias=bias, act=act)
-    if plan is not None:
-        kw_args.update(th=plan.th, tcin=plan.tcin, tcout=plan.tcout)
-    full = sd_deconv_fused(xp, ws_ocmajor, s, **kw_args)
-    return jax.lax.slice(full, (0, pkh + pt, pkw + pl_, 0),
-                         (full.shape[0], pkh + pt + oh, pkw + pl_ + ow,
-                          full.shape[3]))
+    kw_args = dict(th=plan.th, tcin=plan.tcin, tcout=plan.tcout) \
+        if plan is not None else {}
+    sarg = s[0] if s[0] == s[1] else s
+    # When output_padding reaches past the shuffled support (op > high
+    # crop), crop_interleaved zero-extends AFTER the kernel — so the
+    # in-kernel bias/act epilogue would be missing on those rows.  Run
+    # the epilogue outside the kernel in that (rare) case, like the 3-D
+    # lowering does; the common case keeps the fully fused epilogue.
+    extend = any(opi > hi for (_, hi), opi in zip(pads, op))
+    if not extend:
+        full = sd_deconv_fused(xp, ws_ocmajor, sarg, bias=bias, act=act,
+                               **kw_args)
+        return crop_interleaved(full, pk, pads, out_space)
+    full = sd_deconv_fused(xp, ws_ocmajor, sarg, **kw_args)
+    out = crop_interleaved(full, pk, pads, out_space)
+    out = out.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act == "relu":
+        out = jax.nn.relu(out)
+    elif act == "tanh":
+        out = jnp.tanh(out)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rank lowerings: 1-D and 3-D SD through the same 2-D Pallas kernels.
+# ---------------------------------------------------------------------------
+
+def sd_deconv_presplit_fused_1d(x: jax.Array, ws_ocmajor: jax.Array,
+                                kernel, stride, padding=0, *,
+                                output_padding=0,
+                                bias: jax.Array | None = None,
+                                act: str = "linear",
+                                plan: KernelPlan | None = None
+                                ) -> jax.Array:
+    """1-D SD through the fused kernel, lowered as H=1 2-D.
+
+    x: (B, L, Cin); ws_ocmajor: (KT, Cin, Cout*s) with channel
+    c = oc*s + phase.  The length axis becomes the kernel's width axis
+    (a (1, KT) filter, interleave (1, s)) — same kernel, no wasted MACs.
+    """
+    (k,) = _ntuple(kernel, 1)
+    (s,) = _ntuple(stride, 1)
+    ((lo, hi),) = _pads_nd(padding, 1)
+    (op,) = _ntuple(output_padding, 1)
+    y = sd_deconv_presplit_fused(
+        x[:, None], ws_ocmajor[None], (1, k), (1, s),
+        ((0, 0), (lo, hi)), output_padding=(0, op), bias=bias, act=act,
+        plan=plan)
+    return y[:, 0]
+
+
+def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
+                                kernel, stride, padding=0, *,
+                                output_padding=0,
+                                bias: jax.Array | None = None,
+                                act: str = "linear",
+                                plan: KernelPlan | None = None
+                                ) -> jax.Array:
+    """3-D SD: depth folded into batch for the intra-slice convs.
+
+    x: (B, D, H, W, Cin); ws_nmajor: (KT_d, KT_h, KT_w, Cin, N*Cout)
+    n-major (N = s_d*s_h*s_w).  Each depth tap ``td`` of the split
+    stride-1 conv is an *intra-slice* 2-D conv applied to a shifted band
+    of depth slices — so each tap runs through the 2-D Pallas conv
+    kernel with (B * D_out) as the batch axis, the cross-slice coupling
+    is a plain f32 accumulation over the KT_d taps, and the 3-D
+    interleave + bias/act epilogue falls back to grouped-XLA layout ops
+    (``depth_to_space``).  No new kernels.
+    """
+    s = _ntuple(stride, 3)
+    k = _ntuple(kernel, 3)
+    pads = _pads_nd(padding, 3)
+    op = _ntuple(output_padding, 3)
+    _check_padding(k, padding)
+    _check_output_padding(op, s)
+    (ktd, kth, ktw), pk, pi = sd_geometry(k, s)
+    out_space = deconv_output_shape(x.shape[1:4], k, s, padding,
+                                    output_padding)
+    xp = jnp.pad(x, [(0, 0)] + [(p, p) for p in pi] + [(0, 0)])
+    b, dp, hp, wp, cin = xp.shape
+    od = dp - ktd + 1
+    oh1, ow1 = hp - kth + 1, wp - ktw + 1
+    nco = ws_nmajor.shape[-1]
+    tile = dict(th=plan.th, tcin=plan.tcin, tcout=plan.tcout) \
+        if plan is not None else {}
+    acc = None
+    for td in range(ktd):
+        xs = jax.lax.slice_in_dim(xp, td, td + od, axis=1)
+        xs = xs.reshape(b * od, hp, wp, cin)
+        y2 = sd_conv2d_valid(xs, ws_nmajor[td], **tile)
+        y2 = y2.astype(jnp.float32)
+        acc = y2 if acc is None else acc + y2
+    y = acc.reshape(b, od, oh1, ow1, nco)
+    full = depth_to_space(y, s)
+    out = crop_interleaved(full, pk, pads, out_space)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act == "relu":
+        out = jax.nn.relu(out)
+    elif act == "tanh":
+        out = jnp.tanh(out)
+    return out.astype(x.dtype)
 
 
 def sd_deconv_kernel(x: jax.Array, w: jax.Array, stride: int,

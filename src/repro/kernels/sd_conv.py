@@ -58,16 +58,17 @@ def _apply_act(y: jax.Array, act: str) -> jax.Array:
     raise ValueError(f"unknown act {act!r}")
 
 
-def _conv_partial(x, w, *, kt: int, th: int, ow: int) -> jax.Array:
-    """K_T^2 MXU matmuls over one (row-band, cin-tile, cout-tile) block.
+def _conv_partial(x, w, *, kth: int, ktw: int, th: int, ow: int) -> jax.Array:
+    """K_T_h*K_T_w MXU matmuls over one (row-band, cin-tile, cout-tile)
+    block.
 
-    x: (TH+KT-1, OW+KT-1, TCin); w: (KT, KT, TCin, TC).
+    x: (TH+KTh-1, OW+KTw-1, TCin); w: (KTh, KTw, TCin, TC).
     Returns the f32 partial sum of shape (TH*OW, TC).
     """
     tcin = x.shape[-1]
     acc = jnp.zeros((th * ow, w.shape[-1]), jnp.float32)
-    for kh in range(kt):
-        for kw in range(kt):
+    for kh in range(kth):
+        for kw in range(ktw):
             patch = x[kh:kh + th, kw:kw + ow, :].reshape(th * ow, tcin)
             acc += jnp.dot(patch.astype(jnp.float32),
                            w[kh, kw].astype(jnp.float32),
@@ -75,8 +76,8 @@ def _conv_partial(x, w, *, kt: int, th: int, ow: int) -> jax.Array:
     return acc
 
 
-def _sd_conv_body(x_ref, w_ref, o_ref, acc_ref, *, kt: int, th: int,
-                  ow: int):
+def _sd_conv_body(x_ref, w_ref, o_ref, acc_ref, *, kth: int, ktw: int,
+                  th: int, ow: int):
     """One (batch, row-tile, cout-tile, cin-tile) grid step."""
     ci = pl.program_id(3)
 
@@ -84,7 +85,8 @@ def _sd_conv_body(x_ref, w_ref, o_ref, acc_ref, *, kt: int, th: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kt=kt, th=th, ow=ow)
+    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kth=kth, ktw=ktw,
+                                  th=th, ow=ow)
 
     @pl.when(ci == pl.num_programs(3) - 1)
     def _write():
@@ -94,31 +96,33 @@ def _sd_conv_body(x_ref, w_ref, o_ref, acc_ref, *, kt: int, th: int,
 def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
                    tcout: int | None = None, tcin: int | None = None,
                    interpret: bool = True) -> jax.Array:
-    """Stride-1 VALID conv via Pallas. x: (B,Hp,Wp,Cin); w: (KT,KT,Cin,Co).
+    """Stride-1 VALID conv via Pallas. x: (B,Hp,Wp,Cin); w: (KTh,KTw,Cin,Co).
 
-    Caller guarantees: Hp  = n*th + KT - 1 for integer n (see ops.py pad).
-    Output: (B, Hp-KT+1, Wp-KT+1, Co).
+    The kernel may be rectangular (KTh != KTw) — this is what lets the
+    1-D rank lowering run an (1, KT) filter through the same kernel.
+    Caller guarantees: Hp  = n*th + KTh - 1 for integer n (see ops.py pad).
+    Output: (B, Hp-KTh+1, Wp-KTw+1, Co).
     """
     b, hp, wp, cin = x.shape
-    kt, _, _, cout = w.shape
-    oh, ow = hp - kt + 1, wp - kt + 1
+    kth, ktw, _, cout = w.shape
+    oh, ow = hp - kth + 1, wp - ktw + 1
     assert oh % th == 0, (oh, th)
     tcout = tcout or cout
     tcin = tcin or cin
     assert cout % tcout == 0 and cin % tcin == 0
 
     grid = (b, oh // th, cout // tcout, cin // tcin)
-    body = functools.partial(_sd_conv_body, kt=kt, th=th, ow=ow)
+    body = functools.partial(_sd_conv_body, kth=kth, ktw=ktw, th=th, ow=ow)
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
             # Unblocked: the index map returns *element* offsets, which is
-            # what lets consecutive row bands overlap by the (KT-1) halo.
-            pl.BlockSpec((1, th + kt - 1, wp, tcin),
+            # what lets consecutive row bands overlap by the (KTh-1) halo.
+            pl.BlockSpec((1, th + kth - 1, wp, tcin),
                          lambda bi, i, j, ci: (bi, i * th, 0, ci * tcin),
                          indexing_mode=pl.unblocked),
-            pl.BlockSpec((kt, kt, tcin, tcout),
+            pl.BlockSpec((kth, ktw, tcin, tcout),
                          lambda bi, i, j, ci: (0, 0, ci, j)),
         ],
         out_specs=pl.BlockSpec((1, th, ow, tcout),
@@ -130,15 +134,16 @@ def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
     )(x, w)
 
 
-def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kt: int, th: int,
-                   ow: int, s: int, act: str):
+def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kth: int,
+                   ktw: int, th: int, ow: int, sh: int, sw: int, act: str):
     """Conv + in-VMEM stride-s interleave (the paper's strided write).
 
-    w_ref holds oc-major split filters: channel c = oc*s^2 + (py*s + px),
-    sliced to one TCout tile (TCout*s^2 phase channels).  The epilogue at
-    the last cin tile interleaves the s^2 phases, adds the per-oc bias and
-    applies the activation before the single output write — the deconv
-    tile leaves VMEM finished.
+    w_ref holds oc-major split filters: channel c = oc*sh*sw +
+    (py*sw + px), sliced to one TCout tile (TCout*sh*sw phase channels).
+    The epilogue at the last cin tile interleaves the sh*sw phases, adds
+    the per-oc bias and applies the activation before the single output
+    write — the deconv tile leaves VMEM finished.  ``sh == 1`` is the
+    1-D rank lowering (interleave along width only).
     """
     ci = pl.program_id(3)
 
@@ -146,36 +151,41 @@ def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kt: int, th: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kt=kt, th=th, ow=ow)
+    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kth=kth, ktw=ktw,
+                                  th=th, ow=ow)
 
     @pl.when(ci == pl.num_programs(3) - 1)
     def _epilogue():
-        cphase = acc_ref.shape[-1]                 # TCout * s^2
-        tc = cphase // (s * s)
-        y = acc_ref[...].reshape(th, ow, tc, s, s)  # c -> (oc, py, px)
+        cphase = acc_ref.shape[-1]                 # TCout * sh*sw
+        tc = cphase // (sh * sw)
+        y = acc_ref[...].reshape(th, ow, tc, sh, sw)  # c -> (oc, py, px)
         y = y.transpose(0, 3, 1, 4, 2)              # (th, py, ow, px, oc)
-        y = y.reshape(th * s, ow * s, tc)
+        y = y.reshape(th * sh, ow * sw, tc)
         y = y + b_ref[0].astype(jnp.float32)        # per-oc bias
         o_ref[0] = _apply_act(y, act).astype(o_ref.dtype)
 
 
-def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s: int, *,
+def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
                     bias: jax.Array | None = None, act: str = "linear",
                     th: int = 8, tcout: int | None = None,
                     tcin: int | None = None,
                     interpret: bool = True) -> jax.Array:
     """Fused SD: split-filter conv + interleaved (pixel-shuffled) write.
 
-    x:  (B, Hp, Wp, Cin) with Hp = n*th + KT - 1
-    ws_ocmajor: (KT, KT, Cin, Cout*s*s), channel c = oc*s^2 + phase
+    x:  (B, Hp, Wp, Cin) with Hp = n*th + KTh - 1
+    ws_ocmajor: (KTh, KTw, Cin, Cout*sh*sw), channel c = oc*sh*sw + phase
+    s:  interleave factor — an int (square, the 2-D path) or an
+        ``(sh, sw)`` pair (the 1-D lowering passes ``(1, s)``).
     bias: (Cout,) added per output channel in the epilogue (folded-BN
           beta); ``act`` in {"linear", "relu", "tanh"} applied after.
-    returns (B, s*(Hp-KT+1), s*(Wp-KT+1), Cout) — uncropped deconv output.
+    returns (B, sh*(Hp-KTh+1), sw*(Wp-KTw+1), Cout) — uncropped deconv
+    output.
     """
+    sh, sw = (s, s) if isinstance(s, int) else (int(s[0]), int(s[1]))
     b, hp, wp, cin = x.shape
-    kt = ws_ocmajor.shape[0]
-    cout = ws_ocmajor.shape[-1] // (s * s)
-    oh, ow = hp - kt + 1, wp - kt + 1
+    kth, ktw = ws_ocmajor.shape[0], ws_ocmajor.shape[1]
+    cout = ws_ocmajor.shape[-1] // (sh * sw)
+    oh, ow = hp - kth + 1, wp - ktw + 1
     assert oh % th == 0, (oh, th)
     tcout = tcout or cout
     tcin = tcin or cin
@@ -185,23 +195,24 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s: int, *,
     bias2d = bias.astype(jnp.float32).reshape(1, cout)
 
     grid = (b, oh // th, cout // tcout, cin // tcin)
-    body = functools.partial(_sd_fused_body, kt=kt, th=th, ow=ow, s=s,
-                             act=act)
-    ss = s * s
+    body = functools.partial(_sd_fused_body, kth=kth, ktw=ktw, th=th,
+                             ow=ow, sh=sh, sw=sw, act=act)
+    ss = sh * sw
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, th + kt - 1, wp, tcin),
+            pl.BlockSpec((1, th + kth - 1, wp, tcin),
                          lambda bi, i, j, ci: (bi, i * th, 0, ci * tcin),
                          indexing_mode=pl.unblocked),
-            pl.BlockSpec((kt, kt, tcin, tcout * ss),
+            pl.BlockSpec((kth, ktw, tcin, tcout * ss),
                          lambda bi, i, j, ci: (0, 0, ci, j)),
             pl.BlockSpec((1, tcout), lambda bi, i, j, ci: (0, j)),
         ],
-        out_specs=pl.BlockSpec((1, th * s, ow * s, tcout),
+        out_specs=pl.BlockSpec((1, th * sh, ow * sw, tcout),
                                lambda bi, i, j, ci: (bi, i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, oh * s, ow * s, cout), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, oh * sh, ow * sw, cout),
+                                       x.dtype),
         scratch_shapes=[pltpu.VMEM((th * ow, tcout * ss), jnp.float32)],
         compiler_params=_compiler_params(3, 1),
         interpret=interpret,

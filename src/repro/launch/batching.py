@@ -19,13 +19,27 @@ from typing import Callable, List, Sequence, Tuple, TypeVar
 T = TypeVar("T")
 
 
+def pow2_floor(n: int) -> int:
+    """Largest power of two <= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"pow2_floor needs n >= 1, got {n}")
+    b = 1
+    while b * 2 <= n:
+        b *= 2
+    return b
+
+
 def pow2_bucket(n: int, max_bucket: int | None = None) -> int:
-    """Smallest power of two >= n, capped at ``max_bucket`` (the cap
-    itself is returned when smaller, even if not a power of two).
+    """Smallest power of two >= n, capped at ``pow2_floor(max_bucket)``.
 
     The compile-cache key for a padded batch: every request count maps
     to one of log2(max) shapes, so a serving process compiles each
-    (arch, bucket, dtype) cell at most once.
+    (arch, bucket, dtype) cell at most once.  The cap is clamped DOWN
+    to a power of two before use — a non-pow2 ``max_bucket`` used to be
+    returned verbatim for large ``n``, leaking one extra non-pow2 shape
+    into the compile cache (and breaking the closed-set invariant the
+    servers rely on).  Callers must therefore cap their *group* sizes
+    at ``pow2_floor(max_bucket)`` too (see ``serve_gen.GenServer``).
     """
     if n < 1:
         raise ValueError(f"bucket size for n={n}")
@@ -33,7 +47,7 @@ def pow2_bucket(n: int, max_bucket: int | None = None) -> int:
     while b < n:
         b *= 2
     if max_bucket is not None:
-        b = min(b, max_bucket)
+        b = min(b, pow2_floor(max_bucket))
     return b
 
 

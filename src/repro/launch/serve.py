@@ -26,13 +26,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get
-from repro.launch.batching import pow2_bucket, take_group
+from repro.launch.batching import pow2_bucket, pow2_floor, take_group
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.lm import build_lm
 
 
 def serve(cfg, prompts: List[List[int]], max_new: int = 16,
           slots: int = 4, max_len: int = 128):
+    # slots is both the group-size cap and the bucket cap; pow2_bucket
+    # clamps caps to a power of two, so clamp the group size with it or
+    # a 5-slot group would overflow its 4-wide bucket.
+    slots = pow2_floor(max(1, slots))
     lm = build_lm(cfg)
     params = lm.init(jax.random.PRNGKey(0))
     prefill = jax.jit(make_prefill_step(lm))

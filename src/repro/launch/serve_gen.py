@@ -34,12 +34,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.accounting import BENCHMARKS, LayerSpec, NetworkSpec
-from repro.launch.batching import pow2_bucket, take_group
+from repro.core.accounting import WORKLOADS, LayerSpec, NetworkSpec
+from repro.launch.batching import pow2_bucket, pow2_floor, take_group
 from repro.launch.mesh import make_dev_mesh
 from repro.models.generative import GenerativeModel
 
-ALL_NETS = ("dcgan", "sngan", "artgan", "gpgan", "mde", "fst")
+ALL_NETS = ("dcgan", "sngan", "artgan", "gpgan", "mde", "fst",
+            "wavegan", "voxgan", "segnet")
 
 
 @dataclass
@@ -59,6 +60,34 @@ def reduced_spec() -> NetworkSpec:
     ])
 
 
+def reduced_specs() -> Dict[str, NetworkSpec]:
+    """One tiny spec per workload family (2-D image, 1-D audio, 3-D
+    voxel, 2-D segmentation decoder) so --dryrun smokes the whole rank
+    space end to end."""
+    return {
+        "dcgan-dryrun": reduced_spec(),
+        "wavegan-dryrun": NetworkSpec("WaveGAN-dryrun", [
+            LayerSpec("fc", 8, 8 * 8, name="project"),
+            LayerSpec("deconv", 8, 4, k=9, s=2, in_hw=(8,), name="up1"),
+            LayerSpec("deconv", 4, 1, k=9, s=2, in_hw=(16,),
+                      name="to_audio"),
+        ]),
+        "voxgan-dryrun": NetworkSpec("VoxGAN-dryrun", [
+            LayerSpec("fc", 8, 2 ** 3 * 8, name="project"),
+            LayerSpec("deconv", 8, 4, k=4, s=2, in_hw=(2, 2, 2),
+                      name="up1"),
+            LayerSpec("deconv", 4, 1, k=4, s=2, in_hw=(4, 4, 4),
+                      name="to_vox"),
+        ]),
+        "segnet-dryrun": NetworkSpec("SegNet-dryrun", [
+            LayerSpec("conv", 3, 8, k=3, s=2, in_hw=(8, 8), name="e1"),
+            LayerSpec("deconv", 8, 4, k=4, s=2, in_hw=(4, 4), name="d1"),
+            LayerSpec("conv", 4, 3, k=3, s=1, in_hw=(8, 8),
+                      name="logits"),
+        ], final_tanh=False),
+    }
+
+
 class GenServer:
     """Slot-based batched generative inference service on SDEngine."""
 
@@ -68,18 +97,18 @@ class GenServer:
                  specs: Optional[Dict[str, NetworkSpec]] = None):
         self.dtype = jnp.dtype(dtype)
         self.backend = backend
-        self.max_batch = int(max_batch)
+        # The cap is ALSO the group-size bound, so it must itself be a
+        # power of two or pow2_bucket's clamped cap would fall below a
+        # full group and run_group would feed a mis-sized batch to the
+        # compiled cell — clamp once here (regression: non-pow2 caps
+        # used to leak non-pow2 bucket shapes into the compile cache).
+        self.max_batch = pow2_floor(max(1, int(max_batch)))
         self.dp = int(dp)
-        if self.dp > 1:
-            # keep every bucket <= max_batch AND % dp == 0: round the
-            # cap down to a dp multiple (never below one shard each)
-            self.max_batch = max(self.dp,
-                                 (self.max_batch // self.dp) * self.dp)
         self.seed = seed
         self._specs = dict(specs or {})
         for n in nets:
             if n not in self._specs:
-                self._specs[n] = BENCHMARKS[n]()
+                self._specs[n] = WORKLOADS[n]()
         self._models: Dict[str, Tuple[GenerativeModel, Any]] = {}
         self._serving: Dict[str, Tuple[Any, Any, Any]] = {}
         self._compiled: Dict[Tuple[str, int, str], Any] = {}
@@ -99,6 +128,7 @@ class GenServer:
         """Bound (model, params) per net: the engine presplits here,
         exactly once per server lifetime."""
         if net not in self._models:
+            # head semantics ride on the spec (NetworkSpec.final_tanh)
             m = GenerativeModel(self._specs[net], deconv_impl="sd_kernel",
                                 engine_backend=self.backend)
             params = m.init(jax.random.PRNGKey(self.seed),
@@ -125,8 +155,9 @@ class GenServer:
     def bucket(self, n: int) -> int:
         b = pow2_bucket(n, self.max_batch)
         if self.dp > 1:
-            # shard_map needs batch % dp == 0 (dp and max_batch are not
-            # required to be powers of two): round up to a dp multiple.
+            # shard_map needs batch % dp == 0 (dp need not be a power
+            # of two): round the pow2 bucket up to a dp multiple.  The
+            # closed set stays {dp-roundups of the pow2 ladder}.
             b = -(-max(b, self.dp) // self.dp) * self.dp
         return b
 
@@ -221,8 +252,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.dryrun:
-        nets = ["dcgan-dryrun"]
-        specs = {"dcgan-dryrun": reduced_spec()}
+        specs = reduced_specs()
+        nets = sorted(specs)
         n_requests = 2
     else:
         nets = args.nets.split(",")

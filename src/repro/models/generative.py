@@ -30,8 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conv2d, registry, same_deconv_pads
-from repro.core.accounting import BENCHMARKS, NetworkSpec
+from repro.core import conv_nd, registry, same_deconv_pads
+from repro.core.accounting import BENCHMARKS, WORKLOADS, NetworkSpec
 from repro import sd
 
 Params = Dict[str, Any]
@@ -41,8 +41,11 @@ class GenerativeModel:
     """Spec-driven generator/decoder network."""
 
     def __init__(self, spec: NetworkSpec, deconv_impl: str = "sd",
-                 final_tanh: bool = True, engine_backend: str = "auto"):
+                 final_tanh: Optional[bool] = None,
+                 engine_backend: str = "auto"):
         self.spec = spec
+        if final_tanh is None:          # head semantics live on the spec
+            final_tanh = spec.final_tanh
         self.deconv_impl = deconv_impl
         info = registry.get_impl(deconv_impl)
         if info.engine:
@@ -68,9 +71,10 @@ class GenerativeModel:
                     "w": w / math.sqrt(fan_in),
                     "b": jnp.zeros((layer.cout,), dtype)}
             else:
-                fan_in = layer.k * layer.k * layer.cin
+                fan_in = layer.k ** layer.rank * layer.cin
                 w = jax.random.normal(
-                    k, (layer.k, layer.k, layer.cin, layer.cout), dtype)
+                    k, (*(layer.k,) * layer.rank, layer.cin, layer.cout),
+                    dtype)
                 params[layer.name] = {
                     "w": w / math.sqrt(fan_in),
                     "b": jnp.zeros((layer.cout,), dtype),
@@ -124,14 +128,13 @@ class GenerativeModel:
             if layer.kind == "fc":
                 h = h.reshape(h.shape[0], -1)
                 h = h @ p["w"] + p["b"]
-                # reshape for the next spatial layer
+                # reshape for the next spatial layer (any rank)
                 nxt = layers[i + 1] if i + 1 < len(layers) else None
                 if nxt is not None and nxt.kind != "fc":
-                    hh, ww = nxt.in_hw
-                    h = h.reshape(h.shape[0], hh, ww, nxt.cin)
+                    h = h.reshape(h.shape[0], *nxt.in_hw, nxt.cin)
             elif layer.kind == "conv":
                 pads = "SAME" if layer.padding == "same" else layer.pad
-                h = conv2d(h, p["w"], layer.s, pads)
+                h = conv_nd(h, p["w"], layer.s, pads)
                 h = h * p["scale"] + p["b"]
             else:                        # deconv: strategy-dependent
                 h, epilogue_done = deconv_step(layer, p, h)
@@ -154,7 +157,8 @@ class GenerativeModel:
                 return h * p["scale"] + p["b"], False
         else:                            # plain registry executor
             def step(layer, p, h):
-                pads = (same_deconv_pads(layer.k, layer.s)
+                pads = (same_deconv_pads((layer.k,) * layer.rank,
+                                         (layer.s,) * layer.rank)
                         if layer.padding == "same" else layer.pad)
                 h = self._deconv(h, p["w"], layer.s, pads)
                 return h * p["scale"] + p["b"], False
@@ -197,9 +201,14 @@ class GenerativeModel:
 
 def build(name: str, deconv_impl: str = "sd",
           engine_backend: str = "auto") -> GenerativeModel:
-    """Factory: build('dcgan', 'sd').  ``engine_backend`` only matters
+    """Factory: build('dcgan', 'sd') — any :data:`repro.core.accounting.
+    WORKLOADS` entry (the paper's six 2-D nets plus the 1-D audio, 3-D
+    voxel and segmentation workloads).  ``engine_backend`` only matters
     for engine impls (see :class:`repro.engine.SDEngine`)."""
-    return GenerativeModel(BENCHMARKS[name](), deconv_impl=deconv_impl,
+    if name not in WORKLOADS:
+        raise ValueError(f"unknown workload {name!r}; choose from "
+                         f"{sorted(WORKLOADS)}")
+    return GenerativeModel(WORKLOADS[name](), deconv_impl=deconv_impl,
                            engine_backend=engine_backend)
 
 
@@ -235,7 +244,7 @@ class DCGANDiscriminator:
         h = x
         for i in range(len(self.CHANNELS) - 1):
             p = params[f"c{i}"]
-            h = conv2d(h, p["w"], 2, "SAME") + p["b"]
+            h = conv_nd(h, p["w"], 2, "SAME") + p["b"]
             h = jax.nn.leaky_relu(h, 0.2)
         h = h.reshape(h.shape[0], -1)
         return h @ params["head"]["w"] + params["head"]["b"]

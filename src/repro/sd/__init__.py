@@ -18,8 +18,8 @@ stack passes bound plans through ``jit`` as arguments.
 
 from .compat import clear_plan_cache, functional_deconv, plan_for
 from .functional import conv_transpose, execute, split_weights
-from .plan import (BACKENDS, DeconvPlan, plan, resolve_backend, to_ocmajor,
-                   unsplit_filters)
+from .plan import (BACKENDS, DeconvPlan, plan, resolve_backend,
+                   to_ocmajor, unsplit_filters)
 
 __all__ = [
     "BACKENDS", "DeconvPlan", "plan", "resolve_backend", "to_ocmajor",
@@ -88,5 +88,24 @@ def selfcheck(verbose: bool = False) -> None:
                                    stride)),
         np.asarray(w), rtol=0, atol=0)
 
+    # rank generality: 1-D and 3-D forward + grad parity vs native, and
+    # output_padding expressing the odd output size (9 -> 19 at s=2).
+    for shape_x, shape_w, st in (((2, 9, 3), (5, 3, 2), 2),
+                                 ((1, 3, 4, 5, 2), (3, 3, 3, 2, 2), 2)):
+        xn = jnp.asarray(rng.randn(*shape_x), jnp.float32)
+        wn = jnp.asarray(rng.randn(*shape_w), jnp.float32)
+        pn = plan(wn.shape, st, 1, output_padding=1)
+        ref_n = native_deconv(xn, wn, st, 1, output_padding=1)
+        np.testing.assert_allclose(
+            np.asarray(conv_transpose(pn, xn, wn)), np.asarray(ref_n),
+            rtol=1e-4, atol=1e-4)
+        g_n = jax.grad(lambda ww: jnp.sum(
+            conv_transpose(pn, xn, ww) ** 2))(wn)
+        g_ref = jax.grad(lambda ww: jnp.sum(
+            native_deconv(xn, ww, st, 1, output_padding=1) ** 2))(wn)
+        np.testing.assert_allclose(np.asarray(g_n), np.asarray(g_ref),
+                                   rtol=1e-4, atol=1e-4)
+
     if verbose:
-        print("repro.sd selfcheck: conv_transpose/grad/pytree/execute OK")
+        print("repro.sd selfcheck: conv_transpose/grad/pytree/execute/"
+              "N-D OK")

@@ -28,7 +28,7 @@ from typing import Dict, Tuple
 
 import jax
 
-from repro.core.deconv import _pads, _pair
+from repro.core.deconv import _ntuple, _pads_nd
 from .functional import conv_transpose
 from .plan import DeconvPlan, plan as make_plan, resolve_backend
 
@@ -36,26 +36,31 @@ _PLAN_CACHE: Dict[Tuple, DeconvPlan] = {}
 
 
 def plan_for(filter_shape, stride, padding=0,
-             backend: str = "auto") -> DeconvPlan:
-    """Geometry-plan cache keyed on static call data.  Trace-safe: the
-    key is shapes/ints/strings only and the cached value holds no
-    arrays."""
+             backend: str = "auto", output_padding=0) -> DeconvPlan:
+    """Geometry-plan cache keyed on static call data, any rank (the
+    rank is ``len(filter_shape) - 2``).  Trace-safe: the key is
+    shapes/ints/strings only and the cached value holds no arrays."""
     resolved = resolve_backend(backend)
-    key = (tuple(int(d) for d in filter_shape), _pair(stride),
-           _pads(padding), resolved)
+    rank = len(tuple(filter_shape)) - 2
+    key = (tuple(int(d) for d in filter_shape), _ntuple(stride, rank),
+           _pads_nd(padding, rank), _ntuple(output_padding, rank),
+           resolved)
     if key not in _PLAN_CACHE:
         _PLAN_CACHE[key] = make_plan(filter_shape, stride, padding,
-                                     backend=resolved)
+                                     backend=resolved,
+                                     output_padding=output_padding)
     return _PLAN_CACHE[key]
 
 
 def functional_deconv(x: jax.Array, w: jax.Array, stride,
-                      padding=0, *, backend: str = "auto") -> jax.Array:
+                      padding=0, *, backend: str = "auto",
+                      output_padding=0) -> jax.Array:
     """``fn(x, w, stride, padding)`` adapter over
     :func:`repro.sd.conv_transpose` — differentiable, jit-composable,
-    Pallas-fused on TPU and grouped-XLA elsewhere."""
-    return conv_transpose(plan_for(w.shape, stride, padding, backend),
-                          x, w)
+    Pallas-fused on TPU and grouped-XLA elsewhere, rank-polymorphic
+    like the core executors."""
+    return conv_transpose(plan_for(w.shape, stride, padding, backend,
+                                   output_padding), x, w)
 
 
 def clear_plan_cache() -> None:

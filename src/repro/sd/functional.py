@@ -34,17 +34,36 @@ from .plan import DeconvPlan, to_ocmajor
 def _run_presplit(plan: DeconvPlan, x: jax.Array, ws: jax.Array,
                   layout: str, bias: Optional[jax.Array],
                   act: str) -> jax.Array:
-    """Dispatch pre-split filters to the plan's execution backend."""
+    """Dispatch pre-split filters to the plan's execution backend,
+    any rank: the fused Pallas kernel for ranks 1-2 (1-D lowers as H=1
+    2-D), the depth-folded Pallas + grouped-XLA interleave for rank 3,
+    and the grouped-XLA conv + pixel-shuffle for the xla backend."""
     if plan.backend == "fused":
         from repro.kernels import ops                 # lazy: pulls Pallas
-        ws_oc = ws if layout == "ocmajor" else to_ocmajor(ws, plan.s)
+        if plan.rank == 3:
+            # depth-into-batch Pallas convs + grouped-XLA interleave;
+            # consumes n-major filters like the XLA path.
+            ws_n = ws if layout == "nmajor" else None
+            assert ws_n is not None, "3-D fused lowering is n-major"
+            return ops.sd_deconv_presplit_fused_3d(
+                x, ws_n, plan.kernel, plan.stride, plan.padding,
+                output_padding=plan.output_padding, bias=bias, act=act,
+                plan=plan.tile)
+        ws_oc = ws if layout == "ocmajor" else to_ocmajor(ws, plan.stride)
+        if plan.rank == 1:
+            return ops.sd_deconv_presplit_fused_1d(
+                x, ws_oc, plan.kernel, plan.stride, plan.padding,
+                output_padding=plan.output_padding, bias=bias, act=act,
+                plan=plan.tile)
         return ops.sd_deconv_presplit_fused(
-            x, ws_oc, plan.kernel, plan.s, plan.padding,
+            x, ws_oc, plan.kernel, plan.stride, plan.padding,
+            output_padding=plan.output_padding,
             bias=bias, act=act, plan=plan.tile)
     ws_n = ws if layout == "nmajor" else None
     assert ws_n is not None, "xla backend consumes n-major filters"
     y = sd_deconv_presplit(x, ws_n.astype(x.dtype), plan.kernel,
-                           plan.stride, plan.padding)
+                           plan.stride, plan.padding,
+                           output_padding=plan.output_padding)
     if bias is not None:
         y = y + bias.astype(y.dtype)
     if act == "relu":
@@ -93,8 +112,10 @@ def _bwd(plan, res, dy):
     dx, dw = _grad.conv_transpose_vjp(plan, x, w, dy)
     # f32 accumulation for the bias reduction (bf16 partial sums drift);
     # cast to the bias primal's dtype like dx/dw — an f32 bias under
-    # bf16 activations must get an f32 cotangent back.
-    db = (jnp.sum(dy.astype(jnp.float32), axis=(0, 1, 2)).astype(b.dtype)
+    # bf16 activations must get an f32 cotangent back.  Reduce over the
+    # batch + every spatial axis (rank-generic).
+    db = (jnp.sum(dy.astype(jnp.float32),
+                  axis=tuple(range(dy.ndim - 1))).astype(b.dtype)
           if b is not None else None)
     return dx, dw, db
 

@@ -5,18 +5,21 @@ when its forward runs through the fused Pallas kernel (which has no
 autodiff rule): the ``custom_vjp`` backward never differentiates the
 forward — it *is* the paper's transform applied to the adjoint problem,
 and every compute-heavy step is a dense stride-1 convolution, i.e. the
-same op class the paper keeps the processor on.
+same op class the paper keeps the processor on.  Everything below is
+rank-polymorphic (1-D/2-D/3-D), like the forward.
 
 Derivation.  The forward (``core.sd_deconv_presplit``) is
 
     xp  = pad(x, P_I)                                    (static zeros)
     y1  = conv_valid(xp, ws)          ws = split_filters(w)   [the GEMM]
     ps  = depth_to_space(y1)                              (permutation)
-    y   = crop(ps, P_K + user padding) (+ b)
+    y   = crop(ps, P_K + user padding, + output_padding) (+ b)
 
 Each step is linear, so the VJP is the chain of adjoints, right to left:
 
-* crop^T      — zero-embed the cotangent ``dy`` back into the ps array;
+* crop^T      — zero-embed the cotangent ``dy`` back into the ps array
+                (output_padding rows past the shuffled support were
+                zeros in the forward: their cotangent is dropped);
 * d2s^T       — ``space_to_depth`` (d2s is a permutation);
 * conv^T(x)   — the input grad of a stride-1 VALID correlation: a FULL
                 stride-1 conv of ``dy1`` with the split filters rotated
@@ -24,7 +27,7 @@ Each step is linear, so the VJP is the chain of adjoints, right to left:
 * conv^T(w)   — the filter grad: a stride-1 VALID conv with batch and
                 channel axes exchanged (``xp`` as lhs feature maps,
                 ``dy1`` as the filter bank);
-* split^T     — :func:`repro.sd.plan.unsplit_filters` (inverse
+* split^T     — :func:`repro.core.deconv.unsplit_filters` (inverse
                 permutation + crop of the expansion zeros) maps the
                 split-layout filter grad onto the original ``w``;
 * pad^T       — crop the ``P_I`` halo off the input grad.
@@ -38,31 +41,36 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.deconv import (_pads, sd_geometry, space_to_depth,
-                               split_filters)
-from .plan import DeconvPlan, unsplit_filters
+from repro.core.deconv import (conv_dimension_numbers, sd_geometry,
+                               space_to_depth, split_filters,
+                               unsplit_filters)
+from .plan import DeconvPlan
 
 
 def _conv_valid_input_grad(dy1: jax.Array, ws: jax.Array) -> jax.Array:
     """VJP of ``y1 = conv_valid_stride1(xp, ws)`` w.r.t. ``xp``: a FULL
     stride-1 conv with the spatially-rotated, channel-swapped filters."""
-    kth, ktw = ws.shape[0], ws.shape[1]
-    w_t = ws[::-1, ::-1].transpose(0, 1, 3, 2)     # rot180, swap ic/oc
+    rank = dy1.ndim - 2
+    kt = ws.shape[:rank]
+    w_t = ws[tuple(slice(None, None, -1) for _ in range(rank))]
+    w_t = jnp.swapaxes(w_t, -1, -2)                # rot180, swap ic/oc
     return lax.conv_general_dilated(
-        dy1, w_t, window_strides=(1, 1),
-        padding=[(kth - 1, kth - 1), (ktw - 1, ktw - 1)],
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dy1, w_t, window_strides=(1,) * rank,
+        padding=[(kti - 1, kti - 1) for kti in kt],
+        dimension_numbers=conv_dimension_numbers(rank))
 
 
 def _conv_valid_filter_grad(xp: jax.Array, dy1: jax.Array) -> jax.Array:
     """VJP of ``y1 = conv_valid_stride1(xp, ws)`` w.r.t. ``ws``: a VALID
     stride-1 conv treating channels as batch and batch as channels."""
-    lhs = xp.transpose(3, 1, 2, 0)                 # (Cin, Hp, Wp, B)
-    rhs = dy1.transpose(1, 2, 0, 3)                # (Oh1, Ow1, B, s^2*Co)
+    rank = xp.ndim - 2
+    spatial = tuple(range(1, rank + 1))
+    lhs = xp.transpose((rank + 1,) + spatial + (0,))   # (Cin, *Sp, B)
+    rhs = dy1.transpose(spatial + (0, rank + 1))       # (*O1, B, N*Co)
     out = lax.conv_general_dilated(
-        lhs, rhs, window_strides=(1, 1), padding="VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return out.transpose(1, 2, 0, 3)               # (KT, KT, Cin, s^2*Co)
+        lhs, rhs, window_strides=(1,) * rank, padding="VALID",
+        dimension_numbers=conv_dimension_numbers(rank))
+    return out.transpose(spatial + (0, rank + 1))      # (*KT, Cin, N*Co)
 
 
 def conv_transpose_vjp(plan: DeconvPlan, x: jax.Array, w: jax.Array,
@@ -74,21 +82,33 @@ def conv_transpose_vjp(plan: DeconvPlan, x: jax.Array, w: jax.Array,
     ``K_T``-tap stride-1 geometry, so the backward enjoys the same
     no-inserted-zeros property as the forward.
     """
-    (pt, pb), (pl, pr) = _pads(plan.padding)
-    (kth, ktw), (pkh, pkw), (pih, piw) = sd_geometry(plan.kernel,
-                                                     plan.stride)
-    h, wd = x.shape[1], x.shape[2]
+    rank = plan.rank
+    kt, pk, pi = sd_geometry(plan.kernel, plan.stride)
+    space = x.shape[1:1 + rank]
     ws = split_filters(w, plan.stride)
 
-    # crop^T: embed dy at offset (P_K + top/left crop); the bottom/right
-    # margins are exactly the bottom/right crops (see sd_deconv_presplit).
-    dps = jnp.pad(dy, ((0, 0), (pkh + pt, pb), (pkw + pl, pr), (0, 0)))
+    # crop^T: embed dy at offset (P_K + low crop); the trailing margin
+    # per dim is (high crop - output_padding).  When output_padding grew
+    # past the shuffled support (op > hi) the forward zero-extended —
+    # drop those rows' cotangent before embedding.
+    pad_cfg = [(0, 0)]
+    for i, ((lo, hi), opi) in enumerate(zip(plan.padding,
+                                            plan.output_padding)):
+        trail = hi - opi
+        if trail < 0:
+            dy = lax.slice_in_dim(dy, 0, dy.shape[1 + i] + trail,
+                                  axis=1 + i)
+            trail = 0
+        pad_cfg.append((pk[i] + lo, trail))
+    pad_cfg.append((0, 0))
+    dps = jnp.pad(dy, pad_cfg)
     dy1 = space_to_depth(dps, plan.stride)         # d2s^T
 
     dxp = _conv_valid_input_grad(dy1, ws.astype(dy1.dtype))
-    dx = dxp[:, pih:pih + h, piw:piw + wd, :]      # pad^T
+    dx = dxp[(slice(None),)                        # pad^T
+             + tuple(slice(p, p + n) for p, n in zip(pi, space))]
 
-    xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
+    xp = jnp.pad(x, [(0, 0)] + [(p, p) for p in pi] + [(0, 0)])
     dws = _conv_valid_filter_grad(xp, dy1)
     dw = unsplit_filters(dws, plan.kernel, plan.stride)    # split^T
     return dx.astype(x.dtype), dw.astype(w.dtype)

@@ -1,15 +1,17 @@
 """DeconvPlan: the split-deconvolution layout as a jit-crossable pytree.
 
 The paper's transform has two halves: a *static* geometry (how a
-(K, s, padding) deconv decomposes into ``s^2`` stride-1 sub-filters of
-``K_T = ceil(K/s)`` taps, and where the pixel-shuffled output is
+(K, s, padding) deconv decomposes into ``prod(s)`` stride-1 sub-filters
+of ``K_T = ceil(K/s)`` taps, and where the pixel-shuffled output is
 cropped) and the *filter data* laid out for that geometry.  This module
 keeps them in one frozen dataclass registered as a JAX pytree:
 
-* the geometry — kernel, stride, padding, channel counts, execution
-  backend, epilogue activation, filter layout and (optionally) the
-  autotuned kernel tile — is **aux_data**: hashable, compared by value,
-  and therefore part of the jit cache key, exactly like static_argnums;
+* the geometry — kernel, stride, padding, output_padding, channel
+  counts, execution backend, epilogue activation, filter layout and
+  (optionally) the autotuned kernel tile — is **aux_data**: hashable,
+  compared by value, and therefore part of the jit cache key, exactly
+  like static_argnums.  The spatial **rank** (1, 2 or 3) is carried by
+  the kernel/stride tuples themselves, so it keys the cache too;
 * the filter arrays of a *bound* plan (``ws``: the pre-split filters,
   with any folded per-channel scale; ``bias``) are **leaves**, so a
   bound plan crosses ``jit`` / ``grad`` / ``shard_map`` boundaries as a
@@ -23,19 +25,27 @@ points live in :mod:`repro.sd.functional`.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.deconv import (_check_padding, _pads, _pair,
-                               deconv_output_shape, sd_geometry,
-                               split_filters)
+from repro.core.deconv import (_check_output_padding, _check_padding,
+                               _ntuple, _pads_nd, deconv_output_shape,
+                               sd_geometry, split_filters, unsplit_filters)
 from repro.kernels.autotune import KernelPlan
 
 BACKENDS = ("fused", "xla")
 LAYOUTS = ("nmajor", "ocmajor")
+
+# Execution strategy of the "fused" backend per spatial rank: ranks 1-2
+# run the fused Pallas kernel directly (1-D lowers as an H=1 2-D call);
+# rank 3 folds depth into batch for the intra-slice Pallas convs and
+# falls back to grouped-XLA layout ops for the cross-slice interleave
+# (see functional._run_presplit; the registry's per-rank ``backends``
+# capability metadata records the same strategy).
 
 
 def resolve_backend(backend: str) -> str:
@@ -49,84 +59,87 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
-def to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
+def to_ocmajor(ws: jax.Array, s, phases: Optional[int] = None) -> jax.Array:
     """Relayout split filters from n-major (what ``depth_to_space``
-    consumes) to oc-major (what the fused Pallas kernel consumes)."""
-    kt1, kt2, cin, nc = ws.shape
-    cout = nc // (s * s)
-    w = ws.reshape(kt1, kt2, cin, s * s, cout)
-    return w.transpose(0, 1, 2, 4, 3).reshape(kt1, kt2, cin, cout * s * s)
-
-
-def unsplit_filters(ws: jax.Array, kernel, stride) -> jax.Array:
-    """Exact inverse (== linear adjoint) of :func:`split_filters`.
-
-    ``split_filters`` is a zero-pad followed by a permutation, so its
-    adjoint is the inverse permutation followed by the crop of the
-    ``P_K`` expansion zeros.  This is what maps split-layout filter
-    *gradients* back onto the original deconv filter, and also the
-    "compressed SD" storage transform of paper Table 3.
-    """
-    sh, sw = _pair(stride)
-    kh, kw = _pair(kernel)
-    (kth, ktw), (pkh, pkw), _ = sd_geometry((kh, kw), (sh, sw))
-    kt1, kt2, cin, nc = ws.shape
-    cout = nc // (sh * sw)
-    we = ws.reshape(kth, ktw, cin, sh, sw, cout)
-    we = we.transpose(0, 3, 1, 4, 2, 5)           # invert (0,2,4,1,3,5)
-    we = we[::-1, :, ::-1, :, :, :]               # undo the m-flips
-    we = we.reshape(sh * kth, sw * ktw, cin, cout)
-    return we[pkh:, pkw:]                         # crop the expansion pad
+    consumes) to oc-major (what the fused Pallas kernel consumes),
+    any rank.  ``s`` is the per-dim stride (int or tuple); ``phases``
+    overrides the phase count (defaults to ``prod(s)`` over the rank
+    inferred from ``ws``)."""
+    rank = ws.ndim - 2
+    if phases is None:
+        phases = math.prod(_ntuple(s, rank))
+    kt = ws.shape[:rank]
+    cin, nc = ws.shape[rank], ws.shape[rank + 1]
+    cout = nc // phases
+    w = ws.reshape(*kt, cin, phases, cout)
+    return jnp.swapaxes(w, -1, -2).reshape(*kt, cin, cout * phases)
 
 
 @dataclass(frozen=True)
 class DeconvPlan:
-    """Split layout of one transposed convolution.
+    """Split layout of one transposed convolution, any spatial rank.
 
     Static geometry (pytree aux_data): ``kernel``, ``stride``,
-    ``padding`` (normalised to ``((pt, pb), (pl, pr))``), ``cin``,
-    ``cout``, ``backend``, ``act``, ``layout``, ``tile``.
+    ``padding`` (normalised to ``((lo, hi),) * rank``),
+    ``output_padding``, ``cin``, ``cout``, ``backend``, ``act``,
+    ``layout``, ``tile``.  ``rank == len(kernel)``.
 
     Leaves (only set on a *bound* plan): ``ws`` — the pre-split filters
     in ``layout`` order with any per-channel scale folded in — and
     ``bias``.
     """
-    kernel: Tuple[int, int]
-    stride: Tuple[int, int]
-    padding: Tuple[Tuple[int, int], Tuple[int, int]]
+    kernel: Tuple[int, ...]
+    stride: Tuple[int, ...]
+    padding: Tuple[Tuple[int, int], ...]
     cin: int
     cout: int
     backend: str = "xla"
     act: str = "linear"                    # "linear" | "relu" | "tanh"
     layout: str = "nmajor"
     tile: Optional[KernelPlan] = None      # autotuned (th, tcin, tcout)
+    output_padding: Tuple[int, ...] = None  # normalised in plan()
     ws: Optional[jax.Array] = None         # leaf: pre-split filters
     bias: Optional[jax.Array] = None       # leaf: per-oc bias
 
+    def __post_init__(self):
+        if self.output_padding is None:
+            object.__setattr__(self, "output_padding",
+                               (0,) * len(self.kernel))
+
     # ---- derived geometry ------------------------------------------------
     @property
-    def s(self) -> int:
-        """Square stride as an int (the fused kernel requires it)."""
-        sh, sw = self.stride
-        if sh != sw:
-            raise ValueError(f"non-square stride {self.stride}")
-        return sh
+    def rank(self) -> int:
+        """Spatial rank (1, 2 or 3) — implied by the kernel tuple, so it
+        is part of aux_data and keys the jit cache."""
+        return len(self.kernel)
 
     @property
-    def kt(self) -> Tuple[int, int]:
+    def s(self) -> int:
+        """Hypercubic stride as an int (the fused kernel requires it)."""
+        if len(set(self.stride)) != 1:
+            raise ValueError(f"non-square stride {self.stride}")
+        return self.stride[0]
+
+    @property
+    def phases(self) -> int:
+        """Number of split sub-filters, prod(s) over the rank."""
+        return math.prod(self.stride)
+
+    @property
+    def kt(self) -> Tuple[int, ...]:
         return sd_geometry(self.kernel, self.stride)[0]
 
     @property
-    def pk(self) -> Tuple[int, int]:
+    def pk(self) -> Tuple[int, ...]:
         return sd_geometry(self.kernel, self.stride)[1]
 
     @property
-    def pi(self) -> Tuple[int, int]:
+    def pi(self) -> Tuple[int, ...]:
         return sd_geometry(self.kernel, self.stride)[2]
 
-    def out_shape(self, in_hw: Tuple[int, int]) -> Tuple[int, int]:
-        return deconv_output_shape(in_hw, self.kernel, self.stride,
-                                   self.padding)
+    def out_shape(self, in_space: Sequence[int]) -> Tuple[int, ...]:
+        return deconv_output_shape(in_space, self.kernel, self.stride,
+                                   self.padding, self.output_padding)
 
     @property
     def bound(self) -> bool:
@@ -142,6 +155,15 @@ class DeconvPlan:
         return self.ws if self.layout == "nmajor" else None
 
     # ---- binding ---------------------------------------------------------
+    def _bound_layout(self) -> str:
+        """The filter layout this plan's execution path consumes:
+        oc-major for the fused Pallas kernel (ranks 1-2); n-major for
+        XLA and for the rank-3 fused lowering (its interleave is the
+        XLA ``depth_to_space``)."""
+        if self.backend == "fused" and self.rank <= 2:
+            return "ocmajor"
+        return "nmajor"
+
     def bind(self, w: jax.Array, scale: Optional[jax.Array] = None,
              bias: Optional[jax.Array] = None,
              act: Optional[str] = None) -> "DeconvPlan":
@@ -155,15 +177,14 @@ class DeconvPlan:
         if w.shape != (*self.kernel, self.cin, self.cout):
             raise ValueError(f"filter shape {w.shape} does not match plan "
                              f"{(*self.kernel, self.cin, self.cout)}")
-        sh, sw = self.stride
         ws = split_filters(w, self.stride)
         if scale is not None:
             # n-major channel c = n*Cout + oc: tile the per-oc scale
-            # across the s^2 sub-filter blocks.
-            ws = ws * jnp.tile(scale.astype(ws.dtype), sh * sw)
-        layout = "ocmajor" if self.backend == "fused" else "nmajor"
+            # across the prod(s) sub-filter blocks.
+            ws = ws * jnp.tile(scale.astype(ws.dtype), self.phases)
+        layout = self._bound_layout()
         if layout == "ocmajor":
-            ws = to_ocmajor(ws, self.s)
+            ws = to_ocmajor(ws, self.stride)
         return replace(self, ws=ws, bias=bias, layout=layout,
                        act=self.act if act is None else act)
 
@@ -176,22 +197,36 @@ class DeconvPlan:
 
 def plan(filter_shape: Sequence[int], stride, padding=0,
          backend: str = "auto", act: str = "linear",
-         tile: Optional[KernelPlan] = None) -> DeconvPlan:
+         tile: Optional[KernelPlan] = None,
+         output_padding=0) -> DeconvPlan:
     """Compute the split layout for a deconv filter shape.
 
-    ``filter_shape`` is HWIO ``(K_h, K_w, C_in, C_out)``; ``padding``
-    accepts ``int``, ``(ph, pw)`` or ``((pt, pb), (pl, pr))`` exactly
-    like the :mod:`repro.core.deconv` implementations, and invalid
-    crops are rejected identically.  The result is geometry-only
-    (no filter data): pass it straight to
+    ``filter_shape`` is ``(*K, C_in, C_out)`` — its length sets the
+    spatial rank: 3 entries = 1-D ``(K, C_in, C_out)``, 4 = 2-D HWIO,
+    5 = 3-D DHWIO.  ``padding`` accepts ``int``, a per-dim sequence, or
+    per-dim ``(lo, hi)`` pairs exactly like the
+    :mod:`repro.core.deconv` implementations, and invalid crops are
+    rejected identically; ``output_padding`` (int or per-dim,
+    ``0 <= op < s``) grows the high side of the output — the knob that
+    makes odd output sizes (25 -> 50 at stride 2) expressible.  The
+    result is geometry-only (no filter data): pass it straight to
     :func:`repro.sd.conv_transpose`, or :meth:`DeconvPlan.bind` a
     filter for the presplit execution path.
     """
-    kh, kw, cin, cout = (int(d) for d in filter_shape)
-    _check_padding((kh, kw), padding)
-    return DeconvPlan(kernel=(kh, kw), stride=_pair(stride),
-                      padding=_pads(padding), cin=cin, cout=cout,
-                      backend=resolve_backend(backend), act=act, tile=tile)
+    dims = tuple(int(d) for d in filter_shape)
+    if len(dims) not in (3, 4, 5):
+        raise ValueError(f"filter_shape {filter_shape!r} must have "
+                         "3 (1-D), 4 (2-D) or 5 (3-D) entries")
+    rank = len(dims) - 2
+    k, (cin, cout) = dims[:rank], dims[rank:]
+    st = _ntuple(stride, rank)
+    op = _ntuple(output_padding, rank)
+    _check_padding(k, padding)
+    _check_output_padding(op, st)
+    return DeconvPlan(kernel=k, stride=st,
+                      padding=_pads_nd(padding, rank), cin=cin, cout=cout,
+                      backend=resolve_backend(backend), act=act, tile=tile,
+                      output_padding=op)
 
 
 # ---------------------------------------------------------------------------
@@ -200,17 +235,19 @@ def plan(filter_shape: Sequence[int], stride, padding=0,
 
 def _flatten(p: DeconvPlan):
     children = (p.ws, p.bias)
-    aux = (p.kernel, p.stride, p.padding, p.cin, p.cout, p.backend,
-           p.act, p.layout, p.tile)
+    aux = (p.kernel, p.stride, p.padding, p.output_padding, p.cin, p.cout,
+           p.backend, p.act, p.layout, p.tile)
     return children, aux
 
 
 def _unflatten(aux, children) -> DeconvPlan:
     ws, bias = children
-    (kernel, stride, padding, cin, cout, backend, act, layout, tile) = aux
+    (kernel, stride, padding, output_padding, cin, cout, backend, act,
+     layout, tile) = aux
     return DeconvPlan(kernel=kernel, stride=stride, padding=padding,
-                      cin=cin, cout=cout, backend=backend, act=act,
-                      layout=layout, tile=tile, ws=ws, bias=bias)
+                      output_padding=output_padding, cin=cin, cout=cout,
+                      backend=backend, act=act, layout=layout, tile=tile,
+                      ws=ws, bias=bias)
 
 
 jax.tree_util.register_pytree_node(DeconvPlan, _flatten, _unflatten)

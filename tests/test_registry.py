@@ -45,8 +45,37 @@ def test_capability_schema_complete():
     assert set(caps) == set(registry.names())
     for name, c in caps.items():
         assert set(c) == {"trainable", "engine", "needs_presplit",
-                         "exact", "dtypes", "backends", "api"}, name
+                          "exact", "dtypes", "backends", "api", "ranks",
+                          "backends_by_rank"}, name
         assert c["api"] in ("fn", "functional"), name
+        assert 2 in c["ranks"], name
+        assert set(c["backends_by_rank"]) == set(c["ranks"]), name
+
+
+def test_per_rank_backend_metadata():
+    """The rank-generalised impls declare ranks (1, 2, 3); per-rank
+    backend refinement is consistent with the declared rank set and the
+    selfcheck exercises every declared rank."""
+    for name in ("native", "nzp", "sd", "sd_fn", "sd_kernel"):
+        info = registry.get_impl(name)
+        assert info.ranks == (1, 2, 3), name
+    for name in ("sd_paper", "fused", "shi", "chang"):
+        assert registry.get_impl(name).ranks == (2,), name
+    # sd_kernel's 3-D fast path routes the cross-slice interleave
+    # through grouped XLA — visible in the per-rank metadata.
+    table = registry.get_impl("sd_kernel").backends_by_rank()
+    assert table[1] == table[2] == ("tpu", "any")
+    assert "xla-interleave" in table[3]
+    # the catalog error text surfaces the rank tags
+    with pytest.raises(ValueError) as ei:
+        registry.get_impl("no_such_impl_xyz")
+    assert "ranks=123" in str(ei.value)
+
+
+def test_registry_selfcheck_covers_ranks():
+    """registry.selfcheck() must pass with the per-rank metadata (it
+    pushes 1-D/3-D inputs through every impl claiming those ranks)."""
+    registry.selfcheck()
 
 
 def test_engine_impls_presplit_and_train_only_via_functional():

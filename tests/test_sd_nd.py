@@ -1,0 +1,320 @@
+"""Rank-generalised split deconvolution (1-D / 3-D) acceptance tests.
+
+Pins the N-D contract of the rank refactor:
+
+* ``sd.conv_transpose`` matches ``jax.lax.conv_transpose`` forward
+  (1e-5) and native-deconv autodiff grads (1e-4) on pinned 1-D and 3-D
+  geometries, on BOTH execution backends — the fused lowering (1-D as
+  H=1 2-D through the Pallas kernel; 3-D as depth-folded Pallas convs
+  + grouped-XLA interleave) and the pure-XLA grouped conv;
+* explicit ``output_padding`` expresses odd output sizes (25 -> 50 at
+  stride 2) with parity against the native reference at every rank;
+* the 2-D shims keep their exact historical signatures and results.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sd as sd
+from repro.core.accounting import WORKLOADS
+from repro.core.deconv import (conv_dimension_numbers, deconv_output_shape,
+                               native_deconv, nzp_deconv, same_deconv_pads,
+                               sd_deconv, sd_geometry, space_to_depth,
+                               split_filters, unsplit_filters,
+                               depth_to_space)
+from repro.models.generative import build
+
+# Pinned N-D geometries: the new workloads' layers + awkward K/s mixes.
+#   (shape_x, shape_w, stride, padding)
+GEOMETRIES_1D = [
+    ((2, 16, 8), (25, 8, 4), 4, same_deconv_pads((25,), (4,))),  # WaveGAN
+    ((2, 9, 3), (5, 3, 2), 2, 1),
+    ((1, 7, 2), (4, 2, 3), 3, ((2, 1),)),          # asymmetric, K % s != 0
+    ((1, 6, 4), (2, 4, 2), 2, 0),
+]
+GEOMETRIES_3D = [
+    ((2, 4, 4, 4, 8), (4, 4, 4, 8, 4), 2,
+     same_deconv_pads((4, 4, 4), (2, 2, 2))),       # VoxGAN layer
+    ((1, 3, 4, 5, 2), (3, 3, 3, 2, 3), 2, 1),       # K % s == 1
+    ((1, 3, 3, 3, 2), (5, 5, 5, 2, 2), 3, 2),       # K % s == 2
+]
+
+
+def _data(shape_x, shape_w, seed=0):
+    rng = np.random.RandomState(seed)
+    return (jnp.asarray(rng.randn(*shape_x), jnp.float32),
+            jnp.asarray(rng.randn(*shape_w), jnp.float32))
+
+
+def _lax_conv_transpose(x, w, stride, rank):
+    """jax.lax.conv_transpose in our (x:(B,*S,Ci), w:(*K,Ci,Co))
+    convention — the padding=0 deconv reference."""
+    sp = {1: "H", 2: "HW", 3: "DHW"}[rank]
+    return jax.lax.conv_transpose(
+        x, w, (stride,) * rank, "VALID",
+        dimension_numbers=("N" + sp + "C", sp + "OI", "N" + sp + "C"),
+        transpose_kernel=True)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: forward vs jax.lax.conv_transpose, grads vs native autodiff.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "fused"])
+@pytest.mark.parametrize("case", GEOMETRIES_1D + GEOMETRIES_3D)
+def test_nd_parity_vs_native(case, backend):
+    shape_x, shape_w, stride, padding = case
+    x, w = _data(shape_x, shape_w, seed=sum(shape_w))
+    plan = sd.plan(w.shape, stride, padding, backend=backend)
+    ref = native_deconv(x, w, stride, padding)
+    out = sd.conv_transpose(plan, x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+    def loss_sd(ww):
+        return jnp.sum(sd.conv_transpose(plan, x, ww) ** 2)
+
+    def loss_ref(ww):
+        return jnp.sum(native_deconv(x, ww, stride, padding) ** 2)
+
+    g_sd = jax.grad(loss_sd)(w)
+    g_ref = jax.grad(loss_ref)(w)
+    np.testing.assert_allclose(np.asarray(g_sd), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rank,case", [(1, GEOMETRIES_1D[3]),
+                                       (3, GEOMETRIES_3D[1][:2] + (2, 0))])
+def test_nd_forward_matches_lax_conv_transpose(rank, case):
+    """Padding-0 geometries compare directly against the framework's own
+    transposed conv (the acceptance oracle)."""
+    shape_x, shape_w, stride, _ = case
+    x, w = _data(shape_x, shape_w, seed=rank)
+    ref = _lax_conv_transpose(x, w, stride, rank)
+    for backend in ("xla", "fused"):
+        plan = sd.plan(w.shape, stride, 0, backend=backend)
+        np.testing.assert_allclose(
+            np.asarray(sd.conv_transpose(plan, x, w)), np.asarray(ref),
+            rtol=1e-5, atol=1e-5, err_msg=backend)
+    np.testing.assert_allclose(np.asarray(native_deconv(x, w, stride, 0)),
+                               np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("case", GEOMETRIES_1D[:2] + GEOMETRIES_3D[1:2])
+def test_nd_input_grads_match_native(case):
+    shape_x, shape_w, stride, padding = case
+    x, w = _data(shape_x, shape_w, seed=3)
+    plan = sd.plan(w.shape, stride, padding)
+    gx = jax.grad(lambda xx: jnp.sum(
+        sd.conv_transpose(plan, xx, w) ** 2))(x)
+    gr = jax.grad(lambda xx: jnp.sum(
+        native_deconv(xx, w, stride, padding) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_nd_bias_grad_reduces_all_spatial_axes():
+    for shape_x, shape_w, stride, padding in (GEOMETRIES_1D[1],
+                                              GEOMETRIES_3D[1]):
+        x, w = _data(shape_x, shape_w, seed=5)
+        b = jnp.asarray(np.random.RandomState(6).randn(shape_w[-1]),
+                        jnp.float32)
+        plan = sd.plan(w.shape, stride, padding)
+        gb = jax.grad(lambda bb: jnp.sum(
+            sd.conv_transpose(plan, x, w, bb) ** 2))(b)
+        gr = jax.grad(lambda bb: jnp.sum(
+            (native_deconv(x, w, stride, padding) + bb) ** 2))(b)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(gr),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# output_padding: odd output sizes, every rank, parity + grads.
+# ---------------------------------------------------------------------------
+
+def test_output_padding_expresses_odd_sizes():
+    """25 -> 50 at stride 2 (k=3, p=1) needs output_padding=1; without
+    it the deconv can only produce 49."""
+    assert deconv_output_shape((25,), 3, 2, 1) == (49,)
+    assert deconv_output_shape((25,), 3, 2, 1, output_padding=1) == (50,)
+    x, w = _data((1, 25, 2), (3, 2, 2), seed=9)
+    y = native_deconv(x, w, 2, 1, output_padding=1)
+    assert y.shape == (1, 50, 2)
+    for backend in ("xla", "fused"):
+        plan = sd.plan(w.shape, 2, 1, backend=backend, output_padding=1)
+        assert plan.out_shape((25,)) == (50,)
+        np.testing.assert_allclose(
+            np.asarray(sd.conv_transpose(plan, x, w)), np.asarray(y),
+            rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape_x,shape_w,stride,padding,op", [
+    ((1, 10, 3), (5, 3, 2), 3, 1, 2),             # 1-D, op > pb
+    ((1, 5, 6, 3), (4, 4, 3, 2), 2, 1, (1, 0)),   # 2-D, per-dim op
+    ((1, 5, 6, 3), (4, 4, 3, 2), 2, 0, 1),        # 2-D, op past support
+    ((1, 3, 4, 4, 2), (4, 4, 4, 2, 2), 2, 1, 1),  # 3-D
+])
+def test_output_padding_parity_and_grads(shape_x, shape_w, stride,
+                                         padding, op):
+    x, w = _data(shape_x, shape_w, seed=11)
+    ref = native_deconv(x, w, stride, padding, output_padding=op)
+    np.testing.assert_allclose(
+        np.asarray(nzp_deconv(x, w, stride, padding, output_padding=op)),
+        np.asarray(ref), rtol=1e-5, atol=1e-5)
+    for backend in ("xla", "fused"):
+        plan = sd.plan(w.shape, stride, padding, backend=backend,
+                       output_padding=op)
+        out = sd.conv_transpose(plan, x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=backend)
+        for arg in (0, 1):                        # dx and dw
+            g = jax.grad(lambda *a: jnp.sum(
+                sd.conv_transpose(plan, *a) ** 2), argnums=arg)(x, w)
+            gr = jax.grad(lambda *a: jnp.sum(native_deconv(
+                *a, stride, padding, output_padding=op) ** 2),
+                argnums=arg)(x, w)
+            np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{backend} arg{arg}")
+
+
+def test_output_padding_validation():
+    with pytest.raises(ValueError, match="output_padding"):
+        sd.plan((4, 4, 3, 2), 2, 1, output_padding=2)
+    with pytest.raises(ValueError, match="output_padding"):
+        native_deconv(*_data((1, 4, 3), (4, 3, 2)), 2, 1,
+                      output_padding=3)
+    # the fused kernel entry points reject identically (callers that
+    # bypass sd.plan must not silently zero-extend)
+    from repro.kernels.ops import (sd_deconv_presplit_fused,
+                                   sd_deconv_presplit_fused_3d)
+    x, w = _data((1, 4, 5, 3), (4, 4, 3, 2))
+    ws = sd.to_ocmajor(split_filters(w, 2), 2)
+    with pytest.raises(ValueError, match="output_padding"):
+        sd_deconv_presplit_fused(x, ws, (4, 4), 2, 1, output_padding=2)
+    x3, w3 = _data((1, 3, 4, 4, 2), (4, 4, 4, 2, 2))
+    with pytest.raises(ValueError, match="output_padding"):
+        sd_deconv_presplit_fused_3d(x3, split_filters(w3, 2),
+                                    (4, 4, 4), 2, 1, output_padding=2)
+
+
+def test_output_padding_extension_keeps_bias_and_act():
+    """Regression: when output_padding reaches past the shuffled
+    support (op > high crop) the fused backend used to zero-extend
+    AFTER its in-kernel bias/act epilogue, dropping bias on the
+    extended rows — backends must agree with native + bias."""
+    for shape_x, shape_w, st in (((1, 4, 5, 3), (4, 4, 3, 2), 2),
+                                 ((1, 6, 3), (4, 3, 2), 2)):
+        x, w = _data(shape_x, shape_w, seed=23)
+        cout = shape_w[-1]
+        bias = jnp.asarray([1.0, -2.0])[:cout]
+        ref = native_deconv(x, w, st, 0, output_padding=1) + bias
+        outs = {}
+        for backend in ("xla", "fused"):
+            bound = sd.plan(w.shape, st, 0, backend=backend,
+                            output_padding=1).bind(w, bias=bias)
+            outs[backend] = sd.execute(bound, x)
+            np.testing.assert_allclose(np.asarray(outs[backend]),
+                                       np.asarray(ref), rtol=1e-5,
+                                       atol=1e-5, err_msg=backend)
+        np.testing.assert_allclose(np.asarray(outs["xla"]),
+                                   np.asarray(outs["fused"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_bound_plan_execute_nd():
+    """Presplit-once deployment across ranks: bind (scale fold) once,
+    execute under jit with the plan as a pytree argument."""
+    for shape_x, shape_w, stride, padding in (GEOMETRIES_1D[0],
+                                              GEOMETRIES_3D[0]):
+        x, w = _data(shape_x, shape_w, seed=13)
+        cout = shape_w[-1]
+        scale = jnp.linspace(0.5, 1.5, cout)
+        bias = jnp.linspace(-0.1, 0.1, cout)
+        ref = native_deconv(x, w, stride, padding) * scale + bias
+        for backend in ("xla", "fused"):
+            bound = sd.plan(w.shape, stride, padding,
+                            backend=backend).bind(w, scale=scale,
+                                                  bias=bias)
+            leaves, treedef = jax.tree_util.tree_flatten(bound)
+            assert len(leaves) == 2
+            rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+            assert rebuilt.rank == len(shape_w) - 2
+            y = jax.jit(sd.execute)(rebuilt, x)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=backend)
+
+
+# ---------------------------------------------------------------------------
+# 2-D shims: historical signatures and results unchanged.
+# ---------------------------------------------------------------------------
+
+def test_2d_shims_unchanged():
+    """Every pre-refactor 2-D call shape keeps working verbatim: scalar
+    geometry args mean 2-D, and the (kt, pk, pi) helpers return pairs."""
+    assert sd_geometry(5, 2) == ((3, 3), (1, 1), (2, 2))
+    assert same_deconv_pads(5, 2) == ((1, 2), (1, 2))
+    assert deconv_output_shape((8, 8), 5, 2, 1) == (17, 17)
+    x, w = _data((2, 6, 7, 4), (5, 5, 4, 3), seed=17)
+    ref = native_deconv(x, w, 2, 1)
+    np.testing.assert_allclose(np.asarray(sd_deconv(x, w, 2, 1)),
+                               np.asarray(ref), rtol=1e-5, atol=1e-5)
+    ws = split_filters(w, 2)
+    assert ws.shape == (3, 3, 4, 4 * 3)
+    np.testing.assert_array_equal(
+        np.asarray(unsplit_filters(ws, (5, 5), 2)), np.asarray(w))
+    y = _data((1, 4, 6, 8), (1, 1, 1, 1), seed=19)[0]
+    np.testing.assert_array_equal(
+        np.asarray(space_to_depth(depth_to_space(y, 2), 2)),
+        np.asarray(y))
+    p = sd.plan(w.shape, 2, 1)
+    assert p.rank == 2 and p.kernel == (5, 5) and p.output_padding == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# The new workloads end to end (model level).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["wavegan", "voxgan", "segnet"])
+def test_nd_workload_impls_agree(name):
+    assert name in WORKLOADS
+    ref_model = build(name, "native")
+    params = ref_model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          ref_model.input_shape(2)) * 0.5
+    ref = ref_model.apply(params, x)
+    assert np.isfinite(np.asarray(ref)).all()
+    for impl in ("sd", "nzp", "sd_fn"):
+        out = build(name, impl).apply(params, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=impl)
+    for backend in ("xla", "fused"):
+        out = build(name, "sd_kernel",
+                    engine_backend=backend).apply(params, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=backend)
+
+
+def test_nd_workload_grads_flow():
+    for name in ("wavegan", "voxgan", "segnet"):
+        m = build(name, "sd_kernel", engine_backend="xla")
+        params = m.init(jax.random.PRNGKey(0))
+        z = jax.random.normal(jax.random.PRNGKey(1), m.input_shape(2))
+
+        g = jax.grad(lambda p: jnp.mean(m.apply(p, z) ** 2))(params)
+        total = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(g))
+        assert np.isfinite(total) and total > 0, name
+
+
+def test_segnet_head_shape_and_rank_mix():
+    """The segmentation decoder mixes conv encoder + deconv decoder and
+    ends on a dense logit map at input resolution."""
+    m = build("segnet", "sd")
+    assert m.final_tanh is False
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), m.input_shape(2))
+    y = m.apply(params, x)
+    assert y.shape == (2, 32, 32, 21)

@@ -15,9 +15,10 @@ import pytest
 from repro.core.accounting import LayerSpec, NetworkSpec
 from repro.engine import SDEngine, resolve_backend
 from repro.kernels.autotune import ConvGeom, KernelPlan
-from repro.launch.batching import drain_groups, pow2_bucket, take_group
+from repro.launch.batching import (drain_groups, pow2_bucket, pow2_floor,
+                                   take_group)
 from repro.launch.serve_gen import (GenRequest, GenServer, main,
-                                    reduced_spec)
+                                    reduced_spec, reduced_specs)
 from repro.models.generative import GenerativeModel
 
 SPEC = reduced_spec()
@@ -41,6 +42,34 @@ def test_pow2_bucket():
         pow2_bucket(0)
 
 
+def test_pow2_bucket_non_pow2_cap_clamped():
+    """Regression: a non-power-of-two cap used to leak its own non-pow2
+    value into the compile cache for large n; the cap is now clamped to
+    the largest power of two below it, keeping the shape set closed."""
+    assert pow2_floor(12) == 8 and pow2_floor(8) == 8 and pow2_floor(1) == 1
+    with pytest.raises(ValueError):
+        pow2_floor(0)
+    assert pow2_bucket(13, max_bucket=12) == 8          # was 12 (leak)
+    assert pow2_bucket(9, max_bucket=12) == 8
+    for n in range(1, 14):
+        b = pow2_bucket(n, max_bucket=12)
+        assert b & (b - 1) == 0 and b <= 12             # pow2, capped
+    # pow2 caps behave exactly as before
+    assert [pow2_bucket(n, 16) for n in (1, 5, 16, 33)] == [1, 8, 16, 16]
+
+
+def test_server_clamps_non_pow2_max_batch():
+    """GenServer must reconcile its group-size cap with the clamped
+    bucket cap, or an over-cap group would reach a smaller compiled
+    cell and crash on shape mismatch."""
+    server = _server(max_batch=12)
+    assert server.max_batch == 8
+    reqs = server.random_requests("g", 9)               # > clamped cap
+    results, stats = server.serve(reqs)
+    assert set(results) == {r.rid for r in reqs}
+    assert all(k[1] & (k[1] - 1) == 0 for k in server._compiled)
+
+
 def test_take_group_same_key_fifo():
     q = [(0, "a"), (1, "b"), (2, "a"), (3, "a"), (4, "b")]
     group, rest = take_group(q, lambda r: r[1], max_group=2)
@@ -49,6 +78,31 @@ def test_take_group_same_key_fifo():
     group2, rest2 = take_group(rest, lambda r: r[1], max_group=2)
     assert group2 == [(1, "b"), (4, "b")]
     assert rest2 == [(3, "a")]
+
+
+def test_take_group_head_of_line_fairness():
+    """The oldest waiting request is NEVER starved: every drain builds
+    its group around the queue head, whatever key mix follows — even
+    adversarial interleavings where one key dominates arrivals."""
+    # one old 'a' request buried under a flood of alternating keys
+    q = [(0, "a")] + [(i, "b" if i % 2 else "c") for i in range(1, 20)]
+    group, rest = take_group(q, lambda r: r[1], max_group=4)
+    assert group[0] == (0, "a")                 # the head always goes
+    # repeated drains: the front item of every intermediate queue is
+    # served in that very drain (no starvation across rounds), and
+    # completion order never reorders same-key requests.
+    q = [(i, "abc"[i % 3]) for i in range(30)]
+    served, rounds = [], 0
+    while q:
+        head = q[0]
+        group, q = take_group(q, lambda r: r[1], max_group=4)
+        assert group[0] == head
+        served += group
+        rounds += 1
+    assert sorted(r[0] for r in served) == list(range(30))
+    for key in "abc":
+        ids = [r[0] for r in served if r[1] == key]
+        assert ids == sorted(ids)               # per-key FIFO preserved
 
 
 def test_drain_groups_covers_everything():
@@ -64,9 +118,14 @@ def test_drain_groups_covers_everything():
 # ---------------------------------------------------------------------------
 
 def test_dryrun_smoke():
+    """--dryrun smokes one reduced net per workload family (2-D image,
+    1-D audio, 3-D voxel, segmentation decoder): 2 requests each, one
+    compiled cell each."""
     results, stats = main(["--dryrun"])
-    assert stats["requests"] == 2
-    assert stats["compiles"] == 1
+    n_nets = len(reduced_specs())
+    assert n_nets == 4
+    assert stats["requests"] == 2 * n_nets
+    assert stats["compiles"] == n_nets
     assert all(np.isfinite(np.asarray(v)).all() for v in results.values())
 
 
@@ -112,15 +171,14 @@ def test_server_parity_vs_native_reference():
 
 
 def test_bucket_respects_dp_divisibility_and_cap():
-    """Buckets must divide by dp and never exceed the (dp-reconciled)
-    max_batch cap."""
+    """Buckets must divide by dp, cover the group, and stay within one
+    dp-roundup of the (pow2-clamped) max_batch cap."""
     server = _server(max_batch=16)
     server.dp = 3                    # bucket math only; no mesh needed
-    server.max_batch = max(3, (16 // 3) * 3)      # init reconciliation
-    assert server.max_batch == 15
-    for n in (1, 2, 4, 5, 8, 13, 15):
+    assert server.max_batch == 16    # pow2 cap untouched by dp
+    for n in (1, 2, 4, 5, 8, 13, 16):
         b = server.bucket(n)
-        assert b % 3 == 0 and n <= b <= 15, (n, b)
+        assert b % 3 == 0 and n <= b <= 18, (n, b)   # 18 = dp-roundup(16)
 
 
 def test_multi_net_fifo_grouping():
@@ -151,7 +209,7 @@ def test_dp_shard_map_smoke():
         capture_output=True, text=True, env=env,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "served 2 requests" in out.stdout
+    assert "served 8 requests" in out.stdout       # 2 per reduced net
 
 
 # ---------------------------------------------------------------------------
@@ -270,3 +328,48 @@ def test_rebind_new_weights_reuses_compiled_executable():
         np.testing.assert_allclose(np.asarray(results[r.rid]),
                                    np.asarray(ref[i]),
                                    rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# N-D workloads through the serving stack (rank-generalised engine).
+# ---------------------------------------------------------------------------
+
+def test_nd_nets_served_match_native_reference():
+    """Every reduced workload family (1-D audio, 3-D voxel, 2-D image +
+    segmentation) serves through the engine with outputs equal to the
+    native-deconv reference model."""
+    specs = reduced_specs()
+    server = GenServer(nets=sorted(specs), specs=specs, max_batch=4)
+    for net in sorted(specs):
+        reqs = server.random_requests(net, 3)
+        results, _ = server.serve(reqs)
+        model, params = server.model(net)
+        ref_model = GenerativeModel(specs[net], "native",
+                                    final_tanh=model.final_tanh)
+        x = jnp.stack([jnp.asarray(r.latent) for r in reqs])
+        ref = ref_model.apply(params, x)
+        for i, r in enumerate(reqs):
+            np.testing.assert_allclose(
+                np.asarray(results[r.rid]), np.asarray(ref[i]),
+                rtol=1e-4, atol=1e-4, err_msg=net)
+
+
+def test_segnet_head_is_logits():
+    """The segmentation decoder must NOT squash its class scores: the
+    served output equals the unsquashed native logits exactly, and for
+    a large-magnitude input it escapes tanh's [-1, 1] range."""
+    specs = reduced_specs()
+    server = GenServer(nets=["segnet-dryrun"], specs=specs, max_batch=2)
+    model, params = server.model("segnet-dryrun")
+    assert model.final_tanh is False
+    reqs = server.random_requests("segnet-dryrun", 2)
+    for r in reqs:                      # push logit magnitudes past 1
+        r.latent = jnp.asarray(r.latent) * 25.0
+    results, _ = server.serve(reqs)
+    out = np.stack([np.asarray(results[r.rid]) for r in reqs])
+    assert out.shape[-1] == 3 and np.isfinite(out).all()
+    assert np.abs(out).max() > 1.0      # a tanh head cannot produce this
+    ref_model = GenerativeModel(specs["segnet-dryrun"], "native")
+    x = jnp.stack([jnp.asarray(r.latent) for r in reqs])
+    np.testing.assert_allclose(out, np.asarray(ref_model.apply(params, x)),
+                               rtol=1e-4, atol=1e-4)
