@@ -82,6 +82,12 @@ def main() -> None:
     if args.json:
         report.dump_json(args.json)
         print(f"report tables dumped to {args.json}")
+    # Consolidated cross-suite headline (speedups + parity flags) from
+    # whatever BENCH_*.json artifacts exist on disk — the machine-
+    # readable perf trajectory across PRs.
+    from benchmarks import summary as bench_summary
+    bench_summary.write_summary()
+    print(f"consolidated summary written to {bench_summary.OUT_JSON}")
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
 
 

@@ -2,17 +2,24 @@
 
 The ``repro.sd`` redesign made the split-deconvolution path trainable
 (``conv_transpose`` + a ``custom_vjp`` whose backward is standard
-convolutions over the split layout).  This sweep times one jitted
-``jax.grad`` step — scalar loss through a single deconv layer,
-gradients w.r.t. input and filter — for the three DCGAN generator
-deconv layers, comparing
+convolutions over the split layout), and the zero-copy PR routed that
+backward's two stride-1 convolutions through the Pallas kernels for
+``backend="fused"`` plans.  This sweep
 
-  native — ``lax.conv_general_dilated`` deconv, XLA's autodiff backward,
-  sd     — ``repro.sd.conv_transpose``: split-layout forward, the
-           custom conv-expressed backward (what ``train_dcgan`` runs
-           with ``--deconv-impl sd_kernel``/``sd_fn``).
+* times one jitted ``jax.grad`` step — scalar loss through a single
+  deconv layer, gradients w.r.t. input and filter — for the three DCGAN
+  generator deconv layers: ``native`` (XLA's autodiff backward) vs
+  ``sd`` (the conv-expressed custom backward on the default backend;
+  this is the wall-clock gate — the default backend off TPU is the XLA
+  formulation of the *same* split-layout convs, so it must not regress
+  against native autodiff),
+* records grad parity (vs native, 1e-4) for EVERY deconv layer of all
+  six paper nets,
+* exercises the Pallas-backed backward (``backend="fused"``) on the
+  DCGAN layers and records its parity + wall-clock separately —
+  off-TPU this runs the kernels in interpret mode, so its ms column is
+  a correctness record, not a speed claim.
 
-Grad parity (sd vs native, 1e-4) is recorded alongside the timings.
 Results go to BENCH_train.json for the cross-PR trajectory.
 
   PYTHONPATH=src python -m benchmarks.train_bench
@@ -29,14 +36,14 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.sd as sd
-from repro.core.accounting import dcgan
+from repro.core.accounting import BENCHMARKS, dcgan
 from repro.core.deconv import native_deconv, same_deconv_pads
 from repro.kernels.autotune import measure
 
 OUT_JSON = "BENCH_train.json"
 
 
-def bench_layer(layer, batch=4, iters=3):
+def _layer_data(layer, batch):
     pads = (same_deconv_pads(layer.k, layer.s)
             if layer.padding == "same" else layer.pad)
     rng = np.random.RandomState(0)
@@ -44,7 +51,22 @@ def bench_layer(layer, batch=4, iters=3):
                     jnp.float32)
     w = jnp.asarray(rng.randn(layer.k, layer.k, layer.cin, layer.cout)
                     / np.sqrt(layer.k * layer.k * layer.cin), jnp.float32)
+    return x, w, pads
+
+
+def _grads(fn):
+    return jax.jit(jax.grad(fn, argnums=(0, 1)))
+
+
+def _parity(a, b):
+    return (bool(np.allclose(a[0], b[0], rtol=1e-4, atol=1e-4))
+            and bool(np.allclose(a[1], b[1], rtol=1e-4, atol=1e-4)))
+
+
+def bench_layer(layer, batch=4, iters=3, fused=True):
+    x, w, pads = _layer_data(layer, batch)
     plan = sd.plan(w.shape, layer.s, pads)
+    plan_fused = sd.plan(w.shape, layer.s, pads, backend="fused")
 
     def loss_native(xx, ww):
         return jnp.sum(native_deconv(xx, ww, layer.s, pads) ** 2)
@@ -52,24 +74,61 @@ def bench_layer(layer, batch=4, iters=3):
     def loss_sd(xx, ww):
         return jnp.sum(sd.conv_transpose(plan, xx, ww) ** 2)
 
-    g_native = jax.jit(jax.grad(loss_native, argnums=(0, 1)))
-    g_sd = jax.jit(jax.grad(loss_sd, argnums=(0, 1)))
+    def loss_fused(xx, ww):
+        return jnp.sum(sd.conv_transpose(plan_fused, xx, ww) ** 2)
+
+    g_native = _grads(loss_native)
+    g_sd = _grads(loss_sd)
 
     # parity first (also warms both executables)
-    (dx_n, dw_n), (dx_s, dw_s) = g_native(x, w), g_sd(x, w)
-    allclose = (bool(np.allclose(dx_n, dx_s, rtol=1e-4, atol=1e-4))
-                and bool(np.allclose(dw_n, dw_s, rtol=1e-4, atol=1e-4)))
+    ref, got = g_native(x, w), g_sd(x, w)
+    rec = {"grad_parity": _parity(ref, got)}
 
     t_nat = measure(lambda: jax.block_until_ready(g_native(x, w)),
                     iters=iters, warmup=1)
     t_sd = measure(lambda: jax.block_until_ready(g_sd(x, w)),
                    iters=iters, warmup=1)
-    return {"native_ms": round(t_nat, 3), "sd_ms": round(t_sd, 3),
-            "sd_over_native": round(t_sd / t_nat, 3) if t_nat else None,
-            "grad_parity": allclose}
+    rec.update({"native_ms": round(t_nat, 3), "sd_ms": round(t_sd, 3),
+                "sd_over_native": round(t_sd / t_nat, 3) if t_nat
+                else None})
+
+    if fused:
+        # The Pallas-backed backward (interpret mode off TPU): the
+        # parity flag is the gate; the ms column tracks the trajectory.
+        g_fused = _grads(loss_fused)
+        got_f = g_fused(x, w)
+        t_f = measure(lambda: jax.block_until_ready(g_fused(x, w)),
+                      iters=max(1, iters - 1), warmup=0)
+        rec["fused_bwd"] = {"grad_parity": _parity(ref, got_f),
+                            "ms": round(t_f, 3),
+                            "mode": ("mosaic"
+                                     if jax.default_backend() == "tpu"
+                                     else "interpret")}
+    return rec
 
 
-def sweep(batch=4, iters=3, out=OUT_JSON, report=None):
+def parity_all_nets(batch=2):
+    """Grad parity (sd functional vs native autodiff, 1e-4) for every
+    deconv layer of all six paper nets — the acceptance gate of the
+    trainable SD path."""
+    out = {}
+    for name in sorted(BENCHMARKS):
+        spec = BENCHMARKS[name]()
+        net = {}
+        for layer in spec.deconv_layers():
+            x, w, pads = _layer_data(layer, batch)
+            plan = sd.plan(w.shape, layer.s, pads)
+            g_sd = _grads(lambda xx, ww: jnp.sum(
+                sd.conv_transpose(plan, xx, ww) ** 2))
+            g_nat = _grads(lambda xx, ww: jnp.sum(
+                native_deconv(xx, ww, layer.s, pads) ** 2))
+            net[layer.name] = _parity(g_nat(x, w), g_sd(x, w))
+        out[name] = net
+    return out
+
+
+def sweep(batch=4, iters=3, out=OUT_JSON, report=None, all_nets=True,
+          fused=True):
     layers = [l for l in dcgan().layers if l.kind == "deconv"]
     results = {"jax_backend": jax.default_backend(), "batch": batch,
                "layers": {}}
@@ -77,16 +136,28 @@ def sweep(batch=4, iters=3, out=OUT_JSON, report=None):
         report.section("Training step — native vs functional SD "
                        "(fwd+bwd, jitted grad)")
         report.header(["layer", "native_ms", "sd_ms", "sd/native",
-                       "grad_parity"])
+                       "grad_parity", "fused_bwd(parity/ms)"])
     for layer in layers:
-        r = bench_layer(layer, batch=batch, iters=iters)
+        r = bench_layer(layer, batch=batch, iters=iters, fused=fused)
         results["layers"][layer.name] = r
+        fb = r.get("fused_bwd")
         line = [f"dcgan/{layer.name}", r["native_ms"], r["sd_ms"],
-                r["sd_over_native"], r["grad_parity"]]
+                r["sd_over_native"], r["grad_parity"],
+                f"{fb['grad_parity']}/{fb['ms']}" if fb else "-"]
         if report is not None:
             report.row(line)
         else:
             print("  " + " | ".join(str(v) for v in line))
+    if all_nets:
+        results["net_grad_parity"] = parity_all_nets(batch=min(batch, 2))
+        flat = [ok for net in results["net_grad_parity"].values()
+                for ok in net.values()]
+        msg = (f"grad parity vs native on all six nets: "
+               f"{sum(flat)}/{len(flat)} layers OK")
+        if report is not None:
+            report.note(msg)
+        else:
+            print(msg)
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=1, sort_keys=True)
@@ -101,7 +172,7 @@ def sweep(batch=4, iters=3, out=OUT_JSON, report=None):
 def run(report):
     """benchmarks.run hook: reduced iters so the full driver stays fast;
     the standalone main does the complete sweep."""
-    sweep(batch=2, iters=2, out=None, report=report)
+    sweep(batch=2, iters=2, out=None, report=report, all_nets=False)
 
 
 def main(argv=None):
@@ -109,8 +180,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--out", default=OUT_JSON)
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip the Pallas-backward column (fast CI)")
     args = ap.parse_args(argv)
-    sweep(batch=args.batch, iters=args.iters, out=args.out)
+    sweep(batch=args.batch, iters=args.iters, out=args.out,
+          fused=not args.no_fused)
 
 
 if __name__ == "__main__":

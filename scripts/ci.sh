@@ -5,6 +5,19 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== dev deps (hypothesis: property tests run natively; without it"
+echo "   the _hypothesis_compat fallback runner still executes them) =="
+python -m pip install -q -r requirements-dev.txt 2>/dev/null \
+  || echo "  (pip install skipped — offline; fallback runner active)"
+python - <<'PY'
+try:
+    import hypothesis
+    print(f"  hypothesis {hypothesis.__version__}: property tests native")
+except ModuleNotFoundError:
+    print("  hypothesis missing: property tests via _hypothesis_compat "
+          "fallback runner (they RUN, not skip)")
+PY
+
 echo "== tier-1 test suite =="
 python -m pytest -x -q
 
@@ -17,8 +30,9 @@ python -c "import repro.sd; repro.sd.selfcheck(verbose=True)"
 echo "== trainable kernel-path smoke (1-step DCGAN, grad parity) =="
 python examples/train_dcgan.py --steps 1 --small --deconv-impl sd_kernel --grad-check
 
-echo "== generative serving smoke (serve_gen --dryrun: 2-D/1-D/3-D/seg) =="
-python -m repro.launch.serve_gen --dryrun
+echo "== generative serving smoke (serve_gen --dryrun: 2-D/1-D/3-D/seg; "
+echo "   --pretune warms the (net, bucket) plan cache, no-op on xla) =="
+python -m repro.launch.serve_gen --dryrun --pretune
 
 echo "== N-D sweep smoke (nd_bench --smoke, parity-gated) =="
 python -m benchmarks.nd_bench --smoke --iters 1 --out /tmp/BENCH_nd_smoke.json
@@ -47,6 +61,39 @@ for shape_x, shape_w, s, p, op in [((2, 9, 3), (5, 3, 2), 2, 1, 1),
     np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
                                rtol=1e-4, atol=1e-4)
 print("N-D grad parity: OK")
+PY
+
+echo "== HBM-traffic regression gate (zero-copy vs pad/crop, DCGAN d1) =="
+python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.deconv import same_deconv_pads, split_filters
+from repro.kernels.autotune import ConvGeom, heuristic_plan
+from repro.kernels.ops import sd_deconv_presplit_fused, ws_to_ocmajor
+from repro.launch.hlo_analysis import cost_dict
+
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(1, 8, 8, 256), jnp.float32)      # DCGAN d1
+w = jnp.asarray(rng.randn(5, 5, 256, 128) * 0.05, jnp.float32)
+pads = same_deconv_pads(5, 2)
+ws = ws_to_ocmajor(split_filters(w, 2), 2)
+# Deterministic plan: the gate measures the pad/crop machinery, not
+# whatever tile a stale tuner cache resolves on this machine.
+plan = heuristic_plan(ConvGeom.from_deconv(1, 8, 8, 256, 128, 5, 2,
+                                           padding=pads))
+
+def bytes_of(zero_copy):
+    f = jax.jit(lambda a: sd_deconv_presplit_fused(
+        a, ws, (5, 5), 2, pads, plan=plan, zero_copy=zero_copy))
+    cost = cost_dict(f.lower(x).compile().cost_analysis())
+    return int(cost.get("bytes accessed", 0))
+
+zc, pc = bytes_of(True), bytes_of(False)
+assert zc < pc, (
+    f"zero-copy path regressed: {zc:,} bytes accessed vs {pc:,} for "
+    "the pad/crop composition")
+print(f"HBM gate OK: zero-copy {zc:,} < pad/crop {pc:,} bytes "
+      f"({1 - zc/pc:.0%} less)")
 PY
 
 echo "== kernel parity smoke (interpret mode) =="

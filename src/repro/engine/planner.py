@@ -32,13 +32,15 @@ both work.  Bound plans themselves are pytrees and may be passed
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+import math
+from typing import Any, Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.accounting import LayerSpec, NetworkSpec
-from repro.core.deconv import same_deconv_pads
+from repro.core.deconv import _ntuple, same_deconv_pads
+from repro.kernels import autotune
 from repro.kernels.autotune import ConvGeom, get_plan
 from repro.sd import functional as sd_functional
 from repro.sd.plan import (BACKENDS, DeconvPlan, plan as make_plan,
@@ -52,13 +54,20 @@ LayerPlan = DeconvPlan
 
 
 def fold_scale_ocmajor(ws_ocmajor: jax.Array, scale: jax.Array,
-                       s: int) -> jax.Array:
-    """Fold a per-output-channel scale into oc-major split filters.
+                       s) -> jax.Array:
+    """Fold a per-output-channel scale into oc-major split filters,
+    any rank.
 
-    oc-major channel c = oc*s^2 + phase, so each scale entry covers s^2
-    consecutive phase channels.
+    oc-major channel c = oc*phases + phase, so each scale entry covers
+    ``phases = prod(s)`` consecutive phase channels — ``s^d`` for the
+    rank ``d`` implied by the filter array (``ws.ndim - 2``), not the
+    2-D-only ``s*s`` this helper used to hardcode.  ``s`` may be an int
+    (hypercubic) or a per-dim stride tuple.
     """
-    return ws_ocmajor * jnp.repeat(scale.astype(ws_ocmajor.dtype), s * s)
+    rank = ws_ocmajor.ndim - 2
+    phases = math.prod(_ntuple(s, rank))
+    return ws_ocmajor * jnp.repeat(scale.astype(ws_ocmajor.dtype),
+                                   phases)
 
 
 class SDEngine:
@@ -115,10 +124,8 @@ class SDEngine:
         pads = (same_deconv_pads(kernel, stride)
                 if layer.padding == "same" else layer.pad)
         tile = None
-        if rank == 2:
-            geom = ConvGeom.from_deconv(self.plan_batch, *layer.in_hw,
-                                        layer.cin, layer.cout, layer.k,
-                                        layer.s)
+        geom = self.layer_geom(layer)
+        if geom is not None:
             tile = get_plan(geom)
         return make_plan(
             (*kernel, layer.cin, layer.cout), stride, pads,
@@ -172,6 +179,77 @@ class SDEngine:
                 and all(a is b for a, b in
                         zip(leaves, self._bound_leaves)))
 
+    # ---- batch-aware tiles ----------------------------------------------
+    def layer_geom(self, layer: LayerSpec,
+                   batch: Optional[int] = None) -> Optional[ConvGeom]:
+        """Autotune geometry of one deconv layer's fused launch at
+        ``batch`` (defaults to ``plan_batch``).  Rank-2 only — the 1-D
+        and 3-D lowerings resolve their tiles at call time from the
+        lowered geometry."""
+        if layer.rank != 2:
+            return None
+        pads = (same_deconv_pads(layer.k, layer.s)
+                if layer.padding == "same" else layer.pad)
+        return ConvGeom.from_deconv(batch or self.plan_batch,
+                                    *layer.in_hw, layer.cin, layer.cout,
+                                    layer.k, layer.s, padding=pads)
+
+    def plans_for_batch(self, batch: int) -> Dict[str, DeconvPlan]:
+        """The cached bound plans with tiles re-resolved for ``batch``.
+
+        A plan's tile is part of its static geometry, and the tile that
+        wins at ``plan_batch=1`` is generally wrong at batch 16 — this
+        is what lets the bucketed serving stack key tiles to the bucket
+        it actually launches instead of silently reusing the bind-time
+        batch (re-tiling shares the split filter arrays; nothing is
+        re-split)."""
+        if batch == self.plan_batch:
+            return self.plans()
+        layers = {l.name: l for l in self.spec.layers
+                  if l.kind == "deconv"}
+        out: Dict[str, DeconvPlan] = {}
+        for name, plan in self._plans.items():
+            geom = self.layer_geom(layers[name], batch)
+            out[name] = (plan if geom is None
+                         else plan.with_tile(get_plan(geom)))
+        return out
+
+    def pretune(self, batches: Iterable[int], iters: int = 3,
+                path: Optional[str] = None) -> Dict[str, Any]:
+        """Measure-and-cache tile plans for every (deconv layer, batch)
+        geometry in ``batches`` — the serving warm-up behind
+        ``serve_gen --pretune``.  Runs the real presplit hot path
+        (:func:`repro.sd.execute`) per candidate, so it needs bound
+        plans.  Tile plans only steer the fused backend; on xla this is
+        a no-op.  Returns ``{geom key: winning KernelPlan}``."""
+        tuned: Dict[str, Any] = {}
+        if self.backend != "fused":
+            return tuned
+        if not self._plans:
+            raise ValueError("pretune() needs bound plans; bind() first")
+        layers = {l.name: l for l in self.spec.layers
+                  if l.kind == "deconv"}
+        for name, plan in self._plans.items():
+            layer = layers[name]
+            if self.layer_geom(layer) is None:
+                continue                       # rank 1/3: call-time tiles
+            dtype = (plan.ws.dtype if plan.ws is not None
+                     else jnp.float32)
+            for b in sorted({int(x) for x in batches}):
+                geom = self.layer_geom(layer, b)
+                x = jnp.zeros((b, *layer.in_hw, layer.cin), dtype)
+
+                def runner(tile, _x=x, _plan=plan):
+                    p2 = _plan.with_tile(tile)
+                    fn = jax.jit(sd_functional.execute)
+                    return autotune.measure(
+                        lambda: jax.block_until_ready(fn(p2, _x)),
+                        iters=iters)
+
+                tuned[geom.key()] = autotune.tune(geom, runner,
+                                                  path=path)
+        return tuned
+
     # ---- hot path --------------------------------------------------------
     def run(self, name: str, x: jax.Array) -> jax.Array:
         """Deconv + folded BN + activation for layer ``name`` from the
@@ -187,8 +265,8 @@ class SDEngine:
                  f"({len(self._plans)} deconv layers)"]
         for name, plan in self._plans.items():
             kt = -(-plan.kernel[0] // plan.s)
-            tile = (f"tile=(th={plan.tile.th}, tcin={plan.tile.tcin}, "
-                    f"tcout={plan.tile.tcout})"
+            tile = (f"tile=(th={plan.tile.th}, tw={plan.tile.tw}, "
+                    f"tcin={plan.tile.tcin}, tcout={plan.tile.tcout})"
                     if plan.tile is not None else "tile=call-time")
             lines.append(
                 f"  {name}: rank={plan.rank} K={plan.kernel[0]} "

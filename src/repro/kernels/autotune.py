@@ -1,8 +1,9 @@
 """Tile-plan autotuner for the SD Pallas kernels.
 
 The kernels in :mod:`repro.kernels.sd_conv` are parameterised by a tile
-plan ``(th, tcin, tcout)`` — output-row band height, input-channel tile
-and output-channel tile.  The right plan depends on the layer geometry
+plan ``(th, tw, tcin, tcout)`` — output-row band height, output-column
+band width (0 = one band spans the full width), input-channel tile and
+output-channel tile.  The right plan depends on the layer geometry
 (spatial size vs channel depth decides whether rows or channels should
 carry the MXU occupancy), so a fixed plan leaves performance on the
 table exactly as the paper's related work (HUGE^2, the FPGA design-
@@ -11,11 +12,18 @@ methodology line) observes for deconv dataflows.
 This module provides:
 
 * :class:`ConvGeom` — the key: the *executed* stride-1 conv geometry
-  ``(b, h, w, cin, cout, kt, s)`` where ``h/w`` are the already-padded
-  input sizes, ``cout`` counts deconv output channels (oc units) and
-  ``s`` is the in-kernel interleave factor (1 for the plain conv kernel).
+  ``(b, h, w, cin, cout, kt, s)`` where ``h/w`` are the P_I-padded
+  input sizes (the zero-copy kernels apply that pad in-kernel, but the
+  geometry — and therefore the cache key — is unchanged), ``cout``
+  counts deconv output channels (oc units) and ``s`` is the in-kernel
+  interleave factor (1 for the plain conv kernel).  ``tag`` names
+  non-forward launches (the backward's input-grad / filter-grad convs)
+  so their plans never collide with forward plans of the same shape.
 * :func:`heuristic_plan` — a cheap default used when no measured plan
   exists (replaces the old hard-coded ``_pick_th``).
+* :func:`vmem_plan_bytes` — the VMEM footprint model the heuristic and
+  the candidate filter share: input band (halo included), filter block,
+  f32 accumulator and output tile — not just the filter block.
 * :func:`candidate_plans` — the search space for a geometry.
 * :func:`tune` — measure every candidate with a caller-supplied runner
   and persist the winner to a JSON cache.
@@ -27,8 +35,11 @@ Cache format (JSON, see DESIGN.md)::
 
     {"version": 1,
      "plans": {"b1_h12w12_ci256_co128_kt3_s2":
-                   {"th": 8, "tcin": 128, "tcout": 64, "ms": 0.41,
-                    "source": "measured", "backend": "tpu"}}}
+                   {"th": 8, "tw": 0, "tcin": 128, "tcout": 64,
+                    "ms": 0.41, "source": "measured", "backend": "tpu"}}}
+
+Entries written before the ``tw`` dimension existed load with ``tw=0``
+(full-width bands — exactly what those plans measured).
 
 Entries are gated on the backend they were measured on: interpret-mode
 CPU winners never leak into a TPU run (and vice versa).
@@ -44,7 +55,7 @@ import json
 import os
 import tempfile
 import time
-from dataclasses import asdict, dataclass
+from dataclasses import asdict, dataclass, replace as dataclasses_replace
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -60,10 +71,14 @@ _MEM: Dict[str, Dict[str, dict]] = {}
 @dataclass(frozen=True)
 class KernelPlan:
     """Tile sizes for one kernel launch. ``tcout`` is in oc units (the
-    fused kernel's accumulator holds ``tcout * s^2`` phase channels)."""
+    fused kernel's accumulator holds ``tcout * s^2`` phase channels);
+    ``tw == 0`` means one band spans the full output width (the only
+    shape pre-``tw`` plans ever measured, so old cache entries load
+    unchanged)."""
     th: int
     tcin: int
     tcout: int
+    tw: int = 0
 
 
 @dataclass(frozen=True)
@@ -73,8 +88,10 @@ class ConvGeom:
     ``ktw``/``sw`` (0 = "same as ``kt``/``s``", the square 2-D default)
     describe rectangular kernels and per-dim interleave factors — the
     1-D rank lowering runs a ``(1, KT)`` filter with interleave
-    ``(1, s)`` through the same Pallas kernel.  Square geometries keep
-    their historical cache keys.
+    ``(1, s)`` through the same Pallas kernel.  ``tag`` distinguishes
+    launch *roles* on identical shapes: "" is the forward, "dx" the
+    backward's input-grad FULL conv, "dw" the filter-grad conv.  Square
+    untagged geometries keep their historical cache keys.
     """
     b: int
     h: int          # padded input rows (Hp)
@@ -85,26 +102,59 @@ class ConvGeom:
     s: int          # interleave factor (1: plain conv kernel)
     ktw: int = 0    # col-kernel taps (0: square, == kt)
     sw: int = 0     # col interleave (0: square, == s)
+    tag: str = ""   # launch role ("" fwd | "dx" | "dw")
+    # Zero-copy launch shape (not part of the cache key: the plan for a
+    # padded geometry is reused across crops, an approximation the key
+    # always made implicitly).  out_h/out_w are the FINAL deconv output
+    # rows/cols; crop_h/crop_w the low-side interleaved-coordinate crop
+    # (-1 = unknown, pre-zero-copy callers).  When known, the row/col
+    # tile options align output tiles to the final geometry (th*s | OH)
+    # — partial trailing blocks waste compute and, off TPU, an extra
+    # output slice.
+    out_h: int = 0
+    out_w: int = 0
+    crop_h: int = -1
+    crop_w: int = -1
 
     def key(self) -> str:
         base = (f"b{self.b}_h{self.h}w{self.w}_ci{self.cin}"
                 f"_co{self.cout}_kt{self.kt}_s{self.s}")
         if self.ktw or self.sw:
             base += f"_ktw{self.ktw or self.kt}_sw{self.sw or self.s}"
+        if self.tag:
+            base += f"_{self.tag}"
         return base
 
     @property
     def oh(self) -> int:
         return self.h - self.kt + 1
 
+    @property
+    def ow(self) -> int:
+        return self.w - (self.ktw or self.kt) + 1
+
     @classmethod
     def from_deconv(cls, b: int, h: int, w: int, cin: int, cout: int,
-                    k: int, s: int) -> "ConvGeom":
+                    k: int, s: int, padding=None,
+                    output_padding: int = 0) -> "ConvGeom":
         """Geometry of the conv that SD runs for a (H,W,Cin,Cout,K,s)
-        deconv layer: input padded by P_I = K_T - 1 per side."""
+        deconv layer: input padded by P_I = K_T - 1 per side.  When the
+        user ``padding`` is known, the final output shape and crop are
+        attached (key-neutral) so the tile options can align output
+        tiles to the final geometry."""
         kt = -(-k // s)
         pi = kt - 1
-        return cls(b, h + 2 * pi, w + 2 * pi, cin, cout, kt, s)
+        geom = cls(b, h + 2 * pi, w + 2 * pi, cin, cout, kt, s)
+        if padding is None:
+            return geom
+        from repro.core.deconv import _pads, deconv_output_shape
+        pk = s * kt - k
+        pads = _pads(padding)
+        oh_f, ow_f = deconv_output_shape((h, w), k, s, padding,
+                                         output_padding)
+        return dataclasses_replace(
+            geom, out_h=oh_f, out_w=ow_f,
+            crop_h=pk + pads[0][0], crop_w=pk + pads[1][0])
 
 
 def _divisor_tiles(c: int, prefer: tuple = (128, 64, 32, 16, 8)) -> List[int]:
@@ -129,50 +179,157 @@ def _row_cost(oh: int, t: int) -> int:
     return steps * t + 4 * steps            # padded rows + step overhead
 
 
+def _aligned_row_tiles(geom: ConvGeom) -> Optional[set]:
+    """Row-band candidates for a zero-copy fused launch (``s > 1`` with
+    known final output/crop): powers of two plus divisors of
+    ``ceil(OH/s)``, so ``th*s | OH`` options exist.  ``None`` for
+    geometries without crop info — one definition shared by the
+    heuristic and the tuner's candidate pool so they can never drift."""
+    if not (geom.s > 1 and geom.out_h > 0 and geom.crop_h >= 0):
+        return None
+    unit = -(-geom.out_h // geom.s)         # conv rows "worth" of output
+    opts = {t for t in (1, 2, 4, 8, 16, 32, 64) if t <= max(unit, 2)}
+    opts |= {d for d in range(2, min(unit, 64) + 1) if unit % d == 0}
+    return opts
+
+
+def _pick_th(geom: ConvGeom) -> int:
+    """Row band for one launch.  Zero-copy fused geometries (interleave
+    ``s > 1`` with a known final output) align output tiles to the
+    final geometry: a tile covers ``th*s`` output rows, so the cost is
+    wasted *output* rows of the trailing partial block (plus the same
+    per-step overhead proxy) — ``th*s | OH`` candidates win, which also
+    skips the cropped conv rows entirely (the ``c // s`` band offset).
+    Geometries without crop info keep the historical conv-row rule."""
+    aligned = _aligned_row_tiles(geom)
+    if aligned is not None:
+        out_h, s = geom.out_h, geom.s
+
+        def cost(t: int):
+            nh = -(-out_h // (t * s))
+            waste = nh * t * s - out_h      # partial trailing block
+            return (waste + 4 * nh, -t)
+
+        return min(sorted(aligned), key=cost)
+    oh = geom.oh
+    return min(_row_tile_options(oh),
+               key=lambda t: (_row_cost(oh, t), -t))
+
+
+# Per-launch VMEM budget for the footprint model: half the ~16 MiB core
+# VMEM, leaving headroom for double buffering and the bias block.
+VMEM_BUDGET = 8 << 20
+
+# Filter-block sub-budget, kept from the pre-``tw`` heuristic so plan
+# keys/choices on narrow layers are stable (and asserted by tests).
+_FILTER_BUDGET = 2 << 20
+
+
+def vmem_plan_bytes(geom: ConvGeom, plan: KernelPlan) -> int:
+    """f32 VMEM footprint of one grid step: input band *including the
+    (K_T - 1) halo and the residual-crop row*, filter block, f32
+    accumulator and interleaved output tile — the pre-``tw`` heuristic
+    only modelled the filter block, which is how full-width bands on
+    wide layers (artgan/fst/mde) blew past the real budget."""
+    kt, ktw = geom.kt, geom.ktw or geom.kt
+    s, sw = geom.s, geom.sw or geom.s
+    phases = s * sw
+    th = plan.th
+    tw = plan.tw or geom.ow
+    band = (th + 1 + kt - 1) * (tw + 1 + ktw - 1) * plan.tcin
+    filt = kt * ktw * plan.tcin * plan.tcout * phases
+    acc = (th + 1) * (tw + 1) * plan.tcout * phases
+    out = th * s * tw * sw * plan.tcout
+    return 4 * (band + filt + acc + out)
+
+
+def _fits_budget(geom: ConvGeom, plan: KernelPlan) -> bool:
+    kt_area = geom.kt * (geom.ktw or geom.kt)
+    phases = geom.s * (geom.sw or geom.s)
+    return (vmem_plan_bytes(geom, plan) <= VMEM_BUDGET
+            and kt_area * plan.tcin * plan.tcout * phases * 4
+            <= _FILTER_BUDGET)
+
+
 def heuristic_plan(geom: ConvGeom) -> KernelPlan:
     """Untuned default.  Row band: minimise padded rows + a per-grid-step
     overhead proxy over :func:`_row_tile_options` (a pure power-of-two
     rule pads OH=34 by 41%; a divisor-only rule collapses to th=1 on
-    prime OH — both pathological).  Channels: full depth unless the
-    filter block would blow VMEM."""
-    oh = geom.oh
-    th = min(_row_tile_options(oh), key=lambda t: (_row_cost(oh, t), -t))
-    tcin, tcout = geom.cin, geom.cout
-    kt_area = geom.kt * (geom.ktw or geom.kt)
+    prime OH — both pathological).  Width: full bands until the VMEM
+    model says otherwise.  Channels: full depth unless the budget forces
+    tiling of the deeper axis."""
+    th = _pick_th(geom)
+    tcin, tcout, tw = geom.cin, geom.cout, 0
     phases = geom.s * (geom.sw or geom.s)
-    # Keep the per-step filter block under ~2 MiB f32 so weights + halo +
-    # accumulator fit VMEM comfortably: tile the deeper channel axis.
-    while (kt_area * tcin * tcout * phases) * 4 > 2 << 20:
+    while not _fits_budget(geom, KernelPlan(th=th, tcin=tcin,
+                                            tcout=tcout, tw=tw)):
+        # Shrink the axis that buys the most: channels first (they scale
+        # both the filter block and the accumulator), then the band
+        # width, then the row band.
         if tcin >= tcout * phases and tcin % 2 == 0:
             tcin //= 2
         elif tcout % 2 == 0:
             tcout //= 2
+        elif (tw or geom.ow) > 8:
+            tw = max(8, (tw or geom.ow) // 2)
+        elif th > 1:
+            th = max(1, th // 2)
         else:
             break
-    return KernelPlan(th=th, tcin=tcin, tcout=tcout)
+    return KernelPlan(th=th, tcin=tcin, tcout=tcout, tw=tw)
 
 
-def candidate_plans(geom: ConvGeom, max_candidates: int = 8
+def _col_tile_options(geom: ConvGeom) -> List[int]:
+    """Width-band candidates: full width (0) plus halved bands down to
+    the 128-lane granularity — only worth searching on wide layers."""
+    opts = [0]
+    tw = geom.ow
+    while tw > 128:
+        tw = -(-tw // 2)
+        opts.append(tw)
+    return opts
+
+
+def candidate_plans(geom: ConvGeom, max_candidates: int = 8,
+                    enforce_budget: Optional[bool] = None
                     ) -> List[KernelPlan]:
-    """Deduplicated (th, tcin, tcout) search space for one geometry."""
+    """Deduplicated (th, tw, tcin, tcout) search space for one geometry.
+
+    The VMEM footprint model gates candidates **on TPU only** (a plan
+    that does not fit VMEM cannot launch there); in interpret mode
+    there is no VMEM and grid-step overhead dominates, so over-budget
+    full-channel plans stay in the pool and *measurement* decides —
+    plans are backend-gated in the cache, so a CPU winner never steers
+    a TPU run anyway."""
+    if enforce_budget is None:
+        enforce_budget = jax.default_backend() == "tpu"
     oh = geom.oh
     base = heuristic_plan(geom)
     ths = set(_row_tile_options(oh)) - {1}
+    ths |= (_aligned_row_tiles(geom) or set()) - {1}
     ths.add(base.th)
+    tws = set(_col_tile_options(geom))
+    tws.add(base.tw)
     cands: List[KernelPlan] = [base]
     seen = {base}
     for th in sorted(ths, reverse=True):
-        for tcin in _divisor_tiles(geom.cin):
-            for tcout in _divisor_tiles(geom.cout):
-                p = KernelPlan(th=th, tcin=tcin, tcout=tcout)
-                if p not in seen:
+        for tw in sorted(tws):
+            for tcin in _divisor_tiles(geom.cin):
+                for tcout in _divisor_tiles(geom.cout):
+                    p = KernelPlan(th=th, tcin=tcin, tcout=tcout, tw=tw)
+                    if p in seen:
+                        continue
+                    if enforce_budget and not _fits_budget(geom, p):
+                        continue
                     seen.add(p)
                     cands.append(p)
     # Rank: heuristic first, then prefer fewer grid steps (cheap proxy),
     # and cap the list so tuning stays fast.
     def steps(p: KernelPlan) -> int:
         rows = -(-oh // p.th)
-        return rows * (geom.cin // p.tcin) * (geom.cout // p.tcout)
+        cols = -(-geom.ow // (p.tw or geom.ow))
+        return (rows * cols * (geom.cin // p.tcin)
+                * (geom.cout // p.tcout))
 
     cands.sort(key=lambda p: (p != base, steps(p)))
     return cands[:max_candidates]
@@ -231,8 +388,10 @@ def save_cache(plans: Dict[str, dict], path: Optional[str] = None) -> str:
 
 
 def _plan_from_entry(entry: dict) -> KernelPlan:
+    # Pre-``tw`` cache entries measured full-width bands: tw defaults 0.
     return KernelPlan(th=int(entry["th"]), tcin=int(entry["tcin"]),
-                      tcout=int(entry["tcout"]))
+                      tcout=int(entry["tcout"]),
+                      tw=int(entry.get("tw", 0)))
 
 
 def get_plan(geom: ConvGeom, path: Optional[str] = None) -> KernelPlan:
@@ -278,11 +437,20 @@ def tune(geom: ConvGeom,
          runner: Callable[[KernelPlan], float],
          candidates: Optional[List[KernelPlan]] = None,
          path: Optional[str] = None,
-         force: bool = False) -> KernelPlan:
+         force: bool = False,
+         cost_fn: Optional[Callable[[KernelPlan], float]] = None,
+         tie_rtol: float = 0.1) -> KernelPlan:
     """Benchmark ``runner(plan) -> ms`` over the candidate set, persist
     and return the winner.  A cached measured plan short-circuits unless
     ``force``.  Candidates that raise are skipped (e.g. a tile shape the
-    backend rejects)."""
+    backend rejects).
+
+    ``cost_fn`` (optional) breaks wall-clock near-ties: among plans
+    within ``tie_rtol`` of the fastest, the one with the lowest cost
+    wins.  ``kernel_bench`` passes the launch's ``cost_analysis``
+    bytes-accessed — wall-clock on a noisy host cannot distinguish two
+    tile plans 5% apart, but HBM traffic (the thing that decides on
+    real hardware) can."""
     plans = dict(load_cache(path))
     key = geom.key()
     if not force:
@@ -308,6 +476,18 @@ def tune(geom: ConvGeom,
     if not best:                # every candidate failed: keep heuristic
         return heuristic_plan(geom)
     best_plan, best_ms = min(best.items(), key=lambda kv: kv[1])
+    if cost_fn is not None:
+        near = [p for p, ms in best.items()
+                if ms <= best_ms * (1 + tie_rtol)]
+        if len(near) > 1:
+            costs: Dict[KernelPlan, float] = {}
+            for p in near:
+                try:
+                    costs[p] = float(cost_fn(p))
+                except Exception:
+                    costs[p] = float("inf")
+            best_plan = min(near, key=lambda p: (costs[p], best[p]))
+            best_ms = best[best_plan]
 
     plans[key] = {**asdict(best_plan), "ms": round(best_ms, 4),
                   "source": "measured", "backend": jax.default_backend()}

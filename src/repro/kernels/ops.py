@@ -1,15 +1,28 @@
 """jit'd public wrappers around the Pallas kernels.
 
-These handle tile-alignment padding/cropping so callers see clean shapes,
-select interpret mode automatically off-TPU, and consult the autotuner
-(:mod:`repro.kernels.autotune`) for tile plans when the caller does not
-pin one — the hardcoded row-tile heuristic of the seed lives on only as
-the autotuner's fallback.
+Since the zero-copy rework the fused deconv path touches HBM exactly
+once per tensor: the ``P_I`` input pad is applied *inside* the kernel
+(border-masked halo reads), the ``P_K`` + user-padding crop is folded
+into the epilogue (offset band + trimmed ``out_shape``), and row/col
+grids ceil-divide the output so no alignment padding exists either.
+The old pad -> kernel -> crop composition survives as
+``zero_copy=False`` — it is the reference the parity tests and the CI
+HBM-traffic gate compare against.
+
+These wrappers select interpret mode automatically off-TPU and consult
+the autotuner (:mod:`repro.kernels.autotune`) for ``(th, tw, tcin,
+tcout)`` tile plans when the caller does not pin one — the hardcoded
+row-tile heuristic of the seed lives on only as the autotuner's
+fallback.  The backward's two stride-1 convolutions
+(:func:`sd_input_grad_fused`, :func:`sd_filter_grad_fused`) run through
+the same kernels under their own tagged ``ConvGeom`` plan keys — the
+fused backend is trainable on-kernel (see :mod:`repro.sd.grad`).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,51 +35,76 @@ from . import autotune
 from . import sd_conv as _k
 from .autotune import ConvGeom, KernelPlan
 
+PadPair = Tuple[int, int]
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve_plan(geom: ConvGeom, th, tcin, tcout) -> KernelPlan:
+def _resolve_plan(geom: ConvGeom, th, tcin, tcout,
+                  tw=None) -> KernelPlan:
     """Fill unpinned tile params from the autotuner's plan cache.
 
-    Fully pinned calls (the engine's hot path) skip the lookup entirely.
+    Fully pinned calls (the engine's hot path) skip the lookup entirely;
+    ``tw`` rides along with the pin (``None`` -> full-width bands, the
+    pre-``tw`` behaviour of pinned callers).
     """
     if th and tcin and tcout:
-        return KernelPlan(th=th, tcin=tcin, tcout=tcout)
+        return KernelPlan(th=th, tcin=tcin, tcout=tcout, tw=tw or 0)
     plan = autotune.get_plan(geom)
     return KernelPlan(th=th or plan.th, tcin=tcin or plan.tcin,
-                      tcout=tcout or plan.tcout)
+                      tcout=tcout or plan.tcout,
+                      tw=plan.tw if tw is None else tw)
 
 
-@functools.partial(jax.jit, static_argnames=("th", "tcin", "tcout"))
-def _sd_conv2d_valid_jit(x: jax.Array, w: jax.Array, th: int, tcin: int,
-                         tcout: int) -> jax.Array:
-    oh = x.shape[1] - w.shape[0] + 1
-    pad_rows = (-oh) % th
-    if pad_rows:
-        x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
-    y = _k.sd_conv_pallas(x, w, th=th, tcin=tcin, tcout=tcout,
-                          interpret=not _on_tpu())
-    return y[:, :oh] if pad_rows else y
+def _plan_kwargs(plan: Optional[KernelPlan]) -> dict:
+    if plan is None:
+        return {}
+    return dict(th=plan.th, tw=plan.tw, tcin=plan.tcin, tcout=plan.tcout)
+
+
+# ---------------------------------------------------------------------------
+# Stride-1 VALID conv (generic kernel)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("th", "tw", "tcin", "tcout",
+                                             "pad", "out_start",
+                                             "out_size"))
+def _sd_conv2d_valid_jit(x: jax.Array, w: jax.Array, th: int, tw: int,
+                         tcin: int, tcout: int,
+                         pad: Tuple[PadPair, PadPair],
+                         out_start: Tuple[int, int],
+                         out_size: Optional[Tuple[int, int]]) -> jax.Array:
+    return _k.sd_conv_pallas(x, w, th=th, tw=tw, tcin=tcin, tcout=tcout,
+                             pad=pad, out_start=out_start,
+                             out_size=out_size, interpret=not _on_tpu())
 
 
 def sd_conv2d_valid(x: jax.Array, w: jax.Array, th: int | None = None,
-                    tcin: int | None = None, tcout: int | None = None
+                    tcin: int | None = None, tcout: int | None = None,
+                    tw: int | None = None,
+                    pad: Tuple[PadPair, PadPair] = ((0, 0), (0, 0)),
+                    out_start: Tuple[int, int] = (0, 0),
+                    out_size: Optional[Tuple[int, int]] = None
                     ) -> jax.Array:
-    """Stride-1 VALID conv (B,H,W,Cin)x(KT,KT,Cin,Co) via the Pallas kernel.
+    """Stride-1 conv (B,H,W,Cin)x(KTh,KTw,Cin,Co) via the Pallas kernel.
 
-    Pads rows so the row-tile grid covers the output exactly, then crops.
-    The plan lookup happens OUTSIDE jit so the jit cache is keyed on the
-    resolved tiles — plans tuned later in the process take effect on the
-    next call instead of being baked in at first trace.
+    ``pad`` is zero padding applied *in kernel* (border-masked reads, no
+    padded HBM copy); ``out_start``/``out_size`` select a contiguous
+    output window so downstream crops fold into the launch.  The plan
+    lookup happens OUTSIDE jit so the jit cache is keyed on the resolved
+    tiles — plans tuned later in the process take effect on the next
+    call instead of being baked in at first trace.
     """
     b, h, wd, cin = x.shape
     kth, ktw, _, cout = w.shape
-    plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kth, 1,
-                                  ktw=0 if ktw == kth else ktw),
-                         th, tcin, tcout)
-    return _sd_conv2d_valid_jit(x, w, plan.th, plan.tcin, plan.tcout)
+    (plo_h, phi_h), (plo_w, phi_w) = pad
+    geom = ConvGeom(b, h + plo_h + phi_h, wd + plo_w + phi_w, cin, cout,
+                    kth, 1, ktw=0 if ktw == kth else ktw)
+    plan = _resolve_plan(geom, th, tcin, tcout, tw)
+    return _sd_conv2d_valid_jit(x, w, plan.th, plan.tw, plan.tcin,
+                                plan.tcout, pad, out_start, out_size)
 
 
 def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
@@ -80,29 +118,31 @@ def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
     return to_ocmajor(ws, s)
 
 
+# ---------------------------------------------------------------------------
+# Fused conv + interleave (+ epilogue)
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit,
-                   static_argnames=("s", "act", "th", "tcin", "tcout"))
-def _sd_deconv_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s,
-                         bias: jax.Array | None, act: str, th: int,
-                         tcin: int, tcout: int) -> jax.Array:
-    sh = s if isinstance(s, int) else s[0]
-    oh = x.shape[1] - ws_ocmajor.shape[0] + 1
-    pad_rows = (-oh) % th
-    if pad_rows:
-        x = jnp.pad(x, ((0, 0), (0, pad_rows), (0, 0), (0, 0)))
-    y = _k.sd_fused_pallas(x, ws_ocmajor, s, bias=bias, act=act,
-                           th=th, tcin=tcin, tcout=tcout,
-                           interpret=not _on_tpu())
-    return y[:, :oh * sh] if pad_rows else y
+                   static_argnames=("s", "act", "th", "tw", "tcin",
+                                    "tcout", "pad", "crop", "out_space"))
+def _sd_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s,
+                  bias: jax.Array | None, act: str, th: int, tw: int,
+                  tcin: int, tcout: int, pad, crop,
+                  out_space) -> jax.Array:
+    return _k.sd_fused_pallas(x, ws_ocmajor, s, bias=bias, act=act,
+                              th=th, tw=tw, tcin=tcin, tcout=tcout,
+                              pad=pad, crop=crop, out_space=out_space,
+                              interpret=not _on_tpu())
 
 
 def sd_deconv_fused(x: jax.Array, ws_ocmajor: jax.Array, s,
                     bias: jax.Array | None = None, act: str = "linear",
                     th: int | None = None, tcin: int | None = None,
-                    tcout: int | None = None) -> jax.Array:
-    """Fused split-conv + interleave (+ bias/activation epilogue).
-
-    x is the P_I-padded input; returns the uncropped interleaved output.
+                    tcout: int | None = None,
+                    tw: int | None = None) -> jax.Array:
+    """Fused split-conv + interleave on an *already padded* input,
+    returning the *uncropped* interleaved output — the pre-zero-copy
+    contract, kept for the reference path and the kernel unit tests.
     ``s`` is an int (square 2-D) or an ``(sh, sw)`` pair (the 1-D
     lowering).  Plan lookup is outside jit (see sd_conv2d_valid).
     """
@@ -113,9 +153,10 @@ def sd_deconv_fused(x: jax.Array, ws_ocmajor: jax.Array, s,
     plan = _resolve_plan(ConvGeom(b, h, wd, cin, cout, kth, sh,
                                   ktw=0 if ktw == kth else ktw,
                                   sw=0 if sw == sh else sw),
-                         th, tcin, tcout)
-    return _sd_deconv_fused_jit(x, ws_ocmajor, s, bias, act,
-                                plan.th, plan.tcin, plan.tcout)
+                         th, tcin, tcout, tw)
+    return _sd_fused_jit(x, ws_ocmajor, s, bias, act, plan.th, plan.tw,
+                         plan.tcin, plan.tcout, ((0, 0), (0, 0)), (0, 0),
+                         None)
 
 
 def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
@@ -123,10 +164,19 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
                              output_padding=0,
                              bias: jax.Array | None = None,
                              act: str = "linear",
-                             plan: KernelPlan | None = None) -> jax.Array:
-    """2-D transposed conv from *pre-split* oc-major filters via the fused
-    Pallas kernel: P_I input pad -> fused conv/interleave/epilogue ->
-    P_K + user-padding crop.
+                             plan: KernelPlan | None = None,
+                             zero_copy: bool = True) -> jax.Array:
+    """2-D transposed conv from *pre-split* oc-major filters via the
+    fused Pallas kernel.
+
+    The zero-copy default touches HBM exactly once per tensor: the
+    ``P_I`` pad is border-masked halo reads, the ``P_K`` + user-padding
+    crop is the phase-offset epilogue writing final output geometry, and
+    ``output_padding`` rows past the shuffled support come out of the
+    kernel as ``act(bias)`` (their input windows are fully masked) — no
+    out-of-kernel extend fallback.  ``zero_copy=False`` is the old
+    pad -> kernel -> crop composition, kept as the parity/traffic
+    reference.
 
     This is the engine's hot path (`repro.engine`): ``ws_ocmajor`` (with
     folded BN scale), ``bias`` and ``plan`` come from the per-layer plan
@@ -141,15 +191,36 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
     (kth, ktw), pk, (pih, piw) = sd_geometry((kh, kw), s)
     out_space = deconv_output_shape(x.shape[1:3], (kh, kw), s, padding,
                                     output_padding)
-    xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
-    kw_args = dict(th=plan.th, tcin=plan.tcin, tcout=plan.tcout) \
-        if plan is not None else {}
     sarg = s[0] if s[0] == s[1] else s
+    if zero_copy:
+        b, h, wd, cin = x.shape
+        cout = ws_ocmajor.shape[-1] // (s[0] * s[1])
+        if any(o == 0 for o in out_space):
+            # Degenerate geometry (a zero-extent output dim passes
+            # padding validation): nothing to launch — match the
+            # pad->kernel->crop reference, which crops to empty.
+            return jnp.zeros((b, *out_space, cout), x.dtype)
+        crop = tuple(pki + lo for pki, (lo, _) in zip(pk, pads))
+        rplan = plan if plan is not None else _resolve_plan(
+            ConvGeom(b, h + 2 * pih, wd + 2 * piw, cin, cout, kth, s[0],
+                     ktw=0 if ktw == kth else ktw,
+                     sw=0 if s[1] == s[0] else s[1],
+                     out_h=out_space[0], out_w=out_space[1],
+                     crop_h=crop[0], crop_w=crop[1]),
+            None, None, None)
+        return _sd_fused_jit(x, ws_ocmajor, sarg, bias, act, rplan.th,
+                             rplan.tw, rplan.tcin, rplan.tcout,
+                             ((pih, pih), (piw, piw)), crop,
+                             tuple(out_space))
+
+    # ---- reference composition: pad -> uncropped kernel -> crop ------
+    xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
+    kw_args = _plan_kwargs(plan)
     # When output_padding reaches past the shuffled support (op > high
     # crop), crop_interleaved zero-extends AFTER the kernel — so the
     # in-kernel bias/act epilogue would be missing on those rows.  Run
-    # the epilogue outside the kernel in that (rare) case, like the 3-D
-    # lowering does; the common case keeps the fully fused epilogue.
+    # the epilogue outside the kernel in that (rare) case; the common
+    # case keeps the fully fused epilogue.
     extend = any(opi > hi for (_, hi), opi in zip(pads, op))
     if not extend:
         full = sd_deconv_fused(xp, ws_ocmajor, sarg, bias=bias, act=act,
@@ -182,7 +253,9 @@ def sd_deconv_presplit_fused_1d(x: jax.Array, ws_ocmajor: jax.Array,
 
     x: (B, L, Cin); ws_ocmajor: (KT, Cin, Cout*s) with channel
     c = oc*s + phase.  The length axis becomes the kernel's width axis
-    (a (1, KT) filter, interleave (1, s)) — same kernel, no wasted MACs.
+    (a (1, KT) filter, interleave (1, s)) — same kernel, no wasted MACs,
+    and the zero-copy pad/crop folding applies to the length axis via
+    the kernel's width machinery.
     """
     (k,) = _ntuple(kernel, 1)
     (s,) = _ntuple(stride, 1)
@@ -208,10 +281,12 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
     n-major (N = s_d*s_h*s_w).  Each depth tap ``td`` of the split
     stride-1 conv is an *intra-slice* 2-D conv applied to a shifted band
     of depth slices — so each tap runs through the 2-D Pallas conv
-    kernel with (B * D_out) as the batch axis, the cross-slice coupling
-    is a plain f32 accumulation over the KT_d taps, and the 3-D
-    interleave + bias/act epilogue falls back to grouped-XLA layout ops
-    (``depth_to_space``).  No new kernels.
+    kernel with (B * D_out) as the batch axis and the H/W ``P_I`` pads
+    applied *in kernel* (only the depth pad is materialised, to slice
+    the tap bands from); the cross-slice coupling is a plain f32
+    accumulation over the KT_d taps, and the 3-D interleave + bias/act
+    epilogue falls back to grouped-XLA layout ops (``depth_to_space``).
+    No new kernels.
     """
     s = _ntuple(stride, 3)
     k = _ntuple(kernel, 3)
@@ -222,18 +297,19 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
     (ktd, kth, ktw), pk, pi = sd_geometry(k, s)
     out_space = deconv_output_shape(x.shape[1:4], k, s, padding,
                                     output_padding)
-    xp = jnp.pad(x, [(0, 0)] + [(p, p) for p in pi] + [(0, 0)])
-    b, dp, hp, wp, cin = xp.shape
+    xp = jnp.pad(x, ((0, 0), (pi[0], pi[0]), (0, 0), (0, 0), (0, 0)))
+    b, dp, h, wd, cin = xp.shape
     od = dp - ktd + 1
-    oh1, ow1 = hp - kth + 1, wp - ktw + 1
+    oh1, ow1 = h + 2 * pi[1] - kth + 1, wd + 2 * pi[2] - ktw + 1
     nco = ws_nmajor.shape[-1]
-    tile = dict(th=plan.th, tcin=plan.tcin, tcout=plan.tcout) \
-        if plan is not None else {}
+    tile = dict(th=plan.th, tw=plan.tw, tcin=plan.tcin,
+                tcout=plan.tcout) if plan is not None else {}
+    hw_pad = ((pi[1], pi[1]), (pi[2], pi[2]))
     acc = None
     for td in range(ktd):
         xs = jax.lax.slice_in_dim(xp, td, td + od, axis=1)
-        xs = xs.reshape(b * od, hp, wp, cin)
-        y2 = sd_conv2d_valid(xs, ws_nmajor[td], **tile)
+        xs = xs.reshape(b * od, h, wd, cin)
+        y2 = sd_conv2d_valid(xs, ws_nmajor[td], pad=hw_pad, **tile)
         y2 = y2.astype(jnp.float32)
         acc = y2 if acc is None else acc + y2
     y = acc.reshape(b, od, oh1, ow1, nco)
@@ -251,7 +327,8 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
 def sd_deconv_kernel(x: jax.Array, w: jax.Array, stride: int,
                      padding=0, *, bias: jax.Array | None = None,
                      act: str = "linear",
-                     plan: KernelPlan | None = None) -> jax.Array:
+                     plan: KernelPlan | None = None,
+                     zero_copy: bool = True) -> jax.Array:
     """Full SD transposed conv through the fused Pallas kernel.
 
     Drop-in replacement for core.sd_deconv (same semantics), with the
@@ -262,4 +339,94 @@ def sd_deconv_kernel(x: jax.Array, w: jax.Array, stride: int,
     s = int(stride)
     ws = ws_to_ocmajor(split_filters(w, s), s)
     return sd_deconv_presplit_fused(x, ws, w.shape[:2], s, padding,
-                                    bias=bias, act=act, plan=plan)
+                                    bias=bias, act=act, plan=plan,
+                                    zero_copy=zero_copy)
+
+
+# ---------------------------------------------------------------------------
+# Backward convolutions (the SD training path, see repro.sd.grad)
+# ---------------------------------------------------------------------------
+
+def sd_input_grad_fused(dy1: jax.Array, ws: jax.Array,
+                        pi: Tuple[int, int],
+                        space: Tuple[int, int],
+                        plan: KernelPlan | None = None) -> jax.Array:
+    """VJP of ``y1 = conv_valid_stride1(pad(x, P_I), ws)`` w.r.t. ``x``,
+    on the Pallas kernel: a FULL stride-1 conv of ``dy1`` with the
+    rot180, channel-swapped split filters, expressed as a pad-masked
+    VALID conv — the ``(K_T - 1)`` FULL-conv pad is border-masked halo
+    reads, and the trailing ``P_I`` crop (the pad^T of the forward) is
+    folded into the launch as an output window, so ``dx`` is written
+    directly at final geometry.
+
+    dy1: (B, O1h, O1w, N*Co); ws: split filters (KTh, KTw, Cin, N*Co);
+    returns dx: (B, *space, Cin).
+    """
+    kth, ktw = ws.shape[0], ws.shape[1]
+    w_t = jnp.swapaxes(ws[::-1, ::-1], -1, -2)     # rot180, swap ic/oc
+    b, o1h, o1w, nco = dy1.shape
+    cin = ws.shape[2]
+    geom = ConvGeom(b, o1h + 2 * (kth - 1), o1w + 2 * (ktw - 1), nco,
+                    cin, kth, 1, ktw=0 if ktw == kth else ktw, tag="dx")
+    rplan = plan or autotune.get_plan(geom)
+    return _sd_conv2d_valid_jit(
+        dy1, w_t, rplan.th, rplan.tw, rplan.tcin, rplan.tcout,
+        ((kth - 1, kth - 1), (ktw - 1, ktw - 1)), tuple(pi),
+        tuple(space))
+
+
+def _dw_fit_channels(o1: int, tcin: int, tcout: int) -> Tuple[int, int]:
+    """Shrink channel tiles until the filter-grad kernel's *actual*
+    per-step footprint fits VMEM.  Its blocks span the full ``O1``
+    extent (x: ``o1*tcin``, dy1: ``o1*tcout``, plus the accumulator and
+    output tile) — the generic conv-band model the autotuner's
+    heuristic uses does not describe this kernel, and full channel
+    depth on a wide layer would blow VMEM on TPU."""
+    def nbytes(ci: int, co: int) -> int:
+        return 4 * (o1 * ci + o1 * co + 2 * ci * co)
+
+    while nbytes(tcin, tcout) > autotune.VMEM_BUDGET:
+        if tcin >= tcout and tcin % 2 == 0:
+            tcin //= 2
+        elif tcout % 2 == 0:
+            tcout //= 2
+        else:
+            break
+    return tcin, tcout
+
+
+def sd_filter_grad_fused(x: jax.Array, dy1: jax.Array,
+                         kt: Tuple[int, int], pi: Tuple[int, int],
+                         plan: KernelPlan | None = None) -> jax.Array:
+    """VJP of ``y1 = conv_valid_stride1(pad(x, P_I), ws)`` w.r.t. ``ws``
+    on the Pallas filter-grad kernel: the batch/channel-exchanged VALID
+    conv, with the ``P_I`` activation pad applied in kernel — the padded
+    activation copy of the XLA formulation never exists.
+
+    x: (B, H, W, Cin) *unpadded*; dy1: (B, O1h, O1w, N*Co);
+    returns dws: (KTh, KTw, Cin, N*Co).  Unpinned channel tiles are
+    clamped to this kernel's own VMEM footprint (see _dw_fit_channels);
+    an explicitly pinned ``plan`` is trusted as-is.
+    """
+    b, h, wd, cin = x.shape
+    _, o1h, o1w, nco = dy1.shape
+    kth, ktw = kt
+    if plan is not None:
+        tcin, tcout = plan.tcin, plan.tcout
+    else:
+        geom = ConvGeom(b, h + 2 * pi[0], wd + 2 * pi[1], cin, nco, kth,
+                        1, ktw=0 if ktw == kth else ktw, tag="dw")
+        rplan = autotune.get_plan(geom)
+        tcin, tcout = _dw_fit_channels(o1h * o1w, rplan.tcin,
+                                       rplan.tcout)
+    return _sd_filter_grad_jit(x, dy1, kt, tuple((p, p) for p in pi),
+                               tcin, tcout)
+
+
+@functools.partial(jax.jit, static_argnames=("kt", "pad", "tcin",
+                                             "tcout"))
+def _sd_filter_grad_jit(x: jax.Array, dy1: jax.Array, kt, pad,
+                        tcin: int, tcout: int) -> jax.Array:
+    return _k.sd_filter_grad_pallas(x, dy1, kt, pad=pad, tcin=tcin,
+                                    tcout=tcout,
+                                    interpret=not _on_tpu())

@@ -1,37 +1,65 @@
-"""Pallas TPU kernels for Split Deconvolution.
+"""Pallas TPU kernels for Split Deconvolution — zero-copy edition.
 
-Two kernels:
+Three kernels:
 
-* ``sd_conv_kernel``   — stride-1 VALID convolution with the stacked split
-  filters (the grouped-GEMM view of SD).  Generic small-K conv kernel.
-* ``sd_fused_kernel``  — the same convolution, but each block *also*
+* ``sd_conv_kernel``        — stride-1 VALID convolution with the stacked
+  split filters (the grouped-GEMM view of SD).  Generic small-K conv
+  kernel, now with *in-kernel zero padding* (border-masked halo reads)
+  and an optional contiguous output window, so FULL convs and cropped
+  outputs never materialise padded/uncropped copies in HBM.
+* ``sd_fused_kernel``       — the same convolution, but each block *also*
   performs the paper's stride-``s`` output write: the s^2 phase outputs
-  are interleaved into the deconv output tile inside VMEM, so the
-  pixel-shuffle never materialises in HBM.  A bias + activation epilogue
-  runs on the interleaved tile while it is still in VMEM.
+  are interleaved into the deconv output tile inside VMEM, the bias +
+  activation epilogue runs on the interleaved tile, and the ``P_K`` +
+  user-padding crop is folded into the write (phase-offset epilogue +
+  trimmed ``out_shape``) — the tile leaves VMEM in final output
+  geometry.
+* ``sd_filter_grad_kernel`` — the filter-gradient VALID conv of the SD
+  backward (``dw[t] = sum_{b,v} xpad[b, v+t] dy1[b, v]``): one MXU
+  GEMM per (tap, cin-tile, cout-tile) grid step, batch as the innermost
+  accumulation axis.  Taps are the *output* spatial dim here, so the
+  generic conv kernel (which unrolls taps) cannot express it.
 
-TPU mapping (see DESIGN.md):
-  - grid = (batch, output-row-tiles, output-channel-tiles, input-channel-tiles)
+Zero-copy TPU mapping (see DESIGN.md "Memory traffic"):
+  - inputs are bound with ``pl.Unblocked(padding=...)`` element windows:
+    the index map may reach up to ``P_I`` (+ grid alignment) elements
+    outside the array and the kernel zero-fills the out-of-range
+    rows/cols of the VMEM band (``lax.broadcasted_iota`` masks) instead
+    of reading a padded HBM copy.  Off TPU (interpret mode) Pallas
+    materialises that window with *uninitialised* values, so the masks
+    are mandatory for correctness everywhere.
+  - grid = (batch, out-row-tiles, out-col-tiles, cout-tiles, cin-tiles)
     with the input-channel (reduction) axis innermost and marked
-    ``arbitrary`` in ``dimension_semantics``; the three outer axes are
-    ``parallel``.
-  - each step loads an input row-band with a (K_T - 1)-row halo
-    (``pl.unblocked`` element indexing) and a (K_T, K_T, TCin, TCout)
-    filter block,
-    and issues K_T^2 MXU matmuls of shape (TH*OW_pad, TCin) x (TCin, TCout).
+    ``arbitrary``; the four outer axes are ``parallel``.  Row/col grids
+    ceil-divide the output — trailing partial blocks are Pallas-managed.
+  - each step loads an input band with a (K_T - 1) halo per spatial dim
+    and a (K_Th, K_Tw, TCin, TCout) filter block, and issues K_Th*K_Tw
+    MXU matmuls of shape (rows*cols, TCin) x (TCin, TCout).
   - partial sums live in an f32 VMEM scratch accumulator that persists
     across the Cin-tile grid steps; the output block is written exactly
     once, by the epilogue at the last Cin tile (no HBM read-modify-write).
   - inputs may be bf16; the MXU accumulates in f32 and the epilogue casts
     back to the output dtype.
 
-Validated in interpret mode against ``ref.py`` (tests/test_kernels.py).
+Crop folding (the fused kernel).  With total low-side crop ``c`` per
+dim (``P_K`` + user padding), write ``c = s*q + r``: dropping ``q``
+whole interleave rows shifts the input band by ``q`` conv rows, and the
+residual ``r`` is a static slice of the interleaved VMEM tile — each
+grid step computes ``th + (1 if r else 0)`` conv rows, interleaves
+them, slices ``[r : r + th*s)`` and writes straight into final output
+geometry.  ``output_padding`` rows past the shuffled support fall out
+naturally: their input windows are fully masked, so the kernel writes
+``act(0 + bias)`` — exactly the zero-extension + epilogue semantics of
+the old out-of-kernel fallback.
+
+Validated in interpret mode against ``ref.py`` (tests/test_kernels.py,
+tests/test_zero_copy.py).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +69,8 @@ from jax.experimental.pallas import tpu as pltpu
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
+
+PadPair = Tuple[int, int]
 
 
 def _compiler_params(n_parallel: int, n_arbitrary: int):
@@ -58,135 +88,262 @@ def _apply_act(y: jax.Array, act: str) -> jax.Array:
     raise ValueError(f"unknown act {act!r}")
 
 
-def _conv_partial(x, w, *, kth: int, ktw: int, th: int, ow: int) -> jax.Array:
-    """K_T_h*K_T_w MXU matmuls over one (row-band, cin-tile, cout-tile)
-    block.
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
 
-    x: (TH+KTh-1, OW+KTw-1, TCin); w: (KTh, KTw, TCin, TC).
-    Returns the f32 partial sum of shape (TH*OW, TC).
+
+def _mask_band(xb: jax.Array, row0, col0, *, h: int, w: int,
+               pad_h: PadPair, pad_w: PadPair,
+               mask_h: bool, mask_w: bool) -> jax.Array:
+    """Zero-fill the out-of-range rows/cols of one VMEM input band.
+
+    ``xb``: (band_h, band_w, tc); ``row0``/``col0``: padded-coordinate
+    offset of element [0, 0] (traced).  Real data occupies padded rows
+    ``[pad_lo, pad_lo + extent)`` per dim; everything else in the
+    element window is uninitialised (interpret mode) or garbage (TPU
+    element window) and must read as the logical zero padding.  The
+    masks are elided entirely (``mask_* == False``) when the launch has
+    no padding on that dim — pre-padded callers pay nothing.
+    """
+    bh, bw = xb.shape[0], xb.shape[1]
+    mask = None
+    if mask_h:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 0) + row0
+        mask = (rows >= pad_h[0]) & (rows < pad_h[0] + h)
+    if mask_w:
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 1) + col0
+        mw = (cols >= pad_w[0]) & (cols < pad_w[0] + w)
+        mask = mw if mask is None else (mask & mw)
+    if mask is None:
+        return xb
+    return jnp.where(mask[..., None], xb, jnp.zeros((), xb.dtype))
+
+
+def _conv_partial(x, w, *, kth: int, ktw: int, rows: int,
+                  cols: int) -> jax.Array:
+    """K_T_h*K_T_w MXU matmuls over one (band, cin-tile, cout-tile) block.
+
+    x: (rows+KTh-1, cols+KTw-1, TCin); w: (KTh, KTw, TCin, TC).
+    Returns the f32 partial sum of shape (rows*cols, TC).
     """
     tcin = x.shape[-1]
-    acc = jnp.zeros((th * ow, w.shape[-1]), jnp.float32)
+    acc = jnp.zeros((rows * cols, w.shape[-1]), jnp.float32)
     for kh in range(kth):
         for kw in range(ktw):
-            patch = x[kh:kh + th, kw:kw + ow, :].reshape(th * ow, tcin)
+            patch = x[kh:kh + rows, kw:kw + cols, :].reshape(
+                rows * cols, tcin)
             acc += jnp.dot(patch.astype(jnp.float32),
                            w[kh, kw].astype(jnp.float32),
                            preferred_element_type=jnp.float32)
     return acc
 
 
+# ---------------------------------------------------------------------------
+# Generic stride-1 conv kernel (in-kernel pad + output window)
+# ---------------------------------------------------------------------------
+
 def _sd_conv_body(x_ref, w_ref, o_ref, acc_ref, *, kth: int, ktw: int,
-                  th: int, ow: int):
-    """One (batch, row-tile, cout-tile, cin-tile) grid step."""
-    ci = pl.program_id(3)
+                  th: int, tw: int, h: int, w: int, osh: int, osw: int,
+                  pad_h: PadPair, pad_w: PadPair,
+                  mask_h: bool, mask_w: bool):
+    """One (batch, row-tile, col-tile, cout-tile, cin-tile) grid step."""
+    ci = pl.program_id(4)
 
     @pl.when(ci == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kth=kth, ktw=ktw,
-                                  th=th, ow=ow)
+    xb = x_ref[0]
+    if mask_h or mask_w:
+        row0 = pl.program_id(1) * th + osh
+        col0 = pl.program_id(2) * tw + osw
+        xb = _mask_band(xb, row0, col0, h=h, w=w, pad_h=pad_h,
+                        pad_w=pad_w, mask_h=mask_h, mask_w=mask_w)
+    acc_ref[...] += _conv_partial(xb, w_ref[...], kth=kth, ktw=ktw,
+                                  rows=th, cols=tw)
 
-    @pl.when(ci == pl.num_programs(3) - 1)
+    @pl.when(ci == pl.num_programs(4) - 1)
     def _write():
-        o_ref[0] = acc_ref[...].reshape(th, ow, -1).astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].reshape(th, tw, -1).astype(o_ref.dtype)
 
 
 def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
-                   tcout: int | None = None, tcin: int | None = None,
+                   tw: int = 0, tcout: int | None = None,
+                   tcin: int | None = None,
+                   pad: Tuple[PadPair, PadPair] = ((0, 0), (0, 0)),
+                   out_start: Tuple[int, int] = (0, 0),
+                   out_size: Optional[Tuple[int, int]] = None,
                    interpret: bool = True) -> jax.Array:
-    """Stride-1 VALID conv via Pallas. x: (B,Hp,Wp,Cin); w: (KTh,KTw,Cin,Co).
+    """Stride-1 VALID conv over the logically zero-padded input.
 
-    The kernel may be rectangular (KTh != KTw) — this is what lets the
-    1-D rank lowering run an (1, KT) filter through the same kernel.
-    Caller guarantees: Hp  = n*th + KTh - 1 for integer n (see ops.py pad).
-    Output: (B, Hp-KTh+1, Wp-KTw+1, Co).
+    x: (B, H, W, Cin); w: (KTh, KTw, Cin, Co) — rectangular filters
+    allowed (the 1-D rank lowering runs a (1, KT) filter).
+
+    ``pad`` is applied *in kernel*: the launch binds ``x`` with an
+    ``Unblocked`` element window and zero-masks the out-of-range band
+    rows/cols in VMEM — no padded HBM copy exists.  ``out_start`` /
+    ``out_size`` select a contiguous window of the conv output (in conv
+    output == padded-input coordinates), folding any downstream crop
+    into the launch.  ``tw == 0`` means no width tiling (one band spans
+    the full output width).  Row/col grids ceil-divide the output; the
+    trailing partial blocks are handled by Pallas.
+
+    Output: (B, out_size[0], out_size[1], Co); defaults to the full conv
+    output ``(H + pad - KT + 1)`` per dim.
     """
-    b, hp, wp, cin = x.shape
+    b, h, wd, cin = x.shape
     kth, ktw, _, cout = w.shape
-    oh, ow = hp - kth + 1, wp - ktw + 1
-    assert oh % th == 0, (oh, th)
+    (plo_h, phi_h), (plo_w, phi_w) = pad
+    full_oh = h + plo_h + phi_h - kth + 1
+    full_ow = wd + plo_w + phi_w - ktw + 1
+    osh, osw = out_start
+    oh, ow = out_size if out_size is not None else (full_oh, full_ow)
+    tw = tw or ow
+    th = min(th, oh)
+    tw = min(tw, ow)
     tcout = tcout or cout
     tcin = tcin or cin
     assert cout % tcout == 0 and cin % tcin == 0
 
-    grid = (b, oh // th, cout // tcout, cin // tcin)
-    body = functools.partial(_sd_conv_body, kth=kth, ktw=ktw, th=th, ow=ow)
+    # Origin shift: reads start at padded coordinate ``out_start`` — the
+    # first min(out_start, pad_lo) padded rows/cols are never touched,
+    # so don't put them in the element window (off TPU that also keeps
+    # the window aligned to the band, avoiding the interpreter's
+    # round-up-to-block copies).
+    sh_h, sh_w = min(osh, plo_h), min(osw, plo_w)
+    plo_h, osh = plo_h - sh_h, osh - sh_h
+    plo_w, osw = plo_w - sh_w, osw - sh_w
+
+    nh, nw = _cdiv(oh, th), _cdiv(ow, tw)
+    # Element-window extents: the grid's ceil-division may over-reach the
+    # logical padding on the high side; grow the window (masked anyway).
+    win_hi_h = max(0, (nh - 1) * th + osh + th + kth - 1 - (plo_h + h))
+    win_hi_w = max(0, (nw - 1) * tw + osw + tw + ktw - 1 - (plo_w + wd))
+    mask_h = plo_h > 0 or win_hi_h > 0
+    mask_w = plo_w > 0 or win_hi_w > 0
+
+    grid = (b, nh, nw, cout // tcout, cin // tcin)
+    body = functools.partial(
+        _sd_conv_body, kth=kth, ktw=ktw, th=th, tw=tw, h=h, w=wd,
+        osh=osh, osw=osw, pad_h=(plo_h, phi_h), pad_w=(plo_w, phi_w),
+        mask_h=mask_h, mask_w=mask_w)
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
-            # Unblocked: the index map returns *element* offsets, which is
-            # what lets consecutive row bands overlap by the (KTh-1) halo.
-            pl.BlockSpec((1, th + kth - 1, wp, tcin),
-                         lambda bi, i, j, ci: (bi, i * th, 0, ci * tcin),
-                         indexing_mode=pl.unblocked),
+            # Unblocked: the index map returns *element* offsets in the
+            # padded coordinate frame, which is what lets consecutive
+            # bands overlap by the halo AND reach into the zero padding.
+            pl.BlockSpec(
+                (1, th + kth - 1, tw + ktw - 1, tcin),
+                lambda bi, i, j, co, ci: (bi, i * th + osh, j * tw + osw,
+                                          ci * tcin),
+                indexing_mode=pl.Unblocked(
+                    ((0, 0), (plo_h, win_hi_h), (plo_w, win_hi_w),
+                     (0, 0)))),
             pl.BlockSpec((kth, ktw, tcin, tcout),
-                         lambda bi, i, j, ci: (0, 0, ci, j)),
+                         lambda bi, i, j, co, ci: (0, 0, ci, co)),
         ],
-        out_specs=pl.BlockSpec((1, th, ow, tcout),
-                               lambda bi, i, j, ci: (bi, i, 0, j)),
+        out_specs=pl.BlockSpec((1, th, tw, tcout),
+                               lambda bi, i, j, co, ci: (bi, i, j, co)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, cout), x.dtype),
-        scratch_shapes=[pltpu.VMEM((th * ow, tcout), jnp.float32)],
-        compiler_params=_compiler_params(3, 1),
+        scratch_shapes=[pltpu.VMEM((th * tw, tcout), jnp.float32)],
+        compiler_params=_compiler_params(4, 1),
         interpret=interpret,
     )(x, w)
 
 
+# ---------------------------------------------------------------------------
+# Fused conv + interleave + epilogue kernel (in-kernel pad AND crop)
+# ---------------------------------------------------------------------------
+
 def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kth: int,
-                   ktw: int, th: int, ow: int, sh: int, sw: int, act: str):
-    """Conv + in-VMEM stride-s interleave (the paper's strided write).
+                   ktw: int, rh: int, rw: int, th: int, tw: int,
+                   sh: int, sw: int, res_h: int, res_w: int, act: str,
+                   h: int, w: int, q_h: int, q_w: int,
+                   pad_h: PadPair, pad_w: PadPair,
+                   mask_h: bool, mask_w: bool):
+    """Conv + in-VMEM stride-s interleave + crop-folded epilogue.
 
     w_ref holds oc-major split filters: channel c = oc*sh*sw +
     (py*sw + px), sliced to one TCout tile (TCout*sh*sw phase channels).
-    The epilogue at the last cin tile interleaves the sh*sw phases, adds
-    the per-oc bias and applies the activation before the single output
-    write — the deconv tile leaves VMEM finished.  ``sh == 1`` is the
-    1-D rank lowering (interleave along width only).
+    The step computes ``rh x rw`` conv rows (``th + 1`` when the residual
+    crop ``res`` is nonzero), the epilogue at the last cin tile
+    interleaves the sh*sw phases, adds the per-oc bias, applies the
+    activation, and writes the static slice ``[res : res + th*s)`` of
+    the interleaved tile — final output geometry, no HBM crop.
     """
-    ci = pl.program_id(3)
+    ci = pl.program_id(4)
 
     @pl.when(ci == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _conv_partial(x_ref[0], w_ref[...], kth=kth, ktw=ktw,
-                                  th=th, ow=ow)
+    xb = x_ref[0]
+    if mask_h or mask_w:
+        row0 = pl.program_id(1) * th + q_h
+        col0 = pl.program_id(2) * tw + q_w
+        xb = _mask_band(xb, row0, col0, h=h, w=w, pad_h=pad_h,
+                        pad_w=pad_w, mask_h=mask_h, mask_w=mask_w)
+    acc_ref[...] += _conv_partial(xb, w_ref[...], kth=kth, ktw=ktw,
+                                  rows=rh, cols=rw)
 
-    @pl.when(ci == pl.num_programs(3) - 1)
+    @pl.when(ci == pl.num_programs(4) - 1)
     def _epilogue():
         cphase = acc_ref.shape[-1]                 # TCout * sh*sw
         tc = cphase // (sh * sw)
-        y = acc_ref[...].reshape(th, ow, tc, sh, sw)  # c -> (oc, py, px)
-        y = y.transpose(0, 3, 1, 4, 2)              # (th, py, ow, px, oc)
-        y = y.reshape(th * sh, ow * sw, tc)
+        y = acc_ref[...].reshape(rh, rw, tc, sh, sw)  # c -> (oc, py, px)
+        y = y.transpose(0, 3, 1, 4, 2)              # (rh, py, rw, px, oc)
+        y = y.reshape(rh * sh, rw * sw, tc)
         y = y + b_ref[0].astype(jnp.float32)        # per-oc bias
-        o_ref[0] = _apply_act(y, act).astype(o_ref.dtype)
+        y = _apply_act(y, act)
+        # Residual crop: a *static* slice of the interleaved VMEM tile.
+        y = y[res_h:res_h + th * sh, res_w:res_w + tw * sw]
+        o_ref[0] = y.astype(o_ref.dtype)
 
 
 def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
                     bias: jax.Array | None = None, act: str = "linear",
-                    th: int = 8, tcout: int | None = None,
+                    th: int = 8, tw: int = 0, tcout: int | None = None,
                     tcin: int | None = None,
+                    pad: Tuple[PadPair, PadPair] = ((0, 0), (0, 0)),
+                    crop: Tuple[int, int] = (0, 0),
+                    out_space: Optional[Tuple[int, int]] = None,
                     interpret: bool = True) -> jax.Array:
-    """Fused SD: split-filter conv + interleaved (pixel-shuffled) write.
+    """Fused SD: split-filter conv + interleaved (pixel-shuffled) write,
+    zero-copy end to end.
 
-    x:  (B, Hp, Wp, Cin) with Hp = n*th + KTh - 1
+    x:  (B, H, W, Cin) — the *unpadded* input; ``pad`` (the ``P_I``
+        halo) is applied in kernel via border-masked element windows.
     ws_ocmajor: (KTh, KTw, Cin, Cout*sh*sw), channel c = oc*sh*sw + phase
     s:  interleave factor — an int (square, the 2-D path) or an
         ``(sh, sw)`` pair (the 1-D lowering passes ``(1, s)``).
     bias: (Cout,) added per output channel in the epilogue (folded-BN
           beta); ``act`` in {"linear", "relu", "tanh"} applied after.
-    returns (B, sh*(Hp-KTh+1), sw*(Wp-KTw+1), Cout) — uncropped deconv
-    output.
+    crop: low-side crop per dim in interleaved coordinates (``P_K`` +
+          user padding); folded into the launch as a ``c // s`` input
+          band offset plus a static ``c % s`` slice of the VMEM tile.
+    out_space: final output spatial shape (may extend past the shuffled
+          support — ``output_padding`` rows read fully-masked input and
+          come out as ``act(bias)``, matching the zero-extension
+          semantics).  Defaults to the uncropped interleave
+          ``s * (H + pad - KT + 1)``.
+
+    returns (B, *out_space, Cout) — final deconv output geometry, one
+    HBM write per element.
     """
     sh, sw = (s, s) if isinstance(s, int) else (int(s[0]), int(s[1]))
-    b, hp, wp, cin = x.shape
+    b, h, wd, cin = x.shape
     kth, ktw = ws_ocmajor.shape[0], ws_ocmajor.shape[1]
     cout = ws_ocmajor.shape[-1] // (sh * sw)
-    oh, ow = hp - kth + 1, wp - ktw + 1
-    assert oh % th == 0, (oh, th)
+    (plo_h, phi_h), (plo_w, phi_w) = pad
+    full_oh = h + plo_h + phi_h - kth + 1     # conv rows incl. pad
+    full_ow = wd + plo_w + phi_w - ktw + 1
+    oh, ow = (out_space if out_space is not None
+              else (full_oh * sh, full_ow * sw))
+    c_h, c_w = crop
+    q_h, res_h = c_h // sh, c_h % sh
+    q_w, res_w = c_w // sw, c_w % sw
     tcout = tcout or cout
     tcin = tcin or cin
     assert cout % tcout == 0 and cin % tcin == 0
@@ -194,26 +351,148 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
         bias = jnp.zeros((cout,), jnp.float32)
     bias2d = bias.astype(jnp.float32).reshape(1, cout)
 
-    grid = (b, oh // th, cout // tcout, cin // tcin)
-    body = functools.partial(_sd_fused_body, kth=kth, ktw=ktw, th=th,
-                             ow=ow, sh=sh, sw=sw, act=act)
+    th = min(th, _cdiv(oh, sh))
+    tw = tw or _cdiv(ow, sw)
+    tw = min(tw, _cdiv(ow, sw))
+    nh, nw = _cdiv(oh, th * sh), _cdiv(ow, tw * sw)
+    rh = th + (1 if res_h else 0)             # conv rows per step
+    rw = tw + (1 if res_w else 0)
+    # Origin shift: the q whole-interleave-row crop means the first q
+    # padded rows/cols are never read — keep them out of the element
+    # window (q <= P_I by construction: c < s*K_T).
+    sh_h, sh_w = min(q_h, plo_h), min(q_w, plo_w)
+    plo_h, q_h = plo_h - sh_h, q_h - sh_h
+    plo_w, q_w = plo_w - sh_w, q_w - sh_w
+    # Element-window extents: band rows [i*th + q, i*th + q + rh+KTh-1)
+    # in padded coords; the high side covers residual + grid over-reach.
+    win_hi_h = max(0, (nh - 1) * th + q_h + rh + kth - 1 - (plo_h + h))
+    win_hi_w = max(0, (nw - 1) * tw + q_w + rw + ktw - 1 - (plo_w + wd))
+    mask_h = plo_h > 0 or win_hi_h > 0
+    mask_w = plo_w > 0 or win_hi_w > 0
+
+    grid = (b, nh, nw, cout // tcout, cin // tcin)
+    body = functools.partial(
+        _sd_fused_body, kth=kth, ktw=ktw, rh=rh, rw=rw, th=th, tw=tw,
+        sh=sh, sw=sw, res_h=res_h, res_w=res_w, act=act, h=h, w=wd,
+        q_h=q_h, q_w=q_w, pad_h=(plo_h, phi_h), pad_w=(plo_w, phi_w),
+        mask_h=mask_h, mask_w=mask_w)
     ss = sh * sw
     return pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, th + kth - 1, wp, tcin),
-                         lambda bi, i, j, ci: (bi, i * th, 0, ci * tcin),
-                         indexing_mode=pl.unblocked),
+            pl.BlockSpec(
+                (1, rh + kth - 1, rw + ktw - 1, tcin),
+                lambda bi, i, j, co, ci: (bi, i * th + q_h, j * tw + q_w,
+                                          ci * tcin),
+                indexing_mode=pl.Unblocked(
+                    ((0, 0), (plo_h, win_hi_h), (plo_w, win_hi_w),
+                     (0, 0)))),
             pl.BlockSpec((kth, ktw, tcin, tcout * ss),
-                         lambda bi, i, j, ci: (0, 0, ci, j)),
-            pl.BlockSpec((1, tcout), lambda bi, i, j, ci: (0, j)),
+                         lambda bi, i, j, co, ci: (0, 0, ci, co)),
+            pl.BlockSpec((1, tcout), lambda bi, i, j, co, ci: (0, co)),
         ],
-        out_specs=pl.BlockSpec((1, th * sh, ow * sw, tcout),
-                               lambda bi, i, j, ci: (bi, i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, oh * sh, ow * sw, cout),
-                                       x.dtype),
-        scratch_shapes=[pltpu.VMEM((th * ow, tcout * ss), jnp.float32)],
-        compiler_params=_compiler_params(3, 1),
+        out_specs=pl.BlockSpec((1, th * sh, tw * sw, tcout),
+                               lambda bi, i, j, co, ci: (bi, i, j, co)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((rh * rw, tcout * ss), jnp.float32)],
+        compiler_params=_compiler_params(4, 1),
         interpret=interpret,
     )(x, ws_ocmajor, bias2d)
+
+
+# ---------------------------------------------------------------------------
+# Filter-gradient kernel (the SD backward's second stride-1 conv)
+# ---------------------------------------------------------------------------
+
+def _sd_filter_grad_body(x_ref, dy_ref, o_ref, acc_ref, *, ktw: int,
+                         o1h: int, o1w: int, h: int, w: int,
+                         pad_h: PadPair, pad_w: PadPair,
+                         mask_h: bool, mask_w: bool):
+    """One (tap, cin-tile, cout-tile, batch) grid step: a single MXU GEMM
+    ``(TCin, O1h*O1w) x (O1h*O1w, TCout)`` accumulated over the batch."""
+    bi = pl.program_id(3)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = x_ref[0]
+    if mask_h or mask_w:
+        tap = pl.program_id(0)
+        xb = _mask_band(xb, tap // ktw, tap % ktw, h=h, w=w,
+                        pad_h=pad_h, pad_w=pad_w,
+                        mask_h=mask_h, mask_w=mask_w)
+    m = o1h * o1w
+    lhs = xb.reshape(m, xb.shape[-1]).astype(jnp.float32)
+    rhs = dy_ref[0].reshape(m, dy_ref.shape[-1]).astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        lhs, rhs, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(bi == pl.num_programs(3) - 1)
+    def _write():
+        o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sd_filter_grad_pallas(x: jax.Array, dy1: jax.Array,
+                          kt: Tuple[int, int], *,
+                          pad: Tuple[PadPair, PadPair] = ((0, 0), (0, 0)),
+                          tcout: int | None = None,
+                          tcin: int | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """VJP of ``y1 = conv_valid_stride1(pad(x), ws)`` w.r.t. ``ws``.
+
+    x: (B, H, W, Cin) *unpadded* — the logical ``P_I`` pad is applied in
+    kernel (border-masked element window), so the padded activation copy
+    the XLA formulation materialises never exists.
+    dy1: (B, O1h, O1w, NCo) cotangent of the split conv output, with
+    O1 = H + pad - KT + 1 per dim.
+    Returns dws: (KTh, KTw, Cin, NCo).
+
+    The conv's taps are ``dy1``'s spatial extent (large), and its output
+    extent is ``KT`` (tiny) — the roles are inverted vs the forward
+    kernel, so each grid step is ONE big GEMM contracting over
+    ``O1h*O1w`` with an f32 accumulator carried over the batch axis
+    (innermost, ``arbitrary``).
+    """
+    b, h, wd, cin = x.shape
+    kth, ktw = kt
+    _, o1h, o1w, nco = dy1.shape
+    (plo_h, phi_h), (plo_w, phi_w) = pad
+    assert o1h == h + plo_h + phi_h - kth + 1, (o1h, h, pad, kth)
+    assert o1w == wd + plo_w + phi_w - ktw + 1, (o1w, wd, pad, ktw)
+    tcout = tcout or nco
+    tcin = tcin or cin
+    assert nco % tcout == 0 and cin % tcin == 0
+    mask_h = plo_h > 0 or phi_h > 0
+    mask_w = plo_w > 0 or phi_w > 0
+
+    grid = (kth * ktw, cin // tcin, nco // tcout, b)
+    body = functools.partial(
+        _sd_filter_grad_body, ktw=ktw, o1h=o1h, o1w=o1w, h=h, w=wd,
+        pad_h=(plo_h, phi_h), pad_w=(plo_w, phi_w),
+        mask_h=mask_h, mask_w=mask_w)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            # Tap d reads padded rows [d//ktw, d//ktw + O1h) — always
+            # inside the padded frame, so the window needs no extra
+            # high-side growth.
+            pl.BlockSpec(
+                (1, o1h, o1w, tcin),
+                lambda d, ci, co, bi: (bi, d // ktw, d % ktw, ci * tcin),
+                indexing_mode=pl.Unblocked(
+                    ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, 0)))),
+            pl.BlockSpec((1, o1h, o1w, tcout),
+                         lambda d, ci, co, bi: (bi, 0, 0, co)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tcin, tcout),
+                               lambda d, ci, co, bi: (d // ktw, d % ktw,
+                                                      ci, co)),
+        out_shape=jax.ShapeDtypeStruct((kth, ktw, cin, nco), dy1.dtype),
+        scratch_shapes=[pltpu.VMEM((tcin, tcout), jnp.float32)],
+        compiler_params=_compiler_params(3, 1),
+        interpret=interpret,
+    )(x, dy1)

@@ -15,7 +15,12 @@ single-sample generator calls waste the accelerator, so the server
   per jax backend (fused Pallas kernel on TPU, grouped-XLA elsewhere),
 * optionally shards the batch axis over a data-parallel device mesh
   with ``shard_map`` (``--dp N``; reuses ``launch/mesh.make_dev_mesh``
-  and the 'data' axis the LM stack shards over).
+  and the 'data' axis the LM stack shards over),
+* keys kernel tile plans to the *bucket* batch it launches
+  (``engine.plans_for_batch``), and with ``--pretune`` measures and
+  persists the winning ``(th, tw, tcin, tcout)`` tile for every
+  (net, bucket, layer) geometry at server start — bind-time
+  ``plan_batch=1`` tiles no longer leak into batch-16 launches.
 
   PYTHONPATH=src python -m repro.launch.serve_gen --nets dcgan,sngan \
       --requests 32 --max-batch 16
@@ -136,21 +141,54 @@ class GenServer:
             self._models[net] = (m, params)
         return self._models[net]
 
-    def _serving_args(self, net: str):
+    def _serving_args(self, net: str, bucket: int):
         """(non-deconv params, bound plans) for the compiled call.  The
         deconv weights live pre-split inside the plans — shipping the
         raw filters too would feed the executable dead operands (and
-        replicate them across the dp mesh).  Cached per net, keyed on
-        the live params object, so the serving loop does no per-group
-        dict rebuilding; a rebind (new params) invalidates."""
+        replicate them across the dp mesh).  Plans carry tiles resolved
+        for *this bucket's batch* (``engine.plans_for_batch``), so a
+        ``plan_batch=1`` bind no longer leaks its tiny-batch tiles into
+        batch-16 launches.  Cached per (net, bucket), keyed on the live
+        params object, so the serving loop does no per-group dict
+        rebuilding; a rebind (new params) invalidates."""
         model, params = self.model(net)
-        cached = self._serving.get(net)
+        key = (net, bucket)
+        cached = self._serving.get(key)
         if cached is None or cached[0] is not params:
             deconv = {l.name for l in model.spec.deconv_layers()}
             lean = {k: v for k, v in params.items() if k not in deconv}
-            self._serving[net] = (params, lean, model.engine.plans())
-        _, lean, plans = self._serving[net]
+            self._serving[key] = (params, lean,
+                                  model.engine.plans_for_batch(bucket))
+        _, lean, plans = self._serving[key]
         return lean, plans
+
+    def buckets(self) -> List[int]:
+        """The closed set of batch buckets this server can launch: the
+        dp-rounded pow2 ladder up to ``max_batch``."""
+        out, n = [], 1
+        while n <= self.max_batch:
+            b = self.bucket(n)
+            if b not in out:
+                out.append(b)
+            n *= 2
+        return out
+
+    def pretune(self, iters: int = 3) -> Dict[str, Any]:
+        """Warm the autotune plan cache for every (net, bucket) geometry
+        this server will actually execute (``serve_gen --pretune``):
+        each deconv layer of each net is measured at every bucket batch
+        and the winning ``(th, tw, tcin, tcout)`` tile is persisted —
+        so no launch ever falls back to the heuristic because it was
+        bound at a different batch.  No-op on the xla backend (tiles
+        only steer the fused kernels)."""
+        tuned: Dict[str, Any] = {}
+        buckets = self.buckets()
+        for net in self._specs:
+            model, _ = self.model(net)
+            if model.engine is None:
+                continue
+            tuned.update(model.engine.pretune(buckets, iters=iters))
+        return tuned
 
     def bucket(self, n: int) -> int:
         b = pow2_bucket(n, self.max_batch)
@@ -195,7 +233,7 @@ class GenServer:
         """Pad a same-net group to its bucket, run, crop the padding."""
         n = len(latents)
         bucket = self.bucket(n)
-        lean_params, plans = self._serving_args(net)
+        lean_params, plans = self._serving_args(net, bucket)
         x = jnp.stack([jnp.asarray(z, self.dtype) for z in latents])
         if bucket > n:
             pad = jnp.zeros((bucket - n, *x.shape[1:]), self.dtype)
@@ -249,6 +287,9 @@ def main(argv=None):
                     choices=["float32", "bfloat16"])
     ap.add_argument("--dryrun", action="store_true",
                     help="2 requests on a reduced arch (CI smoke)")
+    ap.add_argument("--pretune", action="store_true",
+                    help="warm the autotune plan cache for every "
+                         "(net, bucket) geometry before serving")
     args = ap.parse_args(argv)
 
     if args.dryrun:
@@ -263,6 +304,11 @@ def main(argv=None):
     server = GenServer(nets=nets, dtype=jnp.dtype(args.dtype),
                        backend=args.backend, max_batch=args.max_batch,
                        dp=args.dp, specs=specs)
+    if args.pretune:
+        t0 = time.time()
+        tuned = server.pretune()
+        print(f"pretuned {len(tuned)} (layer, bucket) geometries over "
+              f"buckets {server.buckets()} in {time.time()-t0:.1f}s")
     requests: List[GenRequest] = []
     for i, net in enumerate(nets):
         reqs = server.random_requests(net, n_requests, seed=i + 1)

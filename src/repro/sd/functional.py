@@ -7,7 +7,9 @@ Two runtime forms over the same :class:`~repro.sd.plan.DeconvPlan`:
   runs the plan's backend, and is differentiable through a
   ``jax.custom_vjp`` whose backward is standard convolutions over the
   split layout (:mod:`repro.sd.grad`).  Because the backward never
-  differentiates the forward, the fused Pallas kernel is trainable too.
+  differentiates the forward, the fused Pallas kernel is trainable too
+  — and for ``backend="fused"`` plans of rank 1/2 the backward's two
+  convolutions themselves run on the Pallas kernels.
 * :func:`execute` — the deployment form.  Takes a *bound* plan (filters
   pre-split exactly once via ``plan.bind``), runs bias + activation in
   the epilogue, and never touches ``split_filters``.  Bound plans are
@@ -35,9 +37,11 @@ def _run_presplit(plan: DeconvPlan, x: jax.Array, ws: jax.Array,
                   layout: str, bias: Optional[jax.Array],
                   act: str) -> jax.Array:
     """Dispatch pre-split filters to the plan's execution backend,
-    any rank: the fused Pallas kernel for ranks 1-2 (1-D lowers as H=1
-    2-D), the depth-folded Pallas + grouped-XLA interleave for rank 3,
-    and the grouped-XLA conv + pixel-shuffle for the xla backend."""
+    any rank: the zero-copy fused Pallas kernel for ranks 1-2 (1-D
+    lowers as H=1 2-D; the P_I pad and P_K/user crop live inside the
+    kernel, so this path touches HBM once per tensor), the depth-folded
+    Pallas + grouped-XLA interleave for rank 3, and the grouped-XLA
+    conv + pixel-shuffle for the xla backend."""
     if plan.backend == "fused":
         from repro.kernels import ops                 # lazy: pulls Pallas
         if plan.rank == 3:

@@ -31,6 +31,17 @@ Each step is linear, so the VJP is the chain of adjoints, right to left:
                 permutation + crop of the expansion zeros) maps the
                 split-layout filter grad onto the original ``w``;
 * pad^T       — crop the ``P_I`` halo off the input grad.
+
+Kernel routing.  For a ``backend="fused"`` plan of rank 1 or 2 the two
+convolutions above run through the zero-copy Pallas kernels
+(:func:`repro.kernels.ops.sd_input_grad_fused` — the FULL-conv pad is
+border-masked halo reads and the pad^T crop is the launch's output
+window — and :func:`repro.kernels.ops.sd_filter_grad_fused`, whose
+``P_I`` activation pad is in kernel so ``xp`` never materialises),
+each under its own tagged ``ConvGeom`` autotune key; 1-D lowers as H=1
+2-D exactly like the forward.  The fused backend is therefore trainable
+on-kernel, not just differentiable-by-fallback.  ``backend="xla"`` (and
+rank 3) keep the ``lax.conv_general_dilated`` formulation below.
 """
 
 from __future__ import annotations
@@ -73,6 +84,33 @@ def _conv_valid_filter_grad(xp: jax.Array, dy1: jax.Array) -> jax.Array:
     return out.transpose(spatial + (0, rank + 1))      # (*KT, Cin, N*Co)
 
 
+def _use_pallas_bwd(plan: DeconvPlan) -> bool:
+    """Fused-backend plans of rank 1/2 run the backward convs on the
+    Pallas kernels (1-D lowers as H=1 2-D); rank 3 and the xla backend
+    keep the lax formulation."""
+    return plan.backend == "fused" and plan.rank <= 2
+
+
+def _pallas_input_grad(plan: DeconvPlan, dy1: jax.Array, ws: jax.Array,
+                       pi, space) -> jax.Array:
+    from repro.kernels import ops                     # lazy: pulls Pallas
+    if plan.rank == 1:
+        dx = ops.sd_input_grad_fused(dy1[:, None], ws[None],
+                                     (0, pi[0]), (1, space[0]))
+        return dx[:, 0]
+    return ops.sd_input_grad_fused(dy1, ws, tuple(pi), tuple(space))
+
+
+def _pallas_filter_grad(plan: DeconvPlan, x: jax.Array, dy1: jax.Array,
+                        kt, pi) -> jax.Array:
+    from repro.kernels import ops                     # lazy: pulls Pallas
+    if plan.rank == 1:
+        dws = ops.sd_filter_grad_fused(x[:, None], dy1[:, None],
+                                       (1, kt[0]), (0, pi[0]))
+        return dws[0]
+    return ops.sd_filter_grad_fused(x, dy1, tuple(kt), tuple(pi))
+
+
 def conv_transpose_vjp(plan: DeconvPlan, x: jax.Array, w: jax.Array,
                        dy: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """``(dx, dw)`` for ``y = conv_transpose(plan, x, w)``.
@@ -104,11 +142,15 @@ def conv_transpose_vjp(plan: DeconvPlan, x: jax.Array, w: jax.Array,
     dps = jnp.pad(dy, pad_cfg)
     dy1 = space_to_depth(dps, plan.stride)         # d2s^T
 
-    dxp = _conv_valid_input_grad(dy1, ws.astype(dy1.dtype))
-    dx = dxp[(slice(None),)                        # pad^T
-             + tuple(slice(p, p + n) for p, n in zip(pi, space))]
-
-    xp = jnp.pad(x, [(0, 0)] + [(p, p) for p in pi] + [(0, 0)])
-    dws = _conv_valid_filter_grad(xp, dy1)
+    if _use_pallas_bwd(plan):
+        dx = _pallas_input_grad(plan, dy1, ws.astype(dy1.dtype), pi,
+                                space)
+        dws = _pallas_filter_grad(plan, x, dy1, kt, pi)
+    else:
+        dxp = _conv_valid_input_grad(dy1, ws.astype(dy1.dtype))
+        dx = dxp[(slice(None),)                    # pad^T
+                 + tuple(slice(p, p + n) for p, n in zip(pi, space))]
+        xp = jnp.pad(x, [(0, 0)] + [(p, p) for p in pi] + [(0, 0)])
+        dws = _conv_valid_filter_grad(xp, dy1)
     dw = unsplit_filters(dws, plan.kernel, plan.stride)    # split^T
     return dx.astype(x.dtype), dw.astype(w.dtype)

@@ -96,7 +96,7 @@ class DeconvPlan:
     backend: str = "xla"
     act: str = "linear"                    # "linear" | "relu" | "tanh"
     layout: str = "nmajor"
-    tile: Optional[KernelPlan] = None      # autotuned (th, tcin, tcout)
+    tile: Optional[KernelPlan] = None      # autotuned (th, tw, tcin, tcout)
     output_padding: Tuple[int, ...] = None  # normalised in plan()
     ws: Optional[jax.Array] = None         # leaf: pre-split filters
     bias: Optional[jax.Array] = None       # leaf: per-oc bias

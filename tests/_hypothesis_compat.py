@@ -1,10 +1,16 @@
 """Optional-``hypothesis`` shim for the test suite.
 
-``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  When it
-is not installed the suite must still *collect and run*: unit tests are the
-tier-1 gate, property tests are extra assurance.  Importing from this module
-instead of ``hypothesis`` directly gives real property tests when the library
-is present and cleanly-skipped placeholders when it is not.
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  When
+it is present, importing from this module gives the real library.  When
+it is NOT installed the suite must still *collect and run* — and since
+the zero-copy PR the property tests no longer skip either: a minimal
+deterministic fallback runner executes each ``@given`` body over a fixed
+number of pseudo-random examples drawn from the same strategy
+descriptions (``st.integers`` / ``st.sampled_from`` / ``st.floats`` /
+``st.booleans``).  It has none of hypothesis' shrinking or example
+database, but it exercises the identical parameter space with a seeded
+RNG, so CI environments without the package still run every property
+assertion instead of green-skipping them.
 
 Usage in a test module::
 
@@ -17,34 +23,110 @@ try:
 
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
-    import pytest as _pytest
+    import functools as _functools
+    import random as _random
 
     HAVE_HYPOTHESIS = False
 
-    class _AnyStrategy:
-        """Stands in for ``hypothesis.strategies``; every attribute is a
-        callable returning None (the strategies are never executed)."""
+    class _UnsatisfiedAssumption(Exception):
+        """Raised by assume(False): the example is discarded, not failed."""
 
-        def __getattr__(self, name):
-            return lambda *a, **k: None
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
 
-    st = _AnyStrategy()
+        def example(self, rng):
+            return self._draw(rng)
 
-    def assume(condition):  # pragma: no cover - only hit if misused
+    class _Strategies:
+        """Mini subset of ``hypothesis.strategies`` used by this suite."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=(1 << 31) - 1):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda r: r.choice(options))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        def __getattr__(self, name):       # unknown strategy: loud, not
+            raise NotImplementedError(     # silently-None (old shim bug)
+                f"_hypothesis_compat fallback has no strategy {name!r}; "
+                "install hypothesis or extend the shim")
+
+    st = _Strategies()
+
+    def assume(condition):
+        if not condition:
+            raise _UnsatisfiedAssumption()
         return True
 
-    def settings(*args, **kwargs):
-        return lambda fn: fn
-
-    def given(*args, **kwargs):
+    def settings(*_args, max_examples=20, **_kwargs):
         def deco(fn):
-            @_pytest.mark.skip(reason="hypothesis not installed "
-                               "(pip install -r requirements-dev.txt)")
-            def _skipped():
-                pass
+            fn._compat_max_examples = max_examples
+            return fn
 
-            _skipped.__name__ = fn.__name__
-            _skipped.__doc__ = fn.__doc__
-            return _skipped
+        return deco
+
+    def given(**strategies):
+        """Deterministic example runner standing in for ``@given``.
+
+        Draws ``max_examples`` (from a preceding ``@settings``, default
+        20) keyword sets from a seeded RNG and calls the test body for
+        each; ``assume`` discards the example.  Examples are independent
+        of execution order — the RNG is seeded per test from the test
+        name, so failures reproduce.
+        """
+        def deco(fn):
+            def run():
+                # @settings sits *above* @given in the tests, so its
+                # attribute lands on this wrapper, not on ``fn``.
+                n = getattr(run, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples", 20))
+                rng = _random.Random(f"compat:{fn.__module__}.{fn.__name__}")
+                ran = 0
+                attempts = 0
+                while ran < n and attempts < 10 * n:
+                    attempts += 1
+                    kwargs = {k: s.example(rng)
+                              for k, s in strategies.items()}
+                    try:
+                        fn(**kwargs)
+                    except _UnsatisfiedAssumption:
+                        continue
+                    # Exception, NOT BaseException: KeyboardInterrupt /
+                    # SystemExit / pytest control-flow must propagate.
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property test {fn.__name__} failed on "
+                            f"example {kwargs!r} (fallback runner; "
+                            "install hypothesis for shrinking)") from e
+                    ran += 1
+                if ran == 0:
+                    # Every generated example was discarded by assume():
+                    # passing here would be vacuous.  Mirror hypothesis'
+                    # Unsatisfied error so the gap is loud, not silent.
+                    raise AssertionError(
+                        f"property test {fn.__name__}: assume() "
+                        f"discarded all {attempts} generated examples "
+                        "(fallback runner; unsatisfiable strategy?)")
+                return None
+
+            # NOT functools.wraps: that sets __wrapped__, and pytest
+            # would then introspect the original signature and demand
+            # fixtures named after the strategy kwargs.
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            return run
 
         return deco

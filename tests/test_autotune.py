@@ -160,3 +160,66 @@ def test_save_cache_failure_leaves_old_cache_intact(tmp_path, monkeypatch):
     assert [p.name for p in tmp_path.iterdir()] == ["plans.json"]
     assert load_cache(str(cache)) == {"good": {"th": 1, "tcin": 1,
                                                "tcout": 1}}
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy PR additions: tw plan axis, tagged geometries, VMEM model
+# ---------------------------------------------------------------------------
+
+def test_plan_tw_defaults_and_cache_back_compat(tmp_path):
+    """Pre-``tw`` cache entries (no "tw" key) load as full-width plans,
+    and tw survives a save/load round-trip."""
+    cache = str(tmp_path / "plans.json")
+    geom = ConvGeom(1, 12, 12, 16, 8, 3, 2)
+    save_cache({geom.key(): {"th": 2, "tcin": 8, "tcout": 4, "ms": 0.1,
+                             "source": "measured",
+                             "backend": __import__("jax").default_backend()}},
+               path=cache)
+    assert get_plan(geom, path=cache) == KernelPlan(th=2, tcin=8,
+                                                    tcout=4, tw=0)
+
+    target = KernelPlan(th=2, tcin=8, tcout=4, tw=6)
+    won = tune(geom, lambda p: 0.1 if p == target else 5.0,
+               candidates=[KernelPlan(4, 16, 8), target],
+               path=cache, force=True)
+    assert won == target
+    import repro.kernels.autotune as at
+    at._MEM.pop(cache, None)
+    assert get_plan(geom, path=cache).tw == 6
+
+
+def test_tagged_geom_keys_do_not_collide():
+    """The backward's dx/dw launches tune under their own keys."""
+    fwd = ConvGeom(2, 10, 10, 16, 8, 3, 1)
+    dx = ConvGeom(2, 10, 10, 16, 8, 3, 1, tag="dx")
+    dw = ConvGeom(2, 10, 10, 16, 8, 3, 1, tag="dw")
+    keys = {fwd.key(), dx.key(), dw.key()}
+    assert len(keys) == 3
+    assert dx.key().endswith("_dx") and dw.key().endswith("_dw")
+
+
+def test_vmem_budget_tiles_wide_layers():
+    """A wide layer (fst-up1-like geometry) must not keep a full-width
+    band + accumulator past the VMEM budget: the heuristic now tiles
+    width/channels until the modelled footprint fits."""
+    from repro.kernels.autotune import VMEM_BUDGET, vmem_plan_bytes
+    geom = ConvGeom(1, 130, 258, 64, 64, 2, 2)      # wide, deep-ish
+    plan = heuristic_plan(geom)
+    assert vmem_plan_bytes(geom, plan) <= VMEM_BUDGET
+    # and the model counts more than the filter block: a full-width,
+    # full-channel plan on this geometry is over budget
+    full = KernelPlan(th=plan.th, tcin=64, tcout=64, tw=0)
+    assert (vmem_plan_bytes(geom, full) > VMEM_BUDGET
+            or plan == full)
+
+
+def test_candidates_include_width_tiles_on_wide_geoms():
+    geom = ConvGeom(1, 130, 1026, 32, 16, 2, 2)     # ow = 1025
+    cands = candidate_plans(geom, max_candidates=8)
+    assert any(p.tw for p in cands), "wide geometry should offer tw tiles"
+    # TPU launches only ever see budget-clean candidates; off-TPU the
+    # full pool stays (no VMEM in interpret mode, measurement decides).
+    from repro.kernels.autotune import VMEM_BUDGET, vmem_plan_bytes
+    for p in candidate_plans(geom, max_candidates=8,
+                             enforce_budget=True):
+        assert vmem_plan_bytes(geom, p) <= VMEM_BUDGET

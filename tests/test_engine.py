@@ -22,7 +22,9 @@ import repro.sd.functional as sd_functional_mod
 # sys.modules via importlib to get the module for monkeypatching.
 sd_plan_mod = importlib.import_module("repro.sd.plan")
 from repro.core import native_deconv
+from repro.core.accounting import LayerSpec, NetworkSpec
 from repro.engine import SDEngine, fold_scale_ocmajor
+from repro.models.generative import GenerativeModel
 from repro.kernels.ops import ws_to_ocmajor
 from repro.models.generative import build
 
@@ -244,3 +246,98 @@ def test_engine_describe_and_plans():
         assert ws.ndim == 4
     text = eng.describe()
     assert "DCGAN" in text and "d1" in text
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy PR additions: rank-aware scale fold, batch-keyed tiles, pretune
+# ---------------------------------------------------------------------------
+
+def test_fold_scale_ocmajor_rank_aware():
+    """The old helper hardcoded s*s phases — wrong for ranks 1 and 3.
+    Regression: folding == scaling the deconv output, every rank."""
+    from repro.core import split_filters
+    from repro.core.deconv import native_deconv as nd
+    from repro.sd.plan import to_ocmajor
+    rng = np.random.RandomState(1)
+    s = 2
+    cases = [
+        ((5, 3, 4), (1, 6, 3)),            # rank 1: phases = s
+        ((4, 4, 3, 5), (1, 6, 6, 3)),      # rank 2: phases = s^2
+        ((4, 4, 4, 2, 3), (1, 4, 4, 4, 2)),  # rank 3: phases = s^3
+    ]
+    for w_shape, x_shape in cases:
+        w = jnp.asarray(rng.randn(*w_shape), jnp.float32)
+        x = jnp.asarray(rng.randn(*x_shape), jnp.float32)
+        scale = jnp.asarray(rng.rand(w_shape[-1]) + 0.5, jnp.float32)
+        ws = to_ocmajor(split_filters(w, s), s)
+        ws_f = fold_scale_ocmajor(ws, scale, s)
+        rank = w.ndim - 2
+        phases = s ** rank
+        # unfold to n-major and run the reference presplit path
+        kt = ws_f.shape[:rank]
+        cin, cphase = ws_f.shape[rank], ws_f.shape[rank + 1]
+        cout = cphase // phases
+        wsn = ws_f.reshape(*kt, cin, cout, phases)
+        wsn = jnp.swapaxes(wsn, -1, -2).reshape(*kt, cin,
+                                                phases * cout)
+        from repro.core.deconv import sd_deconv_presplit
+        a = sd_deconv_presplit(x, wsn, w.shape[:rank], s, 1)
+        b = nd(x, w, s, 1) * scale
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"rank {rank}")
+
+
+def test_plans_for_batch_rekeys_tiles(monkeypatch):
+    """plans_for_batch(N) resolves tiles from the batch-N geometry —
+    the fix for plan_batch=1 tiles leaking into batch-16 launches."""
+    import repro.engine.planner as planner_mod
+    model = build("dcgan", "sd_kernel")
+    model.init(jax.random.PRNGKey(0))
+    eng = model._engine
+    asked = []
+
+    def fake_get_plan(geom, path=None):
+        asked.append(geom)
+        from repro.kernels.autotune import heuristic_plan
+        return heuristic_plan(geom)
+
+    monkeypatch.setattr(planner_mod, "get_plan", fake_get_plan)
+    plans16 = eng.plans_for_batch(16)
+    assert set(plans16) == set(eng.plans())
+    assert asked and all(g.b == 16 for g in asked)
+    # split filters are shared, not re-split
+    for name, p16 in plans16.items():
+        assert p16.ws is eng.plans()[name].ws
+    # same batch as bind time short-circuits
+    asked.clear()
+    eng.plans_for_batch(eng.plan_batch)
+    assert asked == []
+
+
+def test_pretune_measures_and_persists(tmp_path, monkeypatch):
+    """Engine pretune tunes every (deconv layer, batch) geometry of the
+    fused backend into the JSON plan cache; xla backend is a no-op."""
+    cache = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_SD_PLAN_CACHE", str(cache))
+    spec = NetworkSpec("tiny", [
+        LayerSpec("fc", 8, 4 * 4 * 8, name="project"),
+        LayerSpec("deconv", 8, 4, k=4, s=2, in_hw=(4, 4), name="d1"),
+    ])
+    params = GenerativeModel(spec, "native").init(jax.random.PRNGKey(0))
+
+    eng_x = SDEngine(spec, backend="xla").bind(params)
+    assert eng_x.pretune([1, 2]) == {}
+
+    eng_f = SDEngine(spec, backend="fused").bind(params)
+    tuned = eng_f.pretune([1, 2], iters=1)
+    assert len(tuned) == 2                       # one per batch
+    import json as _json
+    data = _json.loads(cache.read_text())
+    for key, plan in tuned.items():
+        assert data["plans"][key]["source"] == "measured"
+        assert data["plans"][key]["th"] == plan.th
+    # batch-2 plans now resolve from the cache at serving time
+    from repro.kernels.autotune import ConvGeom, get_plan
+    g2 = eng_f.layer_geom(spec.layers[1], 2)
+    assert get_plan(g2) == tuned[g2.key()]

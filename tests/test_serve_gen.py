@@ -373,3 +373,57 @@ def test_segnet_head_is_logits():
     x = jnp.stack([jnp.asarray(r.latent) for r in reqs])
     np.testing.assert_allclose(out, np.asarray(ref_model.apply(params, x)),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy PR: bucket-keyed tiles + --pretune
+# ---------------------------------------------------------------------------
+
+def test_serving_tiles_keyed_to_bucket(monkeypatch):
+    """The compiled cell for a bucket must carry plans whose tiles were
+    resolved at THAT bucket's batch — a plan_batch=1 bind no longer
+    leaks its tiles into batch-N launches."""
+    import repro.engine.planner as planner_mod
+    asked = []
+    real = planner_mod.get_plan
+
+    def spy(geom, path=None):
+        asked.append(geom)
+        return real(geom, path)
+
+    monkeypatch.setattr(planner_mod, "get_plan", spy)
+    server = _server(max_batch=8)
+    reqs = server.random_requests("g", 8)
+    server.serve(reqs)
+    # the group of 8 launches bucket 8: its plan tiles were resolved
+    # from batch-8 geometries, not the bind-time plan_batch=1
+    assert any(g.b == 8 for g in asked)
+    _, plans8 = server._serving_args("g", 8)
+    model, _ = server.model("g")
+    bind_plans = model.engine.plans()
+    for name, p8 in plans8.items():
+        assert p8.ws is bind_plans[name].ws       # shared split filters
+    assert ("g", 8) in server._serving
+
+
+def test_server_bucket_ladder_and_pretune_noop_on_xla():
+    server = _server(max_batch=16, backend="xla")
+    assert server.buckets() == [1, 2, 4, 8, 16]
+    assert server.pretune() == {}                 # tiles steer fused only
+
+
+def test_server_pretune_fused_persists(tmp_path, monkeypatch):
+    cache = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_SD_PLAN_CACHE", str(cache))
+    server = _server(max_batch=2, backend="fused")
+    tuned = server.pretune(iters=1)
+    # 2 deconv layers x buckets {1, 2}
+    assert len(tuned) == 4
+    data = json.loads(cache.read_text())
+    assert all(e["source"] == "measured" for e in data["plans"].values())
+    # serving now resolves the measured tiles for its buckets
+    _, plans = server._serving_args("g", 2)
+    model, _ = server.model("g")
+    for name, layer in ((l.name, l) for l in model.spec.deconv_layers()):
+        geom = model.engine.layer_geom(layer, 2)
+        assert plans[name].tile == tuned[geom.key()]
