@@ -1,0 +1,231 @@
+"""Int8 split-filter inference: accuracy (SSIM) + HBM traffic vs f32.
+
+Per paper net this binds the same random params into two SDEngines —
+the f32 one and the ``engine_dtype="int8"`` one (per-output-channel
+filter quantization at bind, BN scale folded *before* quantizing) —
+and records
+
+* **SSIM** of the int8 output against the f32 output on the same
+  latents (the paper's conversion-quality metric; ``core/ssim.py``).
+  The accuracy gate: every net must stay above ``SSIM_MIN`` (an SSIM
+  *drop* below 0.01 against the f32 engine, whose own output is
+  bit-comparable to native — see BENCH_serve.json parity).
+* **HBM bytes** of every fused zero-copy deconv launch via XLA
+  ``cost_analysis``, int8 operands vs f32 operands — the quantity the
+  paper's memory-bound target processors are limited by.  Int8 tiles
+  move 4x fewer operand bytes, so per-layer bytes must be strictly
+  lower (``bytes_lower`` flag per layer, gated like the kernel suite).
+* **Wall clock** of the full generator, int8 engine vs f32 engine, on
+  this host's execution backend.  Honesty note: off-TPU the engine's
+  grouped-XLA backend computes the conv on f32-cast operands (XLA's
+  CPU int8 conv is orders of magnitude slower than its f32 conv), so
+  CPU wall-clock shows quantize/dequant overhead at parity-ish ratios
+  — it is recorded as ``wall_ratio`` but is *not* the speedup claim.
+  The ``speedup`` field is the memory-bound projection
+  ``bytes_f32 / bytes_int8`` of the fused zero-copy launches, the same
+  roofline framing as ``sd_roofline``.
+
+Results go to BENCH_quant.json for the cross-PR trajectory; the CI
+accuracy gate (scripts/ci.sh) reads it back.
+
+  PYTHONPATH=src python -m benchmarks.quant_bench            # all nets
+  PYTHONPATH=src python -m benchmarks.quant_bench --nets dcgan,sngan
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ssim import ssim
+from repro.kernels.autotune import measure
+from repro.models.generative import build
+
+ALL_NETS = ("dcgan", "sngan", "artgan", "gpgan", "mde", "fst")
+OUT_JSON = "BENCH_quant.json"
+# Accuracy gate: max tolerated SSIM drop (vs the f32 engine) is 0.01.
+SSIM_MIN = 0.99
+
+
+def _inputs(name, model, batch, seed=1):
+    # gpgan/mde/fst saturate with unit-scale random latents (see tests)
+    scale = 0.1 if name in ("gpgan", "mde", "fst") else 1.0
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             model.input_shape(batch)) * scale
+
+
+def bench_net(name: str, batch=4, iters=3, bytes_batch=None):
+    from repro.kernels import ops
+    from repro.launch.hlo_analysis import cost_dict
+
+    bytes_batch = batch if bytes_batch is None else bytes_batch
+    f32m = build(name, "sd_kernel")
+    params = f32m.init(jax.random.PRNGKey(0))
+    i8m = build(name, "sd_kernel", engine_dtype="int8")
+
+    f_f32 = jax.jit(lambda z: f32m.apply(params, z))
+    f_i8 = jax.jit(lambda z: i8m.apply(params, z))
+
+    z = _inputs(name, f32m, batch)
+    ref = np.asarray(f_f32(z))
+    out = np.asarray(f_i8(z))
+    drange = 2.0 if f32m.final_tanh else float(ref.max() - ref.min())
+    s = float(ssim(jnp.asarray(ref), jnp.asarray(out),
+                   data_range=max(drange, 1e-6)))
+    max_err = float(np.max(np.abs(out - ref)))
+
+    t32 = measure(lambda: jax.block_until_ready(f_f32(z)),
+                  iters=iters, warmup=1)
+    t8 = measure(lambda: jax.block_until_ready(f_i8(z)),
+                 iters=iters, warmup=1)
+
+    # ---- fused zero-copy launch traffic, int8 vs f32 ------------------
+    # Fused-backend engines give ocmajor plans with per-layer tiles;
+    # the launches are lowered only (never executed — interpret mode
+    # off-TPU would be glacial), cost_analysis is a compile-time fact.
+    spec = f32m.spec
+    e32 = build(name, "sd_kernel", engine_backend="fused")
+    e32.engine.bind(params)
+    e8 = build(name, "sd_kernel", engine_backend="fused",
+               engine_dtype="int8")
+    e8.engine.bind(params)
+    p32, p8 = e32.engine.plans(), e8.engine.plans()
+
+    def bytes_of(fn, *args):
+        cost = cost_dict(jax.jit(fn).lower(*args)
+                         .compile().cost_analysis())
+        return int(cost.get("bytes accessed", 0))
+
+    layers, b32_tot, b8_tot = {}, 0, 0
+    for layer in spec.deconv_layers():
+        pf, pq = p32[layer.name], p8[layer.name]
+        xs = (bytes_batch, *layer.in_hw, layer.cin)
+        ss = pq.phases
+        comb = jnp.ones((bytes_batch, layer.cout * ss), jnp.float32)
+
+        def run32(x, ws, b, _p=pf):
+            return ops.sd_deconv_presplit_fused(
+                x, ws, _p.kernel, _p.stride, _p.padding,
+                output_padding=_p.output_padding, bias=b, act=_p.act,
+                plan=_p.tile)
+
+        def run8(x, ws, b, sc, _p=pq):
+            return ops.sd_deconv_presplit_fused(
+                x, ws, _p.kernel, _p.stride, _p.padding,
+                output_padding=_p.output_padding, bias=b, act=_p.act,
+                scale=sc, plan=_p.tile)
+
+        b32 = bytes_of(run32, jnp.zeros(xs, jnp.float32), pf.ws, pf.bias)
+        b8 = bytes_of(run8, jnp.zeros(xs, jnp.int8), pq.ws, pq.bias,
+                      comb)
+        layers[layer.name] = {
+            "bytes_f32": b32, "bytes_int8": b8,
+            "bytes_lower": bool(b8 < b32),
+        }
+        b32_tot += b32
+        b8_tot += b8
+
+    return {
+        "batch": batch,
+        "ssim": round(s, 5),
+        "ssim_ok": bool(s >= SSIM_MIN),
+        "max_err": max_err,
+        "engine_backend": f32m.engine.backend,
+        "wall_f32_ms": round(t32, 3),
+        "wall_int8_ms": round(t8, 3),
+        "wall_ratio": round(t32 / t8, 3) if t8 else None,
+        "layers": layers,
+        "bytes_f32_total": b32_tot,
+        "bytes_int8_total": b8_tot,
+        "bytes_lower_all": all(r["bytes_lower"] for r in layers.values()),
+        # memory-bound projection of the fused zero-copy launches
+        "speedup": round(b32_tot / b8_tot, 3) if b8_tot else None,
+    }
+
+
+def sweep(nets=ALL_NETS, batch=4, iters=3, out=OUT_JSON, report=None):
+    results = {"jax_backend": jax.default_backend(),
+               "ssim_min": SSIM_MIN, "nets": {}}
+    if report is not None:
+        report.section("Int8 split-filter inference — SSIM vs f32 engine "
+                       "+ fused-launch HBM bytes (memory-bound speedup)")
+        report.header(["net", "ssim", "wall_f32", "wall_i8",
+                       "hbm_f32_MB", "hbm_i8_MB", "speedup", "ok"])
+    for name in nets:
+        r = bench_net(name, batch=batch, iters=iters)
+        results["nets"][name] = r
+        line = [name, f"{r['ssim']:.4f}", f"{r['wall_f32_ms']:.1f}ms",
+                f"{r['wall_int8_ms']:.1f}ms",
+                f"{r['bytes_f32_total'] / 1e6:.1f}",
+                f"{r['bytes_int8_total'] / 1e6:.1f}",
+                f"{r['speedup']}x",
+                r["ssim_ok"] and r["bytes_lower_all"]]
+        if report is not None:
+            report.row(line)
+        else:
+            print("  " + " | ".join(str(v) for v in line))
+    results["ssim_all_ok"] = all(r["ssim_ok"]
+                                 for r in results["nets"].values())
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        msg = f"quantization sweep written to {out}"
+        if report is not None:
+            report.note(msg)
+        else:
+            print(msg)
+    return results
+
+
+def check(path=OUT_JSON, nets=ALL_NETS):
+    """CI accuracy gate: every net's recorded SSIM above SSIM_MIN and
+    every fused launch's int8 bytes strictly below f32.  Exits nonzero
+    with a per-net report on violation."""
+    with open(path) as f:
+        data = json.load(f)
+    missing = [n for n in nets if n not in data.get("nets", {})]
+    bad = []
+    for name, r in data.get("nets", {}).items():
+        if not r.get("ssim_ok"):
+            bad.append(f"{name}: ssim {r.get('ssim')} < {SSIM_MIN}")
+        if not r.get("bytes_lower_all"):
+            bad.append(f"{name}: int8 launch bytes not below f32")
+    if missing:
+        bad.append(f"nets missing from {path}: {missing}")
+    for msg in bad:
+        print(f"QUANT GATE FAIL: {msg}")
+    if not bad:
+        print(f"quant gate ok: {len(data.get('nets', {}))} nets, "
+              f"ssim >= {SSIM_MIN}, int8 bytes < f32 on every layer")
+    return not bad
+
+
+def run(report):
+    """benchmarks.run hook: a reduced sweep (two nets) so the full
+    driver stays fast; the standalone main sweeps all six."""
+    sweep(nets=("dcgan", "sngan"), iters=2, out=None, report=report)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nets", default=",".join(ALL_NETS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=OUT_JSON)
+    ap.add_argument("--check", action="store_true",
+                    help="gate mode: validate an existing artifact "
+                         "instead of measuring")
+    args = ap.parse_args(argv)
+    if args.check:
+        raise SystemExit(0 if check(args.out, args.nets.split(","))
+                         else 1)
+    sweep(nets=args.nets.split(","), batch=args.batch, iters=args.iters,
+          out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,10 +3,13 @@
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only tables123,procmodel
   PYTHONPATH=src python -m benchmarks.run --json out.json   # + JSON dump
+  PYTHONPATH=src python -m benchmarks.run --profile /tmp/tr  # + traces
 """
 
 import argparse
+import contextlib
 import json
+import os
 import sys
 import time
 
@@ -62,23 +65,39 @@ def main() -> None:
                     help="comma-separated module names")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump every report table as JSON to PATH")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture one jax.profiler trace per suite "
+                         "under DIR/<suite> (view with tensorboard or "
+                         "perfetto)")
     args = ap.parse_args()
 
     from benchmarks import (commodity, kernel_bench, nd_bench, procmodel,
-                            roofline_report, sd_roofline, serve_bench,
-                            table4_ssim, tables123, train_bench)
+                            quant_bench, roofline_report, sd_roofline,
+                            serve_bench, table4_ssim, tables123,
+                            train_bench)
     mods = {"tables123": tables123, "table4_ssim": table4_ssim,
             "procmodel": procmodel, "commodity": commodity,
             "kernel_bench": kernel_bench, "sd_roofline": sd_roofline,
             "serve_bench": serve_bench, "train_bench": train_bench,
-            "nd_bench": nd_bench, "roofline_report": roofline_report}
+            "nd_bench": nd_bench, "quant_bench": quant_bench,
+            "roofline_report": roofline_report}
     wanted = (args.only.split(",") if args.only else list(mods))
     report = Report()
     t0 = time.time()
     for name in wanted:
         t1 = time.time()
-        mods[name].run(report)
-        print(f"  [{name}: {time.time()-t1:.1f}s]")
+        if args.profile:
+            import jax
+            tdir = os.path.join(args.profile, name)
+            os.makedirs(tdir, exist_ok=True)
+            ctx = jax.profiler.trace(tdir)
+        else:
+            ctx = contextlib.nullcontext()
+        with ctx:
+            mods[name].run(report)
+        print(f"  [{name}: {time.time()-t1:.1f}s]"
+              + (f" trace -> {os.path.join(args.profile, name)}"
+                 if args.profile else ""))
     if args.json:
         report.dump_json(args.json)
         print(f"report tables dumped to {args.json}")

@@ -26,6 +26,7 @@ SUITE_FILES = {
     "serve": "BENCH_serve.json",
     "train": "BENCH_train.json",
     "nd": "BENCH_nd.json",
+    "quant": "BENCH_quant.json",
 }
 
 
@@ -118,11 +119,34 @@ def _nd_summary(data) -> dict:
     }
 
 
+def _quant_summary(data) -> dict:
+    nets = data.get("nets", {})
+    ssims = {n: r.get("ssim") for n, r in nets.items()}
+    speed = [r.get("speedup") for r in nets.values()]
+    bytes_flags = [r.get("bytes_lower_all") for r in nets.values()]
+    return {
+        "nets": len(nets),
+        "ssim_min_gate": data.get("ssim_min"),
+        "ssim_per_net": ssims,
+        "ssim_worst": min((s for s in ssims.values() if s is not None),
+                          default=None),
+        # the aggregate gate reads parity_all: here it means every
+        # net's int8 output clears the SSIM accuracy gate
+        "parity_all": bool(nets) and all(r.get("ssim_ok")
+                                         for r in nets.values()),
+        "hbm_bytes_lower_all": bool(bytes_flags) and all(bytes_flags),
+        # memory-bound projection (bytes_f32/bytes_int8 of the fused
+        # zero-copy launches), not CPU wall-clock — see quant_bench
+        "speedup_geomean": _geomean(speed),
+    }
+
+
 _DISTILL = {
     "kernels": _kernels_summary,
     "serve": _serve_summary,
     "train": _train_summary,
     "nd": _nd_summary,
+    "quant": _quant_summary,
 }
 
 

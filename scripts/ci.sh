@@ -34,6 +34,33 @@ echo "== generative serving smoke (serve_gen --dryrun: 2-D/1-D/3-D/seg; "
 echo "   --pretune warms the (net, bucket) plan cache, no-op on xla) =="
 python -m repro.launch.serve_gen --dryrun --pretune
 
+echo "== int8 serving smoke (quantized engines end to end) =="
+python -m repro.launch.serve_gen --dryrun --dtype int8
+
+echo "== int8 accuracy gate: committed BENCH_quant.json (every net's "
+echo "   SSIM >= 0.99 vs the f32 engine, int8 launch bytes < f32) =="
+python -m benchmarks.quant_bench --check
+
+echo "== int8 accuracy gate: live SSIM on dcgan + sngan =="
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.ssim import ssim
+from repro.models.generative import build
+from benchmarks.quant_bench import SSIM_MIN
+
+for name in ("dcgan", "sngan"):
+    f32m = build(name, "sd_kernel")
+    params = f32m.init(jax.random.PRNGKey(0))
+    i8m = build(name, "sd_kernel", engine_dtype="int8")
+    z = jax.random.normal(jax.random.PRNGKey(1), f32m.input_shape(4))
+    ref = jnp.asarray(f32m.apply(params, z))
+    out = jnp.asarray(i8m.apply(params, z))
+    s = float(ssim(ref, out))
+    assert s >= SSIM_MIN, f"{name}: int8 SSIM {s:.4f} < {SSIM_MIN}"
+    print(f"  {name}: int8 vs f32 SSIM {s:.4f} (gate {SSIM_MIN})")
+print("int8 SSIM gate: OK")
+PY
+
 echo "== N-D sweep smoke (nd_bench --smoke, parity-gated) =="
 python -m benchmarks.nd_bench --smoke --iters 1 --out /tmp/BENCH_nd_smoke.json
 

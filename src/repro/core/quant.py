@@ -1,0 +1,93 @@
+"""Symmetric int8 quantization — the numerics substrate of the
+low-precision edge path (HUGE\\ :sup:`2`, arXiv:1907.11210).
+
+One module owns every int8 helper in the repo:
+
+* :func:`quantize` / :func:`dequantize` — per-**tensor** scale.  These
+  are the primitives :mod:`repro.distributed.compress` has always used
+  for the gradient-compression hop; they were promoted here so the
+  inference path and the transport path share one rounding convention
+  (symmetric, zero-point 0, clip to ±127 — so a zero stays exactly
+  zero, which is what lets the Pallas kernels' masked halo reads
+  zero-fill *in int8*).
+* :func:`quantize_channelwise` — per-**channel** scales along one axis.
+  This is the filter quantizer: :meth:`repro.sd.DeconvPlan.bind` calls
+  it on the split (scale-folded) filters with ``axis=-1``, so every
+  split output channel — each (phase, oc) pair of the paper's
+  transform — carries its own scale, folded together with the
+  inference-BN scale exactly like the fp32 path folds gamma.
+* :func:`quantize_act` — per-**sample** scale over a batched
+  activation.  Dynamic (computed in-trace per call); per sample rather
+  than per tensor so the zero rows a bucketed server pads a batch with
+  can never perturb real samples' quantization (regression-tested).
+
+All scales are ``amax / 127`` floats; dequantization is a per-channel
+(or per-sample) multiply, which the fused kernel folds into its VMEM
+epilogue (see :mod:`repro.kernels.sd_conv`).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0          # symmetric int8: [-127, 127], zero-point 0
+_EPS = 1e-12          # all-zero tensors quantize to zeros, not NaNs
+
+
+def _to_q(xf: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(xf / scale), -QMAX, QMAX).astype(jnp.int8)
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 with one per-tensor scale: ``(q, scale)`` with
+    ``x ≈ q * scale``."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), _EPS) / QMAX
+    return _to_q(xf, scale), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_channelwise(w: jax.Array,
+                         axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 with one scale per slice of ``axis``.
+
+    Returns ``(q, scales)`` where ``scales`` is 1-D of length
+    ``w.shape[axis]`` and ``w ≈ q * scales`` (broadcast along
+    ``axis``).  This is the filter quantizer: with ``axis=-1`` on
+    n-major split filters every (phase, oc) output channel of the
+    executed stride-1 conv gets its own scale, so the worst-case
+    rounding error per channel is ``scales[c] / 2`` regardless of how
+    skewed the channel magnitudes are.
+    """
+    axis = axis % w.ndim
+    wf = w.astype(jnp.float32)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes)
+    scales = jnp.maximum(amax, _EPS) / QMAX
+    shape = [1] * w.ndim
+    shape[axis] = w.shape[axis]
+    return _to_q(wf, scales.reshape(shape)), scales
+
+
+def quantize_act(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic symmetric int8 for a batched activation: one scale per
+    *sample* (axis 0), computed in-trace.
+
+    Returns ``(q, scales)`` with ``scales`` of shape ``(B,)``.
+    Per-sample rather than per-tensor so batch composition never leaks
+    between requests: the zero padding a bucketed server appends to a
+    group cannot change any real sample's scale, and sample ``i``'s
+    quantized output is a function of sample ``i`` alone.
+    """
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(xf), axis=axes)
+    scales = jnp.maximum(amax, _EPS) / QMAX
+    shape = (x.shape[0],) + (1,) * (x.ndim - 1)
+    return _to_q(xf, scales.reshape(shape)), scales

@@ -131,13 +131,18 @@ def _describe_all() -> str:
     for n in names():
         i = _REGISTRY[n]
         tags = ([f"api={i.api}",
-                 "ranks=" + "".join(str(r) for r in i.ranks)]
+                 "ranks=" + "".join(str(r) for r in i.ranks),
+                 "dtypes=" + "/".join(_DTYPE_ABBREV.get(d, d)
+                                      for d in i.dtypes)]
                 + [t for t, on in (
                     ("trainable", i.trainable), ("engine", i.engine),
                     ("presplit", i.needs_presplit), ("exact", i.exact))
                    if on])
         lines.append(f"  {n:<10} [{', '.join(tags)}] {i.description}")
     return "\n".join(lines)
+
+
+_DTYPE_ABBREV = {"float32": "f32", "bfloat16": "bf16", "int8": "i8"}
 
 
 def get_impl(name: str) -> ImplInfo:
@@ -245,6 +250,7 @@ register("sd_kernel", "SD inference engine: presplit-once, BN-folded "
          "the intra-slice Pallas convs with a grouped-XLA cross-slice "
          "interleave", _load_functional,
          trainable=True, engine=True, needs_presplit=True,
+         dtypes=("float32", "bfloat16", "int8"),
          backends=("tpu", "any"), api="functional", ranks=(1, 2, 3),
          rank_backends=((3, ("tpu", "any", "xla-interleave")),))
 
@@ -276,7 +282,14 @@ def selfcheck(verbose: bool = False) -> None:
       inputs are pushed through rank-polymorphic impls),
     * ``rank_backends`` entries only refine ranks that are declared,
     * every ``trainable`` impl differentiates cleanly at every rank it
-      declares.
+      declares,
+    * every declared ``dtypes`` entry is actually *exercised* (rank 2):
+      bfloat16 claims run the impl on bf16 operands and compare to the
+      f32 reference at bf16 tolerance; int8 claims bind an int8
+      ``repro.sd`` plan (per-channel weight quant + per-sample
+      activation quant + dequant epilogue) and compare at quantization
+      tolerance.  A capability an impl cannot execute fails CI here
+      instead of failing a user later.
     """
     import jax
     import jax.numpy as jnp
@@ -324,6 +337,38 @@ def selfcheck(verbose: bool = False) -> None:
                     lambda wt: jnp.sum(fn(xr, wt, 2, 1) ** 2))(wr)
                 assert np.isfinite(np.asarray(g)).all(), \
                     f"{name}: bad grad (rank {rank})"
+        # Exercise every declared dtype (rank 2 — dtype support is
+        # orthogonal to rank).  "float32" is the main check above.
+        # Non-exact impls (the wrong baselines) compare low-precision
+        # output against their OWN f32 output.
+        x2, w2 = data[2]
+        ref2 = np.asarray(refs[2] if info.exact else fn(x2, w2, 2, 1))
+        tol2 = float(np.abs(ref2).max())
+        for dt in info.dtypes:
+            if dt == "float32":
+                continue
+            if dt == "bfloat16":
+                out = fn(x2.astype(jnp.bfloat16),
+                         w2.astype(jnp.bfloat16), 2, 1)
+                assert out.shape == refs[2].shape, (name, dt, out.shape)
+                np.testing.assert_allclose(
+                    np.asarray(out, np.float32), ref2,
+                    rtol=0, atol=0.1 * tol2,
+                    err_msg=f"{name}: bfloat16 claim fails at runtime")
+            elif dt == "int8":
+                assert info.api == "functional", \
+                    f"{name}: int8 runs through the repro.sd plan " \
+                    "path — only functional-api impls can claim it"
+                from repro import sd
+                p8 = sd.plan(w2.shape, 2, 1, dtype="int8").bind(w2)
+                out = sd.execute(p8, x2)
+                assert out.shape == refs[2].shape, (name, dt, out.shape)
+                np.testing.assert_allclose(
+                    np.asarray(out), ref2, rtol=0, atol=0.05 * tol2,
+                    err_msg=f"{name}: int8 claim fails at runtime")
+            else:
+                raise AssertionError(
+                    f"{name}: unknown dtype capability {dt!r}")
         if verbose:
             print(f"  {name:<10} OK  {info.capabilities()}")
     if verbose:

@@ -18,24 +18,18 @@ Two layers:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# The int8 numerics live in core.quant (shared with the inference
+# path); re-exported here because this module has always been their
+# import site for the transport layer.
+from repro.core.quant import dequantize, quantize
 
-def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric int8 with per-tensor scale."""
-    xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+__all__ = ["quantize", "dequantize", "quantize_grads_with_error_feedback",
+           "init_error_feedback", "compressed_psum",
+           "make_pod_compressed_allreduce"]
 
 
 def quantize_grads_with_error_feedback(grads, error):

@@ -79,13 +79,24 @@ class SDEngine:
     same presplit filters (the fast off-TPU serving path), ``"auto"``
     picks fused on TPU and xla elsewhere.  The offline phase is
     identical for both — one split + BN fold per layer at bind.
+
+    ``dtype="int8"`` builds quantized plans: bind() additionally
+    quantizes the scale-folded split filters per output channel, and
+    the hot path runs int8 activations with the dequant epilogue (see
+    :mod:`repro.core.quant`).  Plan-cache/jit keys include the dtype,
+    so one process can serve float and int8 engines side by side.
     """
 
     def __init__(self, spec: NetworkSpec, plan_batch: int = 1,
-                 backend: str = "fused"):
+                 backend: str = "fused", dtype: str = "native"):
+        from repro.sd.plan import DTYPES
+        if dtype not in DTYPES:
+            raise ValueError(f"unknown engine dtype {dtype!r}; "
+                             f"choose from {DTYPES}")
         self.spec = spec
         self.plan_batch = plan_batch     # batch used for plan-cache keys
         self.backend = resolve_backend(backend)
+        self.dtype = dtype
         self._plans: Dict[str, DeconvPlan] = {}
         self._bound: Optional[Params] = None
         self._bound_leaves: Optional[tuple] = None
@@ -112,24 +123,29 @@ class SDEngine:
         return tuple(leaves)
 
     # ---- offline phase ---------------------------------------------------
-    def layer_plan(self, layer: LayerSpec, act: str) -> DeconvPlan:
+    def layer_plan(self, layer: LayerSpec, act: str,
+                   dtype: Optional[str] = None) -> DeconvPlan:
         """Geometry-only plan for one deconv layer: split layout +
         autotuned kernel tile, no filter data.  Static and trace-safe.
         Rank follows the layer's input spatial shape (1-D/2-D/3-D);
         autotuned tiles exist for the 2-D kernel geometry — other ranks
-        resolve their tile at call time from the lowered geometry."""
+        resolve their tile at call time from the lowered geometry.
+        ``dtype`` overrides the engine dtype (the models' traced
+        training path requests "native" plans from an int8 engine —
+        int8 plans are inference-only)."""
         rank = layer.rank
         kernel = (layer.k,) * rank
         stride = (layer.s,) * rank
         pads = (same_deconv_pads(kernel, stride)
                 if layer.padding == "same" else layer.pad)
+        dtype = self.dtype if dtype is None else dtype
         tile = None
-        geom = self.layer_geom(layer)
+        geom = self.layer_geom(layer, dtype=dtype)
         if geom is not None:
             tile = get_plan(geom)
         return make_plan(
             (*kernel, layer.cin, layer.cout), stride, pads,
-            backend=self.backend, act=act, tile=tile)
+            backend=self.backend, act=act, tile=tile, dtype=dtype)
 
     def build_plans(self, params: Params) -> Dict[str, DeconvPlan]:
         """Bound plans for every deconv layer — pure (no engine-state
@@ -181,18 +197,24 @@ class SDEngine:
 
     # ---- batch-aware tiles ----------------------------------------------
     def layer_geom(self, layer: LayerSpec,
-                   batch: Optional[int] = None) -> Optional[ConvGeom]:
+                   batch: Optional[int] = None,
+                   dtype: Optional[str] = None) -> Optional[ConvGeom]:
         """Autotune geometry of one deconv layer's fused launch at
         ``batch`` (defaults to ``plan_batch``).  Rank-2 only — the 1-D
         and 3-D lowerings resolve their tiles at call time from the
-        lowered geometry."""
+        lowered geometry.  Int8 engines tag the geometry, so their
+        plans are keyed (and their VMEM footprint modelled) for 1-byte
+        operands."""
         if layer.rank != 2:
             return None
         pads = (same_deconv_pads(layer.k, layer.s)
                 if layer.padding == "same" else layer.pad)
+        dtype = self.dtype if dtype is None else dtype
         return ConvGeom.from_deconv(batch or self.plan_batch,
                                     *layer.in_hw, layer.cin, layer.cout,
-                                    layer.k, layer.s, padding=pads)
+                                    layer.k, layer.s, padding=pads,
+                                    dtype="int8" if dtype == "int8"
+                                    else "")
 
     def plans_for_batch(self, batch: int) -> Dict[str, DeconvPlan]:
         """The cached bound plans with tiles re-resolved for ``batch``.
@@ -233,7 +255,10 @@ class SDEngine:
             layer = layers[name]
             if self.layer_geom(layer) is None:
                 continue                       # rank 1/3: call-time tiles
-            dtype = (plan.ws.dtype if plan.ws is not None
+            # Int8 plans store int8 filters but execute() takes float
+            # activations (it quantizes per sample in-trace).
+            dtype = (plan.ws.dtype
+                     if plan.ws is not None and plan.dtype != "int8"
                      else jnp.float32)
             for b in sorted({int(x) for x in batches}):
                 geom = self.layer_geom(layer, b)
@@ -262,6 +287,7 @@ class SDEngine:
 
     def describe(self) -> str:
         lines = [f"SDEngine[{self.spec.name}] backend={self.backend} "
+                 f"dtype={self.dtype} "
                  f"({len(self._plans)} deconv layers)"]
         for name, plan in self._plans.items():
             kt = -(-plan.kernel[0] // plan.s)

@@ -115,15 +115,28 @@ class ConvGeom:
     out_w: int = 0
     crop_h: int = -1
     crop_w: int = -1
+    # Operand dtype of the launch ("" = float32, the historical default
+    # — untagged keys are unchanged).  "int8" keys separately AND
+    # changes the footprint model: 1-byte input band + filter block
+    # (the int32 accumulator and f32 output stay 4-byte), so tile
+    # candidates ~4x larger on the operand side become legal.
+    dtype: str = ""
 
     def key(self) -> str:
         base = (f"b{self.b}_h{self.h}w{self.w}_ci{self.cin}"
                 f"_co{self.cout}_kt{self.kt}_s{self.s}")
         if self.ktw or self.sw:
             base += f"_ktw{self.ktw or self.kt}_sw{self.sw or self.s}"
+        if self.dtype:
+            base += f"_{self.dtype}"
         if self.tag:
             base += f"_{self.tag}"
         return base
+
+    @property
+    def operand_itemsize(self) -> int:
+        """Bytes per element of the input band / filter block."""
+        return 1 if self.dtype == "int8" else 4
 
     @property
     def oh(self) -> int:
@@ -136,15 +149,18 @@ class ConvGeom:
     @classmethod
     def from_deconv(cls, b: int, h: int, w: int, cin: int, cout: int,
                     k: int, s: int, padding=None,
-                    output_padding: int = 0) -> "ConvGeom":
+                    output_padding: int = 0,
+                    dtype: str = "") -> "ConvGeom":
         """Geometry of the conv that SD runs for a (H,W,Cin,Cout,K,s)
         deconv layer: input padded by P_I = K_T - 1 per side.  When the
         user ``padding`` is known, the final output shape and crop are
         attached (key-neutral) so the tile options can align output
-        tiles to the final geometry."""
+        tiles to the final geometry.  ``dtype`` tags low-precision
+        launches (keys and footprint model differ, see the field doc)."""
         kt = -(-k // s)
         pi = kt - 1
-        geom = cls(b, h + 2 * pi, w + 2 * pi, cin, cout, kt, s)
+        geom = cls(b, h + 2 * pi, w + 2 * pi, cin, cout, kt, s,
+                   dtype=dtype)
         if padding is None:
             return geom
         from repro.core.deconv import _pads, deconv_output_shape
@@ -226,11 +242,17 @@ _FILTER_BUDGET = 2 << 20
 
 
 def vmem_plan_bytes(geom: ConvGeom, plan: KernelPlan) -> int:
-    """f32 VMEM footprint of one grid step: input band *including the
-    (K_T - 1) halo and the residual-crop row*, filter block, f32
+    """VMEM footprint of one grid step: input band *including the
+    (K_T - 1) halo and the residual-crop row*, filter block,
     accumulator and interleaved output tile — the pre-``tw`` heuristic
     only modelled the filter block, which is how full-width bands on
-    wide layers (artgan/fst/mde) blew past the real budget."""
+    wide layers (artgan/fst/mde) blew past the real budget.
+
+    Dtype-aware: the band and filter block are stored at the operand
+    itemsize (1 byte for int8 — 4x smaller tiles-side footprint, which
+    is what legalises larger (th, tw, tcin, tcout) candidates), while
+    the accumulator (int32 for int8, f32 otherwise) and the dequantized
+    output tile are always 4-byte."""
     kt, ktw = geom.kt, geom.ktw or geom.kt
     s, sw = geom.s, geom.sw or geom.s
     phases = s * sw
@@ -240,15 +262,16 @@ def vmem_plan_bytes(geom: ConvGeom, plan: KernelPlan) -> int:
     filt = kt * ktw * plan.tcin * plan.tcout * phases
     acc = (th + 1) * (tw + 1) * plan.tcout * phases
     out = th * s * tw * sw * plan.tcout
-    return 4 * (band + filt + acc + out)
+    isz = geom.operand_itemsize
+    return isz * (band + filt) + 4 * (acc + out)
 
 
 def _fits_budget(geom: ConvGeom, plan: KernelPlan) -> bool:
     kt_area = geom.kt * (geom.ktw or geom.kt)
     phases = geom.s * (geom.sw or geom.s)
     return (vmem_plan_bytes(geom, plan) <= VMEM_BUDGET
-            and kt_area * plan.tcin * plan.tcout * phases * 4
-            <= _FILTER_BUDGET)
+            and kt_area * plan.tcin * plan.tcout * phases
+            * geom.operand_itemsize <= _FILTER_BUDGET)
 
 
 def heuristic_plan(geom: ConvGeom) -> KernelPlan:

@@ -101,7 +101,8 @@ def sd_conv2d_valid(x: jax.Array, w: jax.Array, th: int | None = None,
     kth, ktw, _, cout = w.shape
     (plo_h, phi_h), (plo_w, phi_w) = pad
     geom = ConvGeom(b, h + plo_h + phi_h, wd + plo_w + phi_w, cin, cout,
-                    kth, 1, ktw=0 if ktw == kth else ktw)
+                    kth, 1, ktw=0 if ktw == kth else ktw,
+                    dtype="int8" if _k._is_int8_pair(x, w) else "")
     plan = _resolve_plan(geom, th, tcin, tcout, tw)
     return _sd_conv2d_valid_jit(x, w, plan.th, plan.tw, plan.tcin,
                                 plan.tcout, pad, out_start, out_size)
@@ -128,8 +129,9 @@ def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
 def _sd_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s,
                   bias: jax.Array | None, act: str, th: int, tw: int,
                   tcin: int, tcout: int, pad, crop,
-                  out_space) -> jax.Array:
+                  out_space, scale: jax.Array | None = None) -> jax.Array:
     return _k.sd_fused_pallas(x, ws_ocmajor, s, bias=bias, act=act,
+                              scale=scale,
                               th=th, tw=tw, tcin=tcin, tcout=tcout,
                               pad=pad, crop=crop, out_space=out_space,
                               interpret=not _on_tpu())
@@ -164,6 +166,7 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
                              output_padding=0,
                              bias: jax.Array | None = None,
                              act: str = "linear",
+                             scale: jax.Array | None = None,
                              plan: KernelPlan | None = None,
                              zero_copy: bool = True) -> jax.Array:
     """2-D transposed conv from *pre-split* oc-major filters via the
@@ -181,6 +184,10 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
     This is the engine's hot path (`repro.engine`): ``ws_ocmajor`` (with
     folded BN scale), ``bias`` and ``plan`` come from the per-layer plan
     cache, so nothing here touches ``split_filters``.
+
+    Int8 launches (int8 ``x`` and ``ws_ocmajor``, with the (B, Cout*ss)
+    combined dequant ``scale``) require the zero-copy path: the
+    pad -> kernel -> crop reference has no in-kernel dequant epilogue.
     """
     s = _ntuple(stride, 2)
     op = _ntuple(output_padding, 2)
@@ -192,6 +199,11 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
     out_space = deconv_output_shape(x.shape[1:3], (kh, kw), s, padding,
                                     output_padding)
     sarg = s[0] if s[0] == s[1] else s
+    quant = _k._is_int8_pair(x, ws_ocmajor)
+    if quant and not zero_copy:
+        raise ValueError("int8 presplit execution requires the "
+                         "zero-copy fused path (the reference "
+                         "composition has no dequant epilogue)")
     if zero_copy:
         b, h, wd, cin = x.shape
         cout = ws_ocmajor.shape[-1] // (s[0] * s[1])
@@ -199,19 +211,21 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
             # Degenerate geometry (a zero-extent output dim passes
             # padding validation): nothing to launch — match the
             # pad->kernel->crop reference, which crops to empty.
-            return jnp.zeros((b, *out_space, cout), x.dtype)
+            return jnp.zeros((b, *out_space, cout),
+                             jnp.float32 if quant else x.dtype)
         crop = tuple(pki + lo for pki, (lo, _) in zip(pk, pads))
         rplan = plan if plan is not None else _resolve_plan(
             ConvGeom(b, h + 2 * pih, wd + 2 * piw, cin, cout, kth, s[0],
                      ktw=0 if ktw == kth else ktw,
                      sw=0 if s[1] == s[0] else s[1],
                      out_h=out_space[0], out_w=out_space[1],
-                     crop_h=crop[0], crop_w=crop[1]),
+                     crop_h=crop[0], crop_w=crop[1],
+                     dtype="int8" if quant else ""),
             None, None, None)
         return _sd_fused_jit(x, ws_ocmajor, sarg, bias, act, rplan.th,
                              rplan.tw, rplan.tcin, rplan.tcout,
                              ((pih, pih), (piw, piw)), crop,
-                             tuple(out_space))
+                             tuple(out_space), scale)
 
     # ---- reference composition: pad -> uncropped kernel -> crop ------
     xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
@@ -247,6 +261,7 @@ def sd_deconv_presplit_fused_1d(x: jax.Array, ws_ocmajor: jax.Array,
                                 output_padding=0,
                                 bias: jax.Array | None = None,
                                 act: str = "linear",
+                                scale: jax.Array | None = None,
                                 plan: KernelPlan | None = None
                                 ) -> jax.Array:
     """1-D SD through the fused kernel, lowered as H=1 2-D.
@@ -255,7 +270,8 @@ def sd_deconv_presplit_fused_1d(x: jax.Array, ws_ocmajor: jax.Array,
     c = oc*s + phase.  The length axis becomes the kernel's width axis
     (a (1, KT) filter, interleave (1, s)) — same kernel, no wasted MACs,
     and the zero-copy pad/crop folding applies to the length axis via
-    the kernel's width machinery.
+    the kernel's width machinery.  ``scale`` (int8): (B, Cout*s),
+    oc-major — the (1, s) lowering keeps the phase-channel order.
     """
     (k,) = _ntuple(kernel, 1)
     (s,) = _ntuple(stride, 1)
@@ -264,7 +280,7 @@ def sd_deconv_presplit_fused_1d(x: jax.Array, ws_ocmajor: jax.Array,
     y = sd_deconv_presplit_fused(
         x[:, None], ws_ocmajor[None], (1, k), (1, s),
         ((0, 0), (lo, hi)), output_padding=(0, op), bias=bias, act=act,
-        plan=plan)
+        scale=scale, plan=plan)
     return y[:, 0]
 
 
@@ -273,6 +289,7 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
                                 output_padding=0,
                                 bias: jax.Array | None = None,
                                 act: str = "linear",
+                                scale: jax.Array | None = None,
                                 plan: KernelPlan | None = None
                                 ) -> jax.Array:
     """3-D SD: depth folded into batch for the intra-slice convs.
@@ -287,6 +304,12 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
     accumulation over the KT_d taps, and the 3-D interleave + bias/act
     epilogue falls back to grouped-XLA layout ops (``depth_to_space``).
     No new kernels.
+
+    Int8 (int8 ``x``/``ws_nmajor`` with an n-major (B, N*Cout)
+    ``scale``): each tap conv returns exact int32 partial sums, the
+    tap accumulation stays int32, and the combined dequant scale is
+    applied per (sample, n-major phase channel) *before* the 3-D
+    interleave; output f32.
     """
     s = _ntuple(stride, 3)
     k = _ntuple(kernel, 3)
@@ -305,14 +328,23 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
     tile = dict(th=plan.th, tw=plan.tw, tcin=plan.tcin,
                 tcout=plan.tcout) if plan is not None else {}
     hw_pad = ((pi[1], pi[1]), (pi[2], pi[2]))
+    quant = _k._is_int8_pair(x, ws_nmajor)
     acc = None
     for td in range(ktd):
         xs = jax.lax.slice_in_dim(xp, td, td + od, axis=1)
         xs = xs.reshape(b * od, h, wd, cin)
         y2 = sd_conv2d_valid(xs, ws_nmajor[td], pad=hw_pad, **tile)
-        y2 = y2.astype(jnp.float32)
+        if not quant:                    # int8 taps stay exact int32
+            y2 = y2.astype(jnp.float32)
         acc = y2 if acc is None else acc + y2
     y = acc.reshape(b, od, oh1, ow1, nco)
+    if quant:
+        if scale is None:
+            scale = jnp.ones((b, nco), jnp.float32)
+        # Dequant before the interleave: n-major phase channels carry
+        # distinct scales (per-sample activation x per-channel filter).
+        y = y.astype(jnp.float32) * scale.astype(jnp.float32).reshape(
+            b, 1, 1, 1, nco)
     full = depth_to_space(y, s)
     out = crop_interleaved(full, pk, pads, out_space)
     if bias is not None:
@@ -321,7 +353,7 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
         out = jax.nn.relu(out)
     elif act == "tanh":
         out = jnp.tanh(out)
-    return out.astype(x.dtype)
+    return out.astype(jnp.float32 if quant else x.dtype)
 
 
 def sd_deconv_kernel(x: jax.Array, w: jax.Array, stride: int,

@@ -119,14 +119,30 @@ def _mask_band(xb: jax.Array, row0, col0, *, h: int, w: int,
     return jnp.where(mask[..., None], xb, jnp.zeros((), xb.dtype))
 
 
+def _is_int8_pair(x: jax.Array, w: jax.Array) -> bool:
+    return x.dtype == jnp.int8 and w.dtype == jnp.int8
+
+
 def _conv_partial(x, w, *, kth: int, ktw: int, rows: int,
                   cols: int) -> jax.Array:
     """K_T_h*K_T_w MXU matmuls over one (band, cin-tile, cout-tile) block.
 
     x: (rows+KTh-1, cols+KTw-1, TCin); w: (KTh, KTw, TCin, TC).
-    Returns the f32 partial sum of shape (rows*cols, TC).
+    Returns the partial sum of shape (rows*cols, TC): f32 for float
+    operands; for an int8 (x, w) pair the dot runs int8-in with
+    ``preferred_element_type=int32`` — the MXU's native 8-bit mode, no
+    operand casts — and the partial sum is exact int32.
     """
     tcin = x.shape[-1]
+    if _is_int8_pair(x, w):
+        acc = jnp.zeros((rows * cols, w.shape[-1]), jnp.int32)
+        for kh in range(kth):
+            for kw in range(ktw):
+                patch = x[kh:kh + rows, kw:kw + cols, :].reshape(
+                    rows * cols, tcin)
+                acc += jnp.dot(patch, w[kh, kw],
+                               preferred_element_type=jnp.int32)
+        return acc
     acc = jnp.zeros((rows * cols, w.shape[-1]), jnp.float32)
     for kh in range(kth):
         for kw in range(ktw):
@@ -177,7 +193,11 @@ def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
     """Stride-1 VALID conv over the logically zero-padded input.
 
     x: (B, H, W, Cin); w: (KTh, KTw, Cin, Co) — rectangular filters
-    allowed (the 1-D rank lowering runs a (1, KT) filter).
+    allowed (the 1-D rank lowering runs a (1, KT) filter).  An int8
+    (x, w) pair accumulates in int32 and returns the exact int32 conv
+    (symmetric quantization: the in-kernel zero padding is the int8
+    zero, so the masked halo stays correct); the caller owns the
+    dequant.
 
     ``pad`` is applied *in kernel*: the launch binds ``x`` with an
     ``Unblocked`` element window and zero-masks the out-of-range band
@@ -246,8 +266,12 @@ def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
         ],
         out_specs=pl.BlockSpec((1, th, tw, tcout),
                                lambda bi, i, j, co, ci: (bi, i, j, co)),
-        out_shape=jax.ShapeDtypeStruct((b, oh, ow, cout), x.dtype),
-        scratch_shapes=[pltpu.VMEM((th * tw, tcout), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct(
+            (b, oh, ow, cout),
+            jnp.int32 if _is_int8_pair(x, w) else x.dtype),
+        scratch_shapes=[pltpu.VMEM(
+            (th * tw, tcout),
+            jnp.int32 if _is_int8_pair(x, w) else jnp.float32)],
         compiler_params=_compiler_params(4, 1),
         interpret=interpret,
     )(x, w)
@@ -257,12 +281,12 @@ def sd_conv_pallas(x: jax.Array, w: jax.Array, *, th: int = 8,
 # Fused conv + interleave + epilogue kernel (in-kernel pad AND crop)
 # ---------------------------------------------------------------------------
 
-def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kth: int,
+def _sd_fused_body(x_ref, w_ref, b_ref, *rest, kth: int,
                    ktw: int, rh: int, rw: int, th: int, tw: int,
                    sh: int, sw: int, res_h: int, res_w: int, act: str,
                    h: int, w: int, q_h: int, q_w: int,
                    pad_h: PadPair, pad_w: PadPair,
-                   mask_h: bool, mask_w: bool):
+                   mask_h: bool, mask_w: bool, quant: bool):
     """Conv + in-VMEM stride-s interleave + crop-folded epilogue.
 
     w_ref holds oc-major split filters: channel c = oc*sh*sw +
@@ -272,7 +296,18 @@ def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kth: int,
     interleaves the sh*sw phases, adds the per-oc bias, applies the
     activation, and writes the static slice ``[res : res + th*s)`` of
     the interleaved tile — final output geometry, no HBM crop.
+
+    ``quant``: int8 launch — the accumulator is exact int32 and a
+    fourth operand carries the combined per-(sample, phase-channel)
+    dequant scale (activation scale x folded per-channel filter scale),
+    staged once per tile; the epilogue multiplies it into the int32
+    sums *before* the interleave (each phase channel has its own
+    scale), then runs the same bias + act + crop in f32.
     """
+    if quant:
+        s_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
     ci = pl.program_id(4)
 
     @pl.when(ci == 0)
@@ -292,7 +327,13 @@ def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kth: int,
     def _epilogue():
         cphase = acc_ref.shape[-1]                 # TCout * sh*sw
         tc = cphase // (sh * sw)
-        y = acc_ref[...].reshape(rh, rw, tc, sh, sw)  # c -> (oc, py, px)
+        acc = acc_ref[...]
+        if quant:
+            # Dequant BEFORE the interleave: the (rh*rw, TCout*ss)
+            # int32 sums scale per phase channel (oc-major layout,
+            # matching w_ref), broadcast over the spatial rows.
+            acc = acc.astype(jnp.float32) * s_ref[0].astype(jnp.float32)
+        y = acc.reshape(rh, rw, tc, sh, sw)         # c -> (oc, py, px)
         y = y.transpose(0, 3, 1, 4, 2)              # (rh, py, rw, px, oc)
         y = y.reshape(rh * sh, rw * sw, tc)
         y = y + b_ref[0].astype(jnp.float32)        # per-oc bias
@@ -304,11 +345,13 @@ def _sd_fused_body(x_ref, w_ref, b_ref, o_ref, acc_ref, *, kth: int,
 
 def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
                     bias: jax.Array | None = None, act: str = "linear",
+                    scale: jax.Array | None = None,
                     th: int = 8, tw: int = 0, tcout: int | None = None,
                     tcin: int | None = None,
                     pad: Tuple[PadPair, PadPair] = ((0, 0), (0, 0)),
                     crop: Tuple[int, int] = (0, 0),
                     out_space: Optional[Tuple[int, int]] = None,
+                    out_dtype=None,
                     interpret: bool = True) -> jax.Array:
     """Fused SD: split-filter conv + interleaved (pixel-shuffled) write,
     zero-copy end to end.
@@ -320,6 +363,11 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
         ``(sh, sw)`` pair (the 1-D lowering passes ``(1, s)``).
     bias: (Cout,) added per output channel in the epilogue (folded-BN
           beta); ``act`` in {"linear", "relu", "tanh"} applied after.
+    scale: int8 launches only — (B, Cout*sh*sw) f32 combined dequant
+          scale per (sample, oc-major phase channel): the per-sample
+          activation scale times the per-channel filter scale.  Staged
+          once per (batch, cout-tile) and multiplied into the int32
+          accumulator in the epilogue, before interleave/bias/act.
     crop: low-side crop per dim in interleaved coordinates (``P_K`` +
           user padding); folded into the launch as a ``c // s`` input
           band offset plus a static ``c % s`` slice of the VMEM tile.
@@ -330,12 +378,20 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
           ``s * (H + pad - KT + 1)``.
 
     returns (B, *out_space, Cout) — final deconv output geometry, one
-    HBM write per element.
+    HBM write per element.  ``out_dtype`` defaults to ``x.dtype`` for
+    float launches and f32 (the dequantized value) for int8 launches.
     """
     sh, sw = (s, s) if isinstance(s, int) else (int(s[0]), int(s[1]))
     b, h, wd, cin = x.shape
     kth, ktw = ws_ocmajor.shape[0], ws_ocmajor.shape[1]
     cout = ws_ocmajor.shape[-1] // (sh * sw)
+    quant = _is_int8_pair(x, ws_ocmajor)
+    if quant and scale is None:
+        scale = jnp.ones((b, cout * sh * sw), jnp.float32)
+    if not quant and scale is not None:
+        raise ValueError("scale requires an int8 (x, ws) pair")
+    if out_dtype is None:
+        out_dtype = jnp.float32 if quant else x.dtype
     (plo_h, phi_h), (plo_w, phi_w) = pad
     full_oh = h + plo_h + phi_h - kth + 1     # conv rows incl. pad
     full_ow = wd + plo_w + phi_w - ktw + 1
@@ -375,30 +431,40 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
         _sd_fused_body, kth=kth, ktw=ktw, rh=rh, rw=rw, th=th, tw=tw,
         sh=sh, sw=sw, res_h=res_h, res_w=res_w, act=act, h=h, w=wd,
         q_h=q_h, q_w=q_w, pad_h=(plo_h, phi_h), pad_w=(plo_w, phi_w),
-        mask_h=mask_h, mask_w=mask_w)
+        mask_h=mask_h, mask_w=mask_w, quant=quant)
     ss = sh * sw
+    in_specs = [
+        pl.BlockSpec(
+            (1, rh + kth - 1, rw + ktw - 1, tcin),
+            lambda bi, i, j, co, ci: (bi, i * th + q_h, j * tw + q_w,
+                                      ci * tcin),
+            indexing_mode=pl.Unblocked(
+                ((0, 0), (plo_h, win_hi_h), (plo_w, win_hi_w),
+                 (0, 0)))),
+        pl.BlockSpec((kth, ktw, tcin, tcout * ss),
+                     lambda bi, i, j, co, ci: (0, 0, ci, co)),
+        pl.BlockSpec((1, tcout), lambda bi, i, j, co, ci: (0, co)),
+    ]
+    operands = [x, ws_ocmajor, bias2d]
+    if quant:
+        # Per-sample dequant scales: one (1, TCout*ss) row staged per
+        # (batch, cout-tile) grid step.
+        in_specs.append(pl.BlockSpec(
+            (1, tcout * ss), lambda bi, i, j, co, ci: (bi, co)))
+        operands.append(scale.astype(jnp.float32))
     return pl.pallas_call(
         body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                (1, rh + kth - 1, rw + ktw - 1, tcin),
-                lambda bi, i, j, co, ci: (bi, i * th + q_h, j * tw + q_w,
-                                          ci * tcin),
-                indexing_mode=pl.Unblocked(
-                    ((0, 0), (plo_h, win_hi_h), (plo_w, win_hi_w),
-                     (0, 0)))),
-            pl.BlockSpec((kth, ktw, tcin, tcout * ss),
-                         lambda bi, i, j, co, ci: (0, 0, ci, co)),
-            pl.BlockSpec((1, tcout), lambda bi, i, j, co, ci: (0, co)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, th * sh, tw * sw, tcout),
                                lambda bi, i, j, co, ci: (bi, i, j, co)),
-        out_shape=jax.ShapeDtypeStruct((b, oh, ow, cout), x.dtype),
-        scratch_shapes=[pltpu.VMEM((rh * rw, tcout * ss), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, cout), out_dtype),
+        scratch_shapes=[pltpu.VMEM(
+            (rh * rw, tcout * ss),
+            jnp.int32 if quant else jnp.float32)],
         compiler_params=_compiler_params(4, 1),
         interpret=interpret,
-    )(x, ws_ocmajor, bias2d)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------

@@ -100,7 +100,19 @@ class GenServer:
                  backend: str = "auto", max_batch: int = 16, dp: int = 1,
                  seed: int = 0,
                  specs: Optional[Dict[str, NetworkSpec]] = None):
+        # dtype="int8" selects the quantized serving path: engines bind
+        # int8 plans (per-channel weight quant at bind, per-sample
+        # activation quant + dequant epilogue on the hot path), while
+        # latents/params/outputs stay f32 — int8 is an execution dtype,
+        # not an IO dtype.  The compile-cache key says "int8", so float
+        # and int8 cells of the same (net, bucket) coexist.
+        self.engine_dtype = "native"
+        if isinstance(dtype, str) and dtype == "int8":
+            self.engine_dtype = "int8"
+            dtype = jnp.float32
         self.dtype = jnp.dtype(dtype)
+        self.dtype_name = ("int8" if self.engine_dtype == "int8"
+                           else self.dtype.name)
         self.backend = backend
         # The cap is ALSO the group-size bound, so it must itself be a
         # power of two or pow2_bucket's clamped cap would fall below a
@@ -135,7 +147,8 @@ class GenServer:
         if net not in self._models:
             # head semantics ride on the spec (NetworkSpec.final_tanh)
             m = GenerativeModel(self._specs[net], deconv_impl="sd_kernel",
-                                engine_backend=self.backend)
+                                engine_backend=self.backend,
+                                engine_dtype=self.engine_dtype)
             params = m.init(jax.random.PRNGKey(self.seed),
                             dtype=self.dtype)
             self._models[net] = (m, params)
@@ -208,7 +221,7 @@ class GenServer:
         closed over: rebinding weights (new checkpoint, dtype sweep)
         reuses the compiled executable — only shapes key the cache.
         """
-        key = (net, bucket, self.dtype.name)
+        key = (net, bucket, self.dtype_name)
         if key not in self._compiled:
             model, _ = self.model(net)
 
@@ -284,7 +297,8 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "fused", "xla"])
     ap.add_argument("--dtype", default="float32",
-                    choices=["float32", "bfloat16"])
+                    choices=["float32", "bfloat16", "int8"],
+                    help="int8 = quantized engine plans (f32 IO)")
     ap.add_argument("--dryrun", action="store_true",
                     help="2 requests on a reduced arch (CI smoke)")
     ap.add_argument("--pretune", action="store_true",
@@ -301,7 +315,8 @@ def main(argv=None):
         specs = None
         n_requests = args.requests
 
-    server = GenServer(nets=nets, dtype=jnp.dtype(args.dtype),
+    dtype = "int8" if args.dtype == "int8" else jnp.dtype(args.dtype)
+    server = GenServer(nets=nets, dtype=dtype,
                        backend=args.backend, max_batch=args.max_batch,
                        dp=args.dp, specs=specs)
     if args.pretune:

@@ -42,16 +42,22 @@ class GenerativeModel:
 
     def __init__(self, spec: NetworkSpec, deconv_impl: str = "sd",
                  final_tanh: Optional[bool] = None,
-                 engine_backend: str = "auto"):
+                 engine_backend: str = "auto",
+                 engine_dtype: str = "native"):
         self.spec = spec
         if final_tanh is None:          # head semantics live on the spec
             final_tanh = spec.final_tanh
         self.deconv_impl = deconv_impl
         info = registry.get_impl(deconv_impl)
+        if engine_dtype != "native" and not info.engine:
+            raise ValueError(
+                f"engine_dtype={engine_dtype!r} needs an engine impl "
+                f"(e.g. 'sd_kernel'); {deconv_impl!r} is a plain "
+                "executor")
         if info.engine:
             from repro.engine import SDEngine
             self._engine: Optional["SDEngine"] = SDEngine(
-                spec, backend=engine_backend)
+                spec, backend=engine_backend, dtype=engine_dtype)
             self._deconv = None
         else:
             self._engine = None
@@ -106,10 +112,14 @@ class GenerativeModel:
 
     def _functional_plan(self, layer):
         """Geometry-only DeconvPlan for the traced-params path (cached:
-        it is static data, safe to reuse across traces)."""
+        it is static data, safe to reuse across traces).  Always
+        ``dtype="native"``: the traced path is the differentiable
+        training form, and int8 plans are inference-only — an int8
+        engine still trains in float."""
         if layer.name not in self._fplans:
             act = "linear"   # act/scale/bias composed outside, like native
-            self._fplans[layer.name] = self._engine.layer_plan(layer, act)
+            self._fplans[layer.name] = self._engine.layer_plan(
+                layer, act, dtype="native")
         return self._fplans[layer.name]
 
     def _forward(self, params: Params, x: jax.Array,
@@ -200,16 +210,20 @@ class GenerativeModel:
 
 
 def build(name: str, deconv_impl: str = "sd",
-          engine_backend: str = "auto") -> GenerativeModel:
+          engine_backend: str = "auto",
+          engine_dtype: str = "native") -> GenerativeModel:
     """Factory: build('dcgan', 'sd') — any :data:`repro.core.accounting.
     WORKLOADS` entry (the paper's six 2-D nets plus the 1-D audio, 3-D
-    voxel and segmentation workloads).  ``engine_backend`` only matters
-    for engine impls (see :class:`repro.engine.SDEngine`)."""
+    voxel and segmentation workloads).  ``engine_backend`` /
+    ``engine_dtype`` only matter for engine impls (see
+    :class:`repro.engine.SDEngine`; ``engine_dtype="int8"`` serves the
+    quantized inference path)."""
     if name not in WORKLOADS:
         raise ValueError(f"unknown workload {name!r}; choose from "
                          f"{sorted(WORKLOADS)}")
     return GenerativeModel(WORKLOADS[name](), deconv_impl=deconv_impl,
-                           engine_backend=engine_backend)
+                           engine_backend=engine_backend,
+                           engine_dtype=engine_dtype)
 
 
 # --------------------------------------------------------------------------

@@ -77,6 +77,69 @@ def _run_presplit(plan: DeconvPlan, x: jax.Array, ws: jax.Array,
     return y
 
 
+def _run_presplit_int8(plan: DeconvPlan, x: jax.Array) -> jax.Array:
+    """Quantized deployment path of a bound int8 plan.
+
+    Activations are quantized *dynamically, per sample* (the zero rows
+    a bucketed server pads a batch with can never perturb real
+    samples), the stride-1 conv runs int8 x int8 -> int32, and the
+    combined dequant scale — per-sample activation scale times the
+    plan's per-channel filter scale (BN already folded in) — is applied
+    before the interleave, where each phase channel still has its own
+    scale.  Output is f32.
+
+    The fused backend does all of this inside the zero-copy Pallas
+    kernel (int32 VMEM accumulator, scale staged once per tile).  The
+    xla backend keeps the same quantization numerics but computes the
+    conv on f32-cast operands — XLA's CPU int8 conv path is orders of
+    magnitude slower than its f32 conv, so off-TPU the honest-int8
+    wall-clock would be nonsense; numerically the two differ only by
+    f32-vs-int32 accumulation order.
+    """
+    from repro.core.quant import quantize_act
+    xq, sx = quantize_act(x)
+    bias, act = plan.bias, plan.act
+    comb = sx[:, None] * plan.wscale[None, :].astype(jnp.float32)
+    if plan.backend == "fused":
+        from repro.kernels import ops
+        if plan.rank == 3:
+            assert plan.layout == "nmajor"
+            return ops.sd_deconv_presplit_fused_3d(
+                xq, plan.ws, plan.kernel, plan.stride, plan.padding,
+                output_padding=plan.output_padding, bias=bias, act=act,
+                scale=comb, plan=plan.tile)
+        assert plan.layout == "ocmajor"
+        fn = (ops.sd_deconv_presplit_fused_1d if plan.rank == 1
+              else ops.sd_deconv_presplit_fused)
+        return fn(xq, plan.ws, plan.kernel, plan.stride, plan.padding,
+                  output_padding=plan.output_padding, bias=bias, act=act,
+                  scale=comb, plan=plan.tile)
+    assert plan.layout == "nmajor"
+    rank = plan.rank
+    space1 = (1,) * rank
+
+    def conv_fn(xp, wsq):
+        from jax import lax
+        from repro.core.deconv import conv_dimension_numbers
+        y = lax.conv_general_dilated(
+            xp.astype(jnp.float32), wsq.astype(jnp.float32),
+            window_strides=(1,) * rank, padding="VALID",
+            dimension_numbers=conv_dimension_numbers(rank))
+        # dequant per (sample, n-major channel) BEFORE depth_to_space.
+        return y * comb.reshape(comb.shape[0], *space1, comb.shape[1])
+
+    y = sd_deconv_presplit(xq, plan.ws, plan.kernel, plan.stride,
+                           plan.padding, conv_fn=conv_fn,
+                           output_padding=plan.output_padding)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if act == "relu":
+        y = jax.nn.relu(y)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    return y
+
+
 # ---------------------------------------------------------------------------
 # conv_transpose: pure, differentiable, jit/vmap/shard_map-composable.
 # ---------------------------------------------------------------------------
@@ -102,6 +165,11 @@ def _fwd_value(plan, x, w, b):
         raise ValueError(
             "conv_transpose takes a geometry-only plan plus the raw "
             "filter; use repro.sd.execute(plan, x) for bound plans")
+    if plan.dtype == "int8":
+        raise ValueError(
+            "int8 plans are inference-only: quantization is not "
+            "usefully differentiable — bind() the plan and use "
+            "repro.sd.execute, or build a dtype='native' plan to train")
     ws = split_filters(w, plan.stride)
     y = _run_presplit(plan, x, ws, "nmajor", None, "linear")
     return y if b is None else y + b.astype(y.dtype)
@@ -145,5 +213,7 @@ def execute(plan: DeconvPlan, x: jax.Array) -> jax.Array:
         raise ValueError("execute() needs a bound plan; call "
                          "plan.bind(w, scale, bias) once offline, or use "
                          "conv_transpose(plan, x, w) for the stateless form")
+    if plan.dtype == "int8":
+        return _run_presplit_int8(plan, x)
     return _run_presplit(plan, x, plan.ws, plan.layout, plan.bias,
                          plan.act)

@@ -82,11 +82,18 @@ class DeconvPlan:
     Static geometry (pytree aux_data): ``kernel``, ``stride``,
     ``padding`` (normalised to ``((lo, hi),) * rank``),
     ``output_padding``, ``cin``, ``cout``, ``backend``, ``act``,
-    ``layout``, ``tile``.  ``rank == len(kernel)``.
+    ``layout``, ``tile``, ``dtype``.  ``rank == len(kernel)``.
 
     Leaves (only set on a *bound* plan): ``ws`` — the pre-split filters
     in ``layout`` order with any per-channel scale folded in — and
-    ``bias``.
+    ``bias``.  An int8 plan (``dtype="int8"``) additionally carries
+    ``wscale``, the per split-output-channel dequant scales (same
+    channel order as ``ws``); its ``ws`` holds int8 values with the BN
+    scale folded into ``wscale`` instead of the filter data.
+
+    ``dtype`` is aux_data, so float and int8 bindings of the same layer
+    hash to *different* jit cache entries — a server can hold both
+    without retrace collisions.
     """
     kernel: Tuple[int, ...]
     stride: Tuple[int, ...]
@@ -98,8 +105,10 @@ class DeconvPlan:
     layout: str = "nmajor"
     tile: Optional[KernelPlan] = None      # autotuned (th, tw, tcin, tcout)
     output_padding: Tuple[int, ...] = None  # normalised in plan()
+    dtype: str = "native"                  # "native" | "int8"
     ws: Optional[jax.Array] = None         # leaf: pre-split filters
     bias: Optional[jax.Array] = None       # leaf: per-oc bias
+    wscale: Optional[jax.Array] = None     # leaf: int8 per-channel scales
 
     def __post_init__(self):
         if self.output_padding is None:
@@ -173,6 +182,14 @@ class DeconvPlan:
         filter, so scaling filter output-channels == scaling the output.
         The filters are stored in the layout this plan's backend
         consumes (oc-major for the fused kernel, n-major for XLA).
+
+        ``dtype="int8"`` plans quantize the scale-folded split filters
+        here, per split output channel (symmetric, amax/127): the BN
+        fold happens *first* on the f32 filters, then quantization —
+        so the per-channel ``wscale`` absorbs both the filter magnitude
+        and the BN gamma, exactly the one-multiply epilogue the fused
+        kernel runs.  The stored ``ws`` is int8; ``wscale`` follows the
+        same (oc-major or n-major) channel order as ``ws``.
         """
         if w.shape != (*self.kernel, self.cin, self.cout):
             raise ValueError(f"filter shape {w.shape} does not match plan "
@@ -182,23 +199,36 @@ class DeconvPlan:
             # n-major channel c = n*Cout + oc: tile the per-oc scale
             # across the prod(s) sub-filter blocks.
             ws = ws * jnp.tile(scale.astype(ws.dtype), self.phases)
+        wscale = None
+        if self.dtype == "int8":
+            from repro.core.quant import quantize_channelwise
+            ws, wscale = quantize_channelwise(ws, axis=-1)
         layout = self._bound_layout()
         if layout == "ocmajor":
             ws = to_ocmajor(ws, self.stride)
+            if wscale is not None:
+                # n-major c = phase*Cout + oc  ->  oc-major oc*N + phase.
+                wscale = wscale.reshape(self.phases, self.cout)
+                wscale = wscale.T.reshape(-1)
         return replace(self, ws=ws, bias=bias, layout=layout,
+                       wscale=wscale,
                        act=self.act if act is None else act)
 
     def unbind(self) -> "DeconvPlan":
-        return replace(self, ws=None, bias=None, layout="nmajor")
+        return replace(self, ws=None, bias=None, wscale=None,
+                       layout="nmajor")
 
     def with_tile(self, tile: Optional[KernelPlan]) -> "DeconvPlan":
         return replace(self, tile=tile)
 
 
+DTYPES = ("native", "int8")
+
+
 def plan(filter_shape: Sequence[int], stride, padding=0,
          backend: str = "auto", act: str = "linear",
          tile: Optional[KernelPlan] = None,
-         output_padding=0) -> DeconvPlan:
+         output_padding=0, dtype: str = "native") -> DeconvPlan:
     """Compute the split layout for a deconv filter shape.
 
     ``filter_shape`` is ``(*K, C_in, C_out)`` — its length sets the
@@ -212,11 +242,20 @@ def plan(filter_shape: Sequence[int], stride, padding=0,
     result is geometry-only (no filter data): pass it straight to
     :func:`repro.sd.conv_transpose`, or :meth:`DeconvPlan.bind` a
     filter for the presplit execution path.
+
+    ``dtype="int8"`` requests the quantized inference path: ``bind``
+    quantizes the scale-folded split filters per output channel and
+    ``execute`` runs int8 activations with a dequant epilogue.  Int8
+    plans are inference-only — :func:`repro.sd.conv_transpose` rejects
+    them (quantization is not usefully differentiable).
     """
     dims = tuple(int(d) for d in filter_shape)
     if len(dims) not in (3, 4, 5):
         raise ValueError(f"filter_shape {filter_shape!r} must have "
                          "3 (1-D), 4 (2-D) or 5 (3-D) entries")
+    if dtype not in DTYPES:
+        raise ValueError(f"unknown plan dtype {dtype!r}; "
+                         f"choose from {DTYPES}")
     rank = len(dims) - 2
     k, (cin, cout) = dims[:rank], dims[rank:]
     st = _ntuple(stride, rank)
@@ -226,7 +265,7 @@ def plan(filter_shape: Sequence[int], stride, padding=0,
     return DeconvPlan(kernel=k, stride=st,
                       padding=_pads_nd(padding, rank), cin=cin, cout=cout,
                       backend=resolve_backend(backend), act=act, tile=tile,
-                      output_padding=op)
+                      output_padding=op, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -234,20 +273,22 @@ def plan(filter_shape: Sequence[int], stride, padding=0,
 # ---------------------------------------------------------------------------
 
 def _flatten(p: DeconvPlan):
-    children = (p.ws, p.bias)
+    # wscale is None on float plans; None children are empty subtrees,
+    # so float bound plans still flatten to exactly (ws, bias) leaves.
+    children = (p.ws, p.bias, p.wscale)
     aux = (p.kernel, p.stride, p.padding, p.output_padding, p.cin, p.cout,
-           p.backend, p.act, p.layout, p.tile)
+           p.backend, p.act, p.layout, p.tile, p.dtype)
     return children, aux
 
 
 def _unflatten(aux, children) -> DeconvPlan:
-    ws, bias = children
+    ws, bias, wscale = children
     (kernel, stride, padding, output_padding, cin, cout, backend, act,
-     layout, tile) = aux
+     layout, tile, dtype) = aux
     return DeconvPlan(kernel=kernel, stride=stride, padding=padding,
                       output_padding=output_padding, cin=cin, cout=cout,
                       backend=backend, act=act, layout=layout, tile=tile,
-                      ws=ws, bias=bias)
+                      dtype=dtype, ws=ws, bias=bias, wscale=wscale)
 
 
 jax.tree_util.register_pytree_node(DeconvPlan, _flatten, _unflatten)
