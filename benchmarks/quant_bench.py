@@ -15,6 +15,9 @@ and records
   paper's memory-bound target processors are limited by.  Int8 tiles
   move 4x fewer operand bytes, so per-layer bytes must be strictly
   lower (``bytes_lower`` flag per layer, gated like the kernel suite).
+  Both dtypes are lowered at the *same deterministic heuristic tile*
+  (like the ci.sh HBM gate) so the comparison isolates the dtype
+  effect from wall-clock-tuned tile drift across cache states.
 * **Wall clock** of the full generator, int8 engine vs f32 engine, on
   this host's execution backend.  Honesty note: off-TPU the engine's
   grouped-XLA backend computes the conv on f32-cast operands (XLA's
@@ -42,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ssim import ssim
-from repro.kernels.autotune import measure
+from repro.kernels.autotune import heuristic_plan, measure
 from repro.models.generative import build
 
 ALL_NETS = ("dcgan", "sngan", "artgan", "gpgan", "mde", "fst")
@@ -58,7 +61,11 @@ def _inputs(name, model, batch, seed=1):
                              model.input_shape(batch)) * scale
 
 
-def bench_net(name: str, batch=4, iters=3, bytes_batch=None):
+BEST_OF = 3
+
+
+def bench_net(name: str, batch=4, iters=3, bytes_batch=None,
+              best_of=BEST_OF):
     from repro.kernels import ops
     from repro.launch.hlo_analysis import cost_dict
 
@@ -78,10 +85,16 @@ def bench_net(name: str, batch=4, iters=3, bytes_batch=None):
                    data_range=max(drange, 1e-6)))
     max_err = float(np.max(np.abs(out - ref)))
 
-    t32 = measure(lambda: jax.block_until_ready(f_f32(z)),
-                  iters=iters, warmup=1)
-    t8 = measure(lambda: jax.block_until_ready(f_i8(z)),
-                 iters=iters, warmup=1)
+    # Best-of-k wall-clock, rounds interleaved across the two paths —
+    # run-to-run noise on a shared box swings ~2x, and interleaving
+    # keeps machine-state drift from biasing one column; k is recorded
+    # in the result.
+    t32, t8 = float("inf"), float("inf")
+    for _ in range(max(1, best_of)):
+        t32 = min(t32, measure(lambda: jax.block_until_ready(f_f32(z)),
+                               iters=iters, warmup=1))
+        t8 = min(t8, measure(lambda: jax.block_until_ready(f_i8(z)),
+                             iters=iters, warmup=1))
 
     # ---- fused zero-copy launch traffic, int8 vs f32 ------------------
     # Fused-backend engines give ocmajor plans with per-layer tiles;
@@ -106,18 +119,24 @@ def bench_net(name: str, batch=4, iters=3, bytes_batch=None):
         xs = (bytes_batch, *layer.in_hw, layer.cin)
         ss = pq.phases
         comb = jnp.ones((bytes_batch, layer.cout * ss), jnp.float32)
+        # One deterministic tile for BOTH dtypes: the gate compares the
+        # operand-dtype effect, not whatever (wall-clock-tuned) tile each
+        # dtype's cache resolves on this machine.  The f32 heuristic tile
+        # is always int8-feasible (1-byte operands only shrink VMEM).
+        geom = e32.engine.layer_geom(layer, bytes_batch)
+        tile = heuristic_plan(geom) if geom is not None else pf.tile
 
         def run32(x, ws, b, _p=pf):
             return ops.sd_deconv_presplit_fused(
                 x, ws, _p.kernel, _p.stride, _p.padding,
                 output_padding=_p.output_padding, bias=b, act=_p.act,
-                plan=_p.tile)
+                plan=tile)
 
         def run8(x, ws, b, sc, _p=pq):
             return ops.sd_deconv_presplit_fused(
                 x, ws, _p.kernel, _p.stride, _p.padding,
                 output_padding=_p.output_padding, bias=b, act=_p.act,
-                scale=sc, plan=_p.tile)
+                scale=sc, plan=tile)
 
         b32 = bytes_of(run32, jnp.zeros(xs, jnp.float32), pf.ws, pf.bias)
         b8 = bytes_of(run8, jnp.zeros(xs, jnp.int8), pq.ws, pq.bias,
@@ -131,6 +150,7 @@ def bench_net(name: str, batch=4, iters=3, bytes_batch=None):
 
     return {
         "batch": batch,
+        "best_of": best_of,
         "ssim": round(s, 5),
         "ssim_ok": bool(s >= SSIM_MIN),
         "max_err": max_err,
@@ -147,16 +167,17 @@ def bench_net(name: str, batch=4, iters=3, bytes_batch=None):
     }
 
 
-def sweep(nets=ALL_NETS, batch=4, iters=3, out=OUT_JSON, report=None):
+def sweep(nets=ALL_NETS, batch=4, iters=3, out=OUT_JSON, report=None,
+          best_of=BEST_OF):
     results = {"jax_backend": jax.default_backend(),
-               "ssim_min": SSIM_MIN, "nets": {}}
+               "ssim_min": SSIM_MIN, "best_of": best_of, "nets": {}}
     if report is not None:
         report.section("Int8 split-filter inference — SSIM vs f32 engine "
                        "+ fused-launch HBM bytes (memory-bound speedup)")
         report.header(["net", "ssim", "wall_f32", "wall_i8",
                        "hbm_f32_MB", "hbm_i8_MB", "speedup", "ok"])
     for name in nets:
-        r = bench_net(name, batch=batch, iters=iters)
+        r = bench_net(name, batch=batch, iters=iters, best_of=best_of)
         results["nets"][name] = r
         line = [name, f"{r['ssim']:.4f}", f"{r['wall_f32_ms']:.1f}ms",
                 f"{r['wall_int8_ms']:.1f}ms",
@@ -215,6 +236,10 @@ def main(argv=None):
     ap.add_argument("--nets", default=",".join(ALL_NETS))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--best-of", type=int, default=BEST_OF,
+                    help="wall-clock best-of-k rounds per path (k>=3 "
+                         "damps the ~2x run-to-run noise on shared "
+                         "hosts; recorded in the JSON)")
     ap.add_argument("--out", default=OUT_JSON)
     ap.add_argument("--check", action="store_true",
                     help="gate mode: validate an existing artifact "
@@ -224,7 +249,7 @@ def main(argv=None):
         raise SystemExit(0 if check(args.out, args.nets.split(","))
                          else 1)
     sweep(nets=args.nets.split(","), batch=args.batch, iters=args.iters,
-          out=args.out)
+          out=args.out, best_of=args.best_of)
 
 
 if __name__ == "__main__":

@@ -50,6 +50,16 @@ def _kernels_summary(data) -> dict:
     speedups = [r.get("speedup") for r in layers]
     bytes_flags = [r.get("bytes_lower") for r in layers
                    if "bytes_lower" in r]
+    # Winograd backend columns: parity (within the per-tap pinned
+    # tolerance) across every layer that ran the fast algorithm, its
+    # speedup over the direct fused kernel, and how many layers the
+    # autotuner's measured cost actually selected it on.
+    wino = [r for r in layers if r.get("wino_ms") is not None]
+    wino_speed = [r.get("wino_speedup") for r in wino]
+    # Wrong-baseline columns: measured wall-clock of shi [30] /
+    # chang [31] alongside their output error vs the exact deconv.
+    shi = [r.get("shi_ms") for r in layers if r.get("shi_ms")]
+    chang = [r.get("chang_ms") for r in layers if r.get("chang_ms")]
     return {
         "layers": len(layers),
         "parity_all": bool(layers) and all(r.get("allclose")
@@ -57,6 +67,19 @@ def _kernels_summary(data) -> dict:
         "speedup_geomean": _geomean(speedups),
         "speedup_min": min((s for s in speedups if s), default=None),
         "hbm_bytes_lower_all": bool(bytes_flags) and all(bytes_flags),
+        "wino_layers": len(wino),
+        "wino_parity_all": bool(wino) and all(r.get("wino_parity_ok")
+                                              for r in wino),
+        "wino_speedup_geomean": _geomean(wino_speed),
+        "wino_selected_layers": sum(
+            1 for r in layers if r.get("algo_selected") == "wino"),
+        "shi_ms_geomean": _geomean(shi),
+        "chang_ms_geomean": _geomean(chang),
+        "wrong_baseline_max_rel_err": max(
+            (r.get(k) for r in layers for k in ("shi_rel_err",
+                                                "chang_rel_err")
+             if r.get(k) is not None), default=None),
+        "best_of": data.get("meta", {}).get("best_of"),
         "backend": data.get("meta", {}).get("backend"),
     }
 

@@ -148,3 +148,55 @@ np.testing.assert_allclose(np.asarray(model.apply(params, z)),
                            np.asarray(ref), rtol=1e-4, atol=1e-4)
 print("kernel parity smoke: OK")
 PY
+
+echo "== winograd parity gate: all 22 paper deconv layers at full size "
+echo "   vs native, within the pinned per-tap tolerance =="
+python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+import repro.sd as sd
+from repro.core import accounting, native_deconv, same_deconv_pads
+from repro.kernels import winograd
+
+rng = np.random.RandomState(0)
+n = 0
+for net, fn in accounting.BENCHMARKS.items():
+    for l in fn().deconv_layers():
+        pads = (same_deconv_pads(l.k, l.s) if l.padding == "same"
+                else l.pad)
+        x = jnp.asarray(rng.randn(1, *l.in_hw, l.cin), jnp.float32)
+        w = jnp.asarray(rng.randn(l.k, l.k, l.cin, l.cout) * 0.05,
+                        jnp.float32)
+        p = sd.plan(w.shape, l.s, pads, backend="winograd").bind(w)
+        out = np.asarray(sd.execute(p, x))
+        ref = np.asarray(native_deconv(x, w, l.s, pads))
+        kt = -(-l.k // l.s)
+        tol = winograd.tolerance((kt, kt))
+        rel = np.abs(out - ref).max() / max(np.abs(ref).max(), 1e-6)
+        assert rel <= tol, (f"{net}/{l.name}: winograd rel err "
+                            f"{rel:.2e} > pinned {tol:.0e}")
+        n += 1
+assert n == 22, f"expected 22 paper deconv layers, saw {n}"
+print(f"winograd parity gate OK: {n} layers within pinned tolerance")
+PY
+
+echo "== winograd end-to-end gate: dcgan generator SSIM >= 0.999 vs "
+echo "   the exact native model =="
+python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.ssim import ssim
+from repro.models.generative import build
+
+ref_m = build("dcgan", "native")
+params = ref_m.init(jax.random.PRNGKey(0))
+wm = build("dcgan", "sd_kernel", engine_backend="winograd")
+z = jax.random.normal(jax.random.PRNGKey(1), ref_m.input_shape(2))
+ref = jnp.asarray(ref_m.apply(params, z))
+out = jnp.asarray(wm.apply(params, z))
+s = float(ssim(ref, out))
+assert s >= 0.999, f"dcgan winograd SSIM {s:.5f} < 0.999"
+rel = float(jnp.abs(out - ref).max() / jnp.abs(ref).max())
+print(f"winograd end-to-end gate OK: dcgan SSIM {s:.5f}, "
+      f"max rel err {rel:.2e}")
+PY

@@ -33,6 +33,7 @@ both work.  Bound plans themselves are pytrees and may be passed
 from __future__ import annotations
 
 import math
+from dataclasses import replace as dataclasses_replace
 from typing import Any, Dict, Iterable, Optional
 
 import jax
@@ -74,11 +75,17 @@ class SDEngine:
     """Per-network cache of presplit, BN-folded, tile-planned deconvs.
 
     ``backend`` selects how the cached plans execute: ``"fused"`` runs
-    the Pallas kernel (the TPU deployment path; interpret mode off-TPU),
-    ``"xla"`` runs the grouped stride-1 conv + pixel-shuffle from the
-    same presplit filters (the fast off-TPU serving path), ``"auto"``
-    picks fused on TPU and xla elsewhere.  The offline phase is
-    identical for both — one split + BN fold per layer at bind.
+    the direct Pallas kernel (the TPU deployment path; interpret mode
+    off-TPU) — and, once :meth:`pretune` has measured both algorithm
+    variants of a layer geometry, auto-switches individual layers to
+    the Winograd fast-algorithm kernel where it measured faster (see
+    :meth:`_layer_backend`); ``"winograd"`` pins the fast algorithm on
+    every layer; ``"xla"`` runs the grouped stride-1 conv +
+    pixel-shuffle from the same presplit filters (the fast off-TPU
+    serving path); ``"auto"`` picks fused on TPU and xla elsewhere.
+    The offline phase is the same split + BN fold per layer at bind —
+    winograd plans additionally fold the ``G g G^T`` filter transform
+    there.
 
     ``dtype="int8"`` builds quantized plans: bind() additionally
     quantizes the scale-folded split filters per output channel, and
@@ -123,6 +130,29 @@ class SDEngine:
         return tuple(leaves)
 
     # ---- offline phase ---------------------------------------------------
+    def _layer_backend(self, layer: LayerSpec, dtype: str,
+                       geom: Optional[ConvGeom]) -> str:
+        """Execution backend for one layer — where the autotuner becomes
+        an *algorithm* selector, not just a tile picker.  A ``"fused"``
+        engine consults :func:`autotune.best_algo` per layer geometry:
+        if BOTH the direct and the Winograd variants have measured plan
+        entries on the current backend (``pretune``/``kernel_bench``
+        populate them) and Winograd measured faster, the layer binds a
+        winograd plan instead.  Untuned layers never silently switch —
+        the default stays the exact direct kernel.  Engines constructed
+        with ``backend="winograd"`` pin the fast algorithm on every
+        layer (and raise at plan() time for unsupported geometry)."""
+        if (self.backend != "fused" or dtype == "int8" or geom is None
+                or layer.rank != 2):
+            return self.backend
+        from repro.kernels.winograd import supported
+        kt = -(-layer.k // layer.s)
+        if not supported((kt, kt)):
+            return self.backend
+        if autotune.best_algo(geom) == "wino":
+            return "winograd"
+        return self.backend
+
     def layer_plan(self, layer: LayerSpec, act: str,
                    dtype: Optional[str] = None) -> DeconvPlan:
         """Geometry-only plan for one deconv layer: split layout +
@@ -132,7 +162,10 @@ class SDEngine:
         resolve their tile at call time from the lowered geometry.
         ``dtype`` overrides the engine dtype (the models' traced
         training path requests "native" plans from an int8 engine —
-        int8 plans are inference-only)."""
+        int8 plans are inference-only).  On a ``"fused"`` engine the
+        per-layer compute algorithm is measured-cost selected (see
+        :meth:`_layer_backend`); tile lookup then uses the matching
+        ``algo``-tagged plan-cache key."""
         rank = layer.rank
         kernel = (layer.k,) * rank
         stride = (layer.s,) * rank
@@ -141,11 +174,14 @@ class SDEngine:
         dtype = self.dtype if dtype is None else dtype
         tile = None
         geom = self.layer_geom(layer, dtype=dtype)
+        backend = self._layer_backend(layer, dtype, geom)
         if geom is not None:
+            if backend == "winograd":
+                geom = dataclasses_replace(geom, algo="wino")
             tile = get_plan(geom)
         return make_plan(
             (*kernel, layer.cin, layer.cout), stride, pads,
-            backend=self.backend, act=act, tile=tile, dtype=dtype)
+            backend=backend, act=act, tile=tile, dtype=dtype)
 
     def build_plans(self, params: Params) -> Dict[str, DeconvPlan]:
         """Bound plans for every deconv layer — pure (no engine-state
@@ -198,23 +234,26 @@ class SDEngine:
     # ---- batch-aware tiles ----------------------------------------------
     def layer_geom(self, layer: LayerSpec,
                    batch: Optional[int] = None,
-                   dtype: Optional[str] = None) -> Optional[ConvGeom]:
+                   dtype: Optional[str] = None,
+                   algo: str = "") -> Optional[ConvGeom]:
         """Autotune geometry of one deconv layer's fused launch at
         ``batch`` (defaults to ``plan_batch``).  Rank-2 only — the 1-D
         and 3-D lowerings resolve their tiles at call time from the
         lowered geometry.  Int8 engines tag the geometry, so their
         plans are keyed (and their VMEM footprint modelled) for 1-byte
-        operands."""
+        operands; ``algo="wino"`` tags the Winograd variant of the same
+        launch (separate cache key + transformed-tile footprint)."""
         if layer.rank != 2:
             return None
         pads = (same_deconv_pads(layer.k, layer.s)
                 if layer.padding == "same" else layer.pad)
         dtype = self.dtype if dtype is None else dtype
-        return ConvGeom.from_deconv(batch or self.plan_batch,
+        geom = ConvGeom.from_deconv(batch or self.plan_batch,
                                     *layer.in_hw, layer.cin, layer.cout,
                                     layer.k, layer.s, padding=pads,
                                     dtype="int8" if dtype == "int8"
                                     else "")
+        return dataclasses_replace(geom, algo=algo) if algo else geom
 
     def plans_for_batch(self, batch: int) -> Dict[str, DeconvPlan]:
         """The cached bound plans with tiles re-resolved for ``batch``.
@@ -231,7 +270,9 @@ class SDEngine:
                   if l.kind == "deconv"}
         out: Dict[str, DeconvPlan] = {}
         for name, plan in self._plans.items():
-            geom = self.layer_geom(layers[name], batch)
+            geom = self.layer_geom(
+                layers[name], batch,
+                algo="wino" if plan.backend == "winograd" else "")
             out[name] = (plan if geom is None
                          else plan.with_tile(get_plan(geom)))
         return out
@@ -242,15 +283,39 @@ class SDEngine:
         geometry in ``batches`` — the serving warm-up behind
         ``serve_gen --pretune``.  Runs the real presplit hot path
         (:func:`repro.sd.execute`) per candidate, so it needs bound
-        plans.  Tile plans only steer the fused backend; on xla this is
-        a no-op.  Returns ``{geom key: winning KernelPlan}``."""
+        plans.  Tile plans only steer the Pallas backends (fused /
+        winograd); on xla this is a no-op.
+
+        A float ``"fused"`` engine additionally tunes the **Winograd
+        variant** of every supported layer geometry (the bound oc-major
+        split filters pass through the offline ``G g G^T`` transform
+        here, nothing is re-split) — populating both ``algo`` cache
+        keys is what arms :func:`autotune.best_algo`, and the engine
+        re-binds afterwards so layers where the fast algorithm measured
+        faster switch to winograd plans immediately.  Returns
+        ``{geom key: winning KernelPlan}``."""
         tuned: Dict[str, Any] = {}
-        if self.backend != "fused":
+        if self.backend not in ("fused", "winograd"):
             return tuned
         if not self._plans:
             raise ValueError("pretune() needs bound plans; bind() first")
+        from repro.kernels.winograd import supported, transform_filters
         layers = {l.name: l for l in self.spec.layers
                   if l.kind == "deconv"}
+
+        def tune_variant(plan, layer, b, x):
+            algo = "wino" if plan.backend == "winograd" else ""
+            geom = self.layer_geom(layer, b, algo=algo)
+
+            def runner(tile, _x=x, _plan=plan):
+                p2 = _plan.with_tile(tile)
+                fn = jax.jit(sd_functional.execute)
+                return autotune.measure(
+                    lambda: jax.block_until_ready(fn(p2, _x)),
+                    iters=iters)
+
+            tuned[geom.key()] = autotune.tune(geom, runner, path=path)
+
         for name, plan in self._plans.items():
             layer = layers[name]
             if self.layer_geom(layer) is None:
@@ -260,19 +325,20 @@ class SDEngine:
             dtype = (plan.ws.dtype
                      if plan.ws is not None and plan.dtype != "int8"
                      else jnp.float32)
+            variants = [plan]
+            if (self.backend == "fused" and plan.backend == "fused"
+                    and plan.dtype != "int8" and supported(plan.kt)):
+                variants.append(dataclasses_replace(
+                    plan, backend="winograd", layout="wino",
+                    ws=transform_filters(plan.ws)))
             for b in sorted({int(x) for x in batches}):
-                geom = self.layer_geom(layer, b)
                 x = jnp.zeros((b, *layer.in_hw, layer.cin), dtype)
-
-                def runner(tile, _x=x, _plan=plan):
-                    p2 = _plan.with_tile(tile)
-                    fn = jax.jit(sd_functional.execute)
-                    return autotune.measure(
-                        lambda: jax.block_until_ready(fn(p2, _x)),
-                        iters=iters)
-
-                tuned[geom.key()] = autotune.tune(geom, runner,
-                                                  path=path)
+                for v in variants:
+                    tune_variant(v, layer, b, x)
+        if self.backend == "fused" and self._bound is not None:
+            # Re-resolve per-layer algorithms against the fresh
+            # measurements (bind is cheap next to the tuning sweep).
+            self.bind(self._bound)
         return tuned
 
     # ---- hot path --------------------------------------------------------
@@ -296,5 +362,6 @@ class SDEngine:
                     if plan.tile is not None else "tile=call-time")
             lines.append(
                 f"  {name}: rank={plan.rank} K={plan.kernel[0]} "
-                f"s={plan.s} KT={kt} act={plan.act} {tile}")
+                f"s={plan.s} KT={kt} act={plan.act} "
+                f"backend={plan.backend} {tile}")
         return "\n".join(lines)

@@ -121,6 +121,12 @@ class ConvGeom:
     # (the int32 accumulator and f32 output stay 4-byte), so tile
     # candidates ~4x larger on the operand side become legal.
     dtype: str = ""
+    # Compute algorithm of the launch ("" = direct MXU conv, the
+    # historical default — existing cache keys are unchanged; "wino" =
+    # the Winograd transformed-domain kernel).  Algorithms key
+    # separately (their best tiles differ: the Winograd accumulator is
+    # alpha^2/m^2 times larger per row) and change the footprint model.
+    algo: str = ""
 
     def key(self) -> str:
         base = (f"b{self.b}_h{self.h}w{self.w}_ci{self.cin}"
@@ -129,6 +135,8 @@ class ConvGeom:
             base += f"_ktw{self.ktw or self.kt}_sw{self.sw or self.s}"
         if self.dtype:
             base += f"_{self.dtype}"
+        if self.algo:
+            base += f"_{self.algo}"
         if self.tag:
             base += f"_{self.tag}"
         return base
@@ -252,25 +260,46 @@ def vmem_plan_bytes(geom: ConvGeom, plan: KernelPlan) -> int:
     itemsize (1 byte for int8 — 4x smaller tiles-side footprint, which
     is what legalises larger (th, tw, tcin, tcout) candidates), while
     the accumulator (int32 for int8, f32 otherwise) and the dequantized
-    output tile are always 4-byte."""
+    output tile are always 4-byte.
+
+    Algorithm-aware: a ``"wino"`` launch rounds the conv rows up to
+    whole ``m``-tiles, holds the ``alpha``-per-dim transformed filter
+    block and an ``alpha^2 x ntiles`` transformed-domain accumulator
+    (``alpha^2/m^2`` times the direct accumulator rows), plus the f32
+    ``V`` scratch of the same tile count — that is exactly why
+    Winograd plans key separately from direct plans."""
     kt, ktw = geom.kt, geom.ktw or geom.kt
     s, sw = geom.s, geom.sw or geom.s
     phases = s * sw
     th = plan.th
     tw = plan.tw or geom.ow
+    isz = geom.operand_itemsize
+    if geom.algo == "wino":
+        mh, mw = (1 if kt == 1 else 2), (1 if ktw == 1 else 2)
+        ah, aw = mh + kt - 1, mw + ktw - 1
+        nth = -(-(th + 1) // mh)
+        ntw = -(-(tw + 1) // mw)
+        band = (nth * mh + kt - 1) * (ntw * mw + ktw - 1) * plan.tcin
+        filt = ah * aw * plan.tcin * plan.tcout * phases
+        acc = ah * aw * nth * ntw * plan.tcout * phases
+        vtmp = ah * aw * nth * ntw * plan.tcin
+        out = th * s * tw * sw * plan.tcout
+        return isz * (band + filt) + 4 * (acc + vtmp + out)
     band = (th + 1 + kt - 1) * (tw + 1 + ktw - 1) * plan.tcin
     filt = kt * ktw * plan.tcin * plan.tcout * phases
     acc = (th + 1) * (tw + 1) * plan.tcout * phases
     out = th * s * tw * sw * plan.tcout
-    isz = geom.operand_itemsize
     return isz * (band + filt) + 4 * (acc + out)
 
 
 def _fits_budget(geom: ConvGeom, plan: KernelPlan) -> bool:
-    kt_area = geom.kt * (geom.ktw or geom.kt)
+    kt, ktw = geom.kt, geom.ktw or geom.kt
+    if geom.algo == "wino":             # transformed taps: alpha per dim
+        kt, ktw = (kt + (0 if kt == 1 else 1),
+                   ktw + (0 if ktw == 1 else 1))
     phases = geom.s * (geom.sw or geom.s)
     return (vmem_plan_bytes(geom, plan) <= VMEM_BUDGET
-            and kt_area * plan.tcin * plan.tcout * phases
+            and kt * ktw * plan.tcin * plan.tcout * phases
             * geom.operand_itemsize <= _FILTER_BUDGET)
 
 
@@ -516,3 +545,31 @@ def tune(geom: ConvGeom,
                   "source": "measured", "backend": jax.default_backend()}
     save_cache(plans, path)
     return best_plan
+
+
+def measured_ms(geom: ConvGeom,
+                path: Optional[str] = None) -> Optional[float]:
+    """The cached measured wall-clock (ms) of ``geom``'s winning plan on
+    the *current* backend, or None — the raw signal behind
+    :func:`best_algo`."""
+    entry = load_cache(path).get(geom.key())
+    if (entry is not None and entry.get("source") == "measured"
+            and entry.get("backend") == jax.default_backend()
+            and entry.get("ms") is not None):
+        return float(entry["ms"])
+    return None
+
+
+def best_algo(geom: ConvGeom, path: Optional[str] = None) -> str:
+    """Measured-cost algorithm selection for one forward geometry:
+    ``"wino"`` iff BOTH the direct (``algo=""``) and the Winograd
+    (``algo="wino"``) variants of ``geom`` have measured entries on the
+    current backend and the Winograd one is faster; ``""`` (direct)
+    otherwise.  Untuned geometries never silently switch algorithm —
+    the default is the exact direct kernel, and ``tune()`` runs per
+    algo key (``engine.pretune`` / ``kernel_bench`` populate both)."""
+    direct = measured_ms(dataclasses_replace(geom, algo=""), path)
+    wino = measured_ms(dataclasses_replace(geom, algo="wino"), path)
+    if direct is not None and wino is not None and wino < direct:
+        return "wino"
+    return ""

@@ -33,6 +33,7 @@ from repro.core.deconv import (_check_output_padding, _check_padding,
                                sd_geometry, split_filters)
 from . import autotune
 from . import sd_conv as _k
+from . import winograd as _wk
 from .autotune import ConvGeom, KernelPlan
 
 PadPair = Tuple[int, int]
@@ -250,6 +251,93 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
     elif act == "tanh":
         out = jnp.tanh(out)
     return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Winograd fast-algorithm path (F(2,r) on the stride-1 subfilters)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("kt", "s", "act", "th", "tw", "tcin",
+                                    "tcout", "pad", "crop", "out_space"))
+def _sd_wino_jit(x: jax.Array, u: jax.Array, kt, s,
+                 bias: jax.Array | None, act: str, th: int, tw: int,
+                 tcin: int, tcout: int, pad, crop,
+                 out_space) -> jax.Array:
+    return _wk.sd_wino_pallas(x, u, kt, s, bias=bias, act=act,
+                              th=th, tw=tw, tcin=tcin, tcout=tcout,
+                              pad=pad, crop=crop, out_space=out_space,
+                              interpret=not _on_tpu())
+
+
+def sd_deconv_presplit_wino(x: jax.Array, u: jax.Array,
+                            kernel, stride, padding=0, *,
+                            output_padding=0,
+                            bias: jax.Array | None = None,
+                            act: str = "linear",
+                            plan: KernelPlan | None = None) -> jax.Array:
+    """2-D transposed conv from *pre-transformed* Winograd filters via
+    the fused fast-algorithm Pallas kernel.
+
+    ``u`` is the oc-major split filter stack already passed through the
+    F(2,r) filter transform (``plan.bind`` on a winograd plan, or
+    :func:`repro.kernels.winograd.transform_filters`): shape
+    ``(alpha_h, alpha_w, Cin, Cout*prod(s))``.  Same zero-copy contract
+    as :func:`sd_deconv_presplit_fused` — the ``P_I`` pad is masked halo
+    reads, the ``P_K`` + user crop and the inverse output transform are
+    folded into the epilogue together with bias/act/interleave.  Float
+    only (no int8 path); the autotune plan cache keys these launches
+    under ``algo="wino"`` so direct and Winograd tiles never collide.
+    """
+    s = _ntuple(stride, 2)
+    op = _ntuple(output_padding, 2)
+    kh, kw = kernel
+    _check_padding((kh, kw), padding)
+    _check_output_padding(op, s)
+    pads = _pads(padding)
+    (kth, ktw), pk, (pih, piw) = sd_geometry((kh, kw), s)
+    out_space = deconv_output_shape(x.shape[1:3], (kh, kw), s, padding,
+                                    output_padding)
+    sarg = s[0] if s[0] == s[1] else s
+    b, h, wd, cin = x.shape
+    cout = u.shape[-1] // (s[0] * s[1])
+    if any(o == 0 for o in out_space):
+        return jnp.zeros((b, *out_space, cout), x.dtype)
+    crop = tuple(pki + lo for pki, (lo, _) in zip(pk, pads))
+    rplan = plan if plan is not None else _resolve_plan(
+        ConvGeom(b, h + 2 * pih, wd + 2 * piw, cin, cout, kth, s[0],
+                 ktw=0 if ktw == kth else ktw,
+                 sw=0 if s[1] == s[0] else s[1],
+                 out_h=out_space[0], out_w=out_space[1],
+                 crop_h=crop[0], crop_w=crop[1], algo="wino"),
+        None, None, None)
+    return _sd_wino_jit(x, u, (kth, ktw), sarg, bias, act, rplan.th,
+                        rplan.tw, rplan.tcin, rplan.tcout,
+                        ((pih, pih), (piw, piw)), crop,
+                        tuple(out_space))
+
+
+def sd_deconv_presplit_wino_1d(x: jax.Array, u: jax.Array,
+                               kernel, stride, padding=0, *,
+                               output_padding=0,
+                               bias: jax.Array | None = None,
+                               act: str = "linear",
+                               plan: KernelPlan | None = None
+                               ) -> jax.Array:
+    """1-D Winograd SD, lowered as H=1 2-D (mirrors
+    :func:`sd_deconv_presplit_fused_1d`): x (B, L, Cin), u the
+    transformed filters ``(alpha, Cin, Cout*s)`` — the unit H axis gets
+    the degenerate F(1,1) transform (alpha_h = 1), so no MACs are
+    wasted on it."""
+    (k,) = _ntuple(kernel, 1)
+    (s,) = _ntuple(stride, 1)
+    ((lo, hi),) = _pads_nd(padding, 1)
+    (op,) = _ntuple(output_padding, 1)
+    y = sd_deconv_presplit_wino(
+        x[:, None], u[None], (1, k), (1, s),
+        ((0, 0), (lo, hi)), output_padding=(0, op), bias=bias, act=act,
+        plan=plan)
+    return y[:, 0]
 
 
 # ---------------------------------------------------------------------------

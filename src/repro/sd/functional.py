@@ -41,7 +41,28 @@ def _run_presplit(plan: DeconvPlan, x: jax.Array, ws: jax.Array,
     lowers as H=1 2-D; the P_I pad and P_K/user crop live inside the
     kernel, so this path touches HBM once per tensor), the depth-folded
     Pallas + grouped-XLA interleave for rank 3, and the grouped-XLA
-    conv + pixel-shuffle for the xla backend."""
+    conv + pixel-shuffle for the xla backend.  The winograd backend
+    runs the F(2,r) fast-algorithm Pallas kernel: a bound plan
+    (layout "wino") carries the G g G^T-transformed filters from
+    ``plan.bind``; the in-trace (conv_transpose) form transforms the
+    freshly split filters here — pure layout + matmul ops, so the
+    custom_vjp backward is untouched."""
+    if plan.backend == "winograd":
+        from repro.kernels import ops                 # lazy: pulls Pallas
+        from repro.kernels.winograd import transform_filters
+        if layout != "wino":
+            u = transform_filters(to_ocmajor(ws, plan.stride))
+        else:
+            u = ws
+        if plan.rank == 1:
+            return ops.sd_deconv_presplit_wino_1d(
+                x, u, plan.kernel, plan.stride, plan.padding,
+                output_padding=plan.output_padding, bias=bias, act=act,
+                plan=plan.tile)
+        return ops.sd_deconv_presplit_wino(
+            x, u, plan.kernel, plan.stride, plan.padding,
+            output_padding=plan.output_padding, bias=bias, act=act,
+            plan=plan.tile)
     if plan.backend == "fused":
         from repro.kernels import ops                 # lazy: pulls Pallas
         if plan.rank == 3:

@@ -37,8 +37,8 @@ from repro.core.deconv import (_check_output_padding, _check_padding,
                                sd_geometry, split_filters, unsplit_filters)
 from repro.kernels.autotune import KernelPlan
 
-BACKENDS = ("fused", "xla")
-LAYOUTS = ("nmajor", "ocmajor")
+BACKENDS = ("fused", "xla", "winograd")
+LAYOUTS = ("nmajor", "ocmajor", "wino")
 
 # Execution strategy of the "fused" backend per spatial rank: ranks 1-2
 # run the fused Pallas kernel directly (1-D lowers as an H=1 2-D call);
@@ -49,8 +49,11 @@ LAYOUTS = ("nmajor", "ocmajor")
 
 
 def resolve_backend(backend: str) -> str:
-    """'fused' = the Pallas kernel (interpret mode off-TPU); 'xla' = the
-    grouped stride-1 conv + pixel-shuffle; 'auto' picks per jax backend."""
+    """'fused' = the direct Pallas kernel (interpret mode off-TPU);
+    'winograd' = the fast-algorithm Pallas kernel (F(2,r) minimal
+    filtering on the stride-1 subfilters, ranks 1-2, taps <= 5, float
+    only); 'xla' = the grouped stride-1 conv + pixel-shuffle; 'auto'
+    picks per jax backend."""
     if backend == "auto":
         return "fused" if jax.default_backend() == "tpu" else "xla"
     if backend not in BACKENDS:
@@ -169,6 +172,8 @@ class DeconvPlan:
         oc-major for the fused Pallas kernel (ranks 1-2); n-major for
         XLA and for the rank-3 fused lowering (its interleave is the
         XLA ``depth_to_space``)."""
+        if self.backend == "winograd":
+            return "wino"
         if self.backend == "fused" and self.rank <= 2:
             return "ocmajor"
         return "nmajor"
@@ -204,12 +209,18 @@ class DeconvPlan:
             from repro.core.quant import quantize_channelwise
             ws, wscale = quantize_channelwise(ws, axis=-1)
         layout = self._bound_layout()
-        if layout == "ocmajor":
+        if layout in ("ocmajor", "wino"):
             ws = to_ocmajor(ws, self.stride)
             if wscale is not None:
                 # n-major c = phase*Cout + oc  ->  oc-major oc*N + phase.
                 wscale = wscale.reshape(self.phases, self.cout)
                 wscale = wscale.T.reshape(-1)
+        if layout == "wino":
+            # The Winograd filter transform U = G g G^T, folded here so
+            # it runs once offline — exactly like the split + BN fold.
+            # ws becomes (alpha_h, alpha_w, Cin, Cout*N).
+            from repro.kernels.winograd import transform_filters
+            ws = transform_filters(ws)
         return replace(self, ws=ws, bias=bias, layout=layout,
                        wscale=wscale,
                        act=self.act if act is None else act)
@@ -262,9 +273,19 @@ def plan(filter_shape: Sequence[int], stride, padding=0,
     op = _ntuple(output_padding, rank)
     _check_padding(k, padding)
     _check_output_padding(op, st)
+    resolved = resolve_backend(backend)
+    if resolved == "winograd":
+        from repro.kernels.winograd import MAX_TAPS, supported
+        kt = sd_geometry(k, st)[0]
+        if not supported(kt, dtype):
+            raise ValueError(
+                f"winograd backend does not support this geometry: "
+                f"subfilter taps {kt} (rank {rank}, dtype {dtype!r}); "
+                f"requires rank <= 2, 1 <= taps <= {MAX_TAPS}, float "
+                f"dtype — use backend='fused' for this layer")
     return DeconvPlan(kernel=k, stride=st,
                       padding=_pads_nd(padding, rank), cin=cin, cout=cout,
-                      backend=resolve_backend(backend), act=act, tile=tile,
+                      backend=resolved, act=act, tile=tile,
                       output_padding=op, dtype=dtype)
 
 

@@ -331,7 +331,10 @@ def test_pretune_measures_and_persists(tmp_path, monkeypatch):
 
     eng_f = SDEngine(spec, backend="fused").bind(params)
     tuned = eng_f.pretune([1, 2], iters=1)
-    assert len(tuned) == 2                       # one per batch
+    # one per (batch, algo): kt=2 supports winograd, so pretune measures
+    # the direct AND the fast-algorithm variant of each batch geometry
+    assert len(tuned) == 4
+    assert sum(1 for k in tuned if k.endswith("_wino")) == 2
     import json as _json
     data = _json.loads(cache.read_text())
     for key, plan in tuned.items():

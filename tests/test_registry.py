@@ -45,8 +45,8 @@ def test_capability_schema_complete():
     assert set(caps) == set(registry.names())
     for name, c in caps.items():
         assert set(c) == {"trainable", "engine", "needs_presplit",
-                          "exact", "dtypes", "backends", "api", "ranks",
-                          "backends_by_rank"}, name
+                          "exact", "tolerance", "dtypes", "backends",
+                          "api", "ranks", "backends_by_rank"}, name
         assert c["api"] in ("fn", "functional"), name
         assert 2 in c["ranks"], name
         assert set(c["backends_by_rank"]) == set(c["ranks"]), name

@@ -417,13 +417,18 @@ def test_server_pretune_fused_persists(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_SD_PLAN_CACHE", str(cache))
     server = _server(max_batch=2, backend="fused")
     tuned = server.pretune(iters=1)
-    # 2 deconv layers x buckets {1, 2}
-    assert len(tuned) == 4
+    # 2 deconv layers x buckets {1, 2} x 2 algorithms (kt=3 supports
+    # winograd, so pretune measures the fast-algorithm variant too)
+    assert len(tuned) == 8
+    assert sum(1 for k in tuned if k.endswith("_wino")) == 4
     data = json.loads(cache.read_text())
     assert all(e["source"] == "measured" for e in data["plans"].values())
-    # serving now resolves the measured tiles for its buckets
+    # serving now resolves the measured tiles for its buckets — under
+    # the algo key matching whichever backend each layer bound to
+    # (pretune re-binds, so measured-faster layers may run winograd)
     _, plans = server._serving_args("g", 2)
     model, _ = server.model("g")
     for name, layer in ((l.name, l) for l in model.spec.deconv_layers()):
-        geom = model.engine.layer_geom(layer, 2)
+        algo = "wino" if plans[name].backend == "winograd" else ""
+        geom = model.engine.layer_geom(layer, 2, algo=algo)
         assert plans[name].tile == tuned[geom.key()]
