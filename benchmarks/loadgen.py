@@ -1,0 +1,385 @@
+"""Open-loop load generator for the generative serving stack.
+
+Closed-loop benchmarks (``serve_bench``) hand the server a ready batch
+and time the launch — they measure *compute*.  Real traffic is an open
+loop: requests arrive on their own Poisson clock whether or not the
+server is ready, so user-visible latency is queueing + compute, and the
+interesting regimes (bursts, saturation, deadline misses) only exist
+under open-loop arrivals.  This module generates that traffic and runs
+the SAME trace through both serving loops:
+
+* ``async`` — :class:`repro.serving.ContinuousScheduler` (continuous
+  batching, deadline admission control, shedding),
+* ``drain`` — the legacy :func:`repro.launch.batching.drain_groups`
+  policy wrapped in an open-loop harness: at each round the server
+  snapshots everything that has arrived, partitions it into per-net
+  groups, and runs them ALL to completion before admitting new
+  arrivals (exactly what ``GenServer.serve`` does to a queue — the
+  baseline the scheduler replaces).
+
+Per QPS level it reports p50/p95/p99 latency, goodput (on-time
+completions/s), shed rate and batch-occupancy histograms into
+``BENCH_load.json``, with a headline comparison: at the highest level
+where both loops still deliver their traffic (goodput ratio >= 0.95),
+continuous batching must beat the drain loop on p95 latency.
+
+QPS levels are specified as *utilisation* of the measured capacity
+(``capacity = max_batch / t(max-batch launch)``, calibrated per run),
+so the same invocation stresses a laptop CPU and a TPU pod at the same
+operating points.
+
+  PYTHONPATH=src python -m benchmarks.loadgen                  # full
+  PYTHONPATH=src python -m benchmarks.loadgen --smoke --seed 0 # CI
+  PYTHONPATH=src python -m benchmarks.loadgen --check          # gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.launch.batching import drain_groups
+from repro.launch.serve_gen import GenServer, reduced_specs
+from repro.serving import (ContinuousScheduler, ServeRequest,
+                           ServingMetrics, WallClock)
+
+OUT_JSON = "BENCH_load.json"
+NETS = ("dcgan", "sngan")
+UTIL_LEVELS = (0.25, 0.5, 0.85)
+DEADLINE_X = 8.0          # deadline = DEADLINE_X * max-batch launch time
+COMMON_GOODPUT = 0.95     # both loops deliver >= this ratio on time
+SMOKE_GOODPUT_MIN = 0.9   # ci.sh gate on the smoke run's async loop
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+def poisson_trace(nets, qps_per_net: float, n_per_net: int, seed: int,
+                  deadline_ms=None, latents=None):
+    """One merged open-loop trace: per net, ``n_per_net`` arrivals with
+    exponential inter-arrival times at ``qps_per_net`` (independent
+    streams — a mixed-net trace is just their superposition).  Times
+    are relative to t0=0; deadlines are relative to each arrival.
+    ``latents[net]`` supplies the model input (timing benchmarks reuse
+    one latent per net)."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for net in nets:
+        t = 0.0
+        for _ in range(n_per_net):
+            t += float(rng.exponential(1.0 / qps_per_net))
+            reqs.append(ServeRequest(
+                rid=0, net=net,
+                latent=None if latents is None else latents[net],
+                arrival_t=t,
+                deadline_t=(t + deadline_ms / 1e3
+                            if deadline_ms is not None else None)))
+    reqs.sort(key=lambda r: r.arrival_t)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def _shifted(trace, base: float):
+    """Fresh request objects with absolute times anchored at ``base``
+    (the original trace stays reusable across runs/loops)."""
+    out = []
+    for r in trace:
+        out.append(ServeRequest(
+            rid=r.rid, net=r.net, latent=r.latent,
+            arrival_t=base + r.arrival_t,
+            deadline_t=(base + r.deadline_t
+                        if r.deadline_t is not None else None),
+            priority=r.priority))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The two serving loops under open-loop arrivals
+# ---------------------------------------------------------------------------
+
+def run_async(server: GenServer, trace, max_skips: int = 4):
+    """The continuous-batching scheduler on an open-loop trace."""
+    clock = WallClock()
+    base = clock.now()
+    sched = ContinuousScheduler(server, clock=clock,
+                                max_skips=max_skips,
+                                collect_outputs=False)
+    for r in _shifted(trace, base):
+        sched.submit_request(r)
+    sched.run()
+    return sched.stats(wall_s=clock.now() - base)
+
+
+def run_drain(server: GenServer, trace):
+    """The legacy drain-the-group policy under the same open loop: all
+    arrived requests are partitioned and run to completion before the
+    queue is looked at again.  No deadlines, no shedding — late output
+    is produced anyway (and counted against goodput)."""
+    clock = WallClock()
+    base = clock.now()
+    pending = _shifted(trace, base)     # sorted by arrival
+    live = []
+    metrics = ServingMetrics()
+    i = 0
+    while i < len(pending) or live:
+        now = clock.now()
+        while i < len(pending) and pending[i].arrival_t <= now:
+            live.append(pending[i])
+            i += 1
+        if not live:
+            clock.sleep(max(0.0, pending[i].arrival_t - now))
+            continue
+        groups = drain_groups(live, lambda r: r.net, server.max_batch)
+        live = []
+        for group in groups:           # the drain: no re-polling inside
+            t0 = clock.now()
+            out = server.run_group(group[0].net,
+                                   [r.latent for r in group])
+            jax.block_until_ready(out)
+            done = clock.now()
+            metrics.record_launch(group[0].net,
+                                  server.bucket(len(group)),
+                                  len(group), (done - t0) * 1e3)
+            for r in group:
+                r.done_t = done
+                on_time = (r.deadline_t is None or done <= r.deadline_t)
+                metrics.record_served(r.rid, r.net, done - r.arrival_t,
+                                      on_time)
+    return metrics.summary(wall_s=clock.now() - base)
+
+
+# ---------------------------------------------------------------------------
+# Calibration + sweep
+# ---------------------------------------------------------------------------
+
+def calibrate(server: GenServer, nets):
+    """Warm every compiled cell, then measure the max-batch launch per
+    net: capacity (requests/s at full buckets) anchors the QPS levels,
+    and the launch time anchors the deadline."""
+    server.warmup(list(nets))
+    cal = {}
+    for net in nets:
+        model, _ = server.model(net)
+        z = [np.zeros(model.input_shape(1)[1:], np.float32)
+             ] * server.max_batch
+        clock = WallClock()
+        best = float("inf")
+        for _ in range(3):
+            t0 = clock.now()
+            jax.block_until_ready(server.run_group(net, z))
+            best = min(best, clock.now() - t0)
+        cal[net] = {"bucket_ms": round(best * 1e3, 3),
+                    "capacity_rps": round(server.max_batch / best, 2)}
+    return cal
+
+
+def _median_run(runs):
+    """The run whose p95 is the median of the repeats — a self-
+    consistent record (its served/shed/occupancy belong together),
+    robust to the one-off burst a single short open-loop trace on a
+    shared host is exposed to."""
+    keyed = sorted(runs, key=lambda s: (s["latency_ms"]["p95"] is None,
+                                        s["latency_ms"]["p95"]))
+    return keyed[(len(keyed) - 1) // 2]
+
+
+def sweep(nets=NETS, utils=UTIL_LEVELS, n_per_net: int = 32,
+          max_batch: int = 16, seed: int = 0, deadline_x=DEADLINE_X,
+          deadline_min_ms: float = 100.0, qps_max=None, repeats: int = 3,
+          specs=None, out=OUT_JSON, report=None, qps_override=None):
+    server = GenServer(nets=list(nets), max_batch=max_batch,
+                       specs=specs, seed=seed)
+    cal = calibrate(server, nets)
+    # One shared capacity scale for the mixed trace: the bottleneck net
+    # (per-net QPS rides on it, so every net sees the same utilisation
+    # of the slowest member's capacity — conservative, stable).
+    cap = min(c["capacity_rps"] for c in cal.values())
+    bucket_ms = max(c["bucket_ms"] for c in cal.values())
+    # The deadline floor keeps tiny reduced-spec runs honest: with
+    # sub-ms launches, a pure multiple of the launch time would gate on
+    # Python event-loop overhead rather than scheduling behaviour (no
+    # real SLA sits below ~100 ms either).
+    deadline_ms = round(max(deadline_x * bucket_ms, deadline_min_ms), 3)
+    latents = {}
+    rng = np.random.RandomState(seed + 1)
+    for net in nets:
+        model, _ = server.model(net)
+        latents[net] = np.asarray(
+            rng.randn(*model.input_shape(1)[1:]), np.float32)
+
+    results = {
+        "jax_backend": jax.default_backend(), "seed": seed,
+        "nets": list(nets), "max_batch": server.max_batch,
+        "n_per_net": n_per_net, "deadline_ms": deadline_ms,
+        "calibration": cal, "levels": [],
+    }
+    if report is not None:
+        report.section("Open-loop serving: continuous batching (async) "
+                       "vs legacy drain loop")
+        report.header(["util", "qps/net", "mode", "p50_ms", "p95_ms",
+                       "p99_ms", "goodput", "shed", "occupancy"])
+    for li, util in enumerate(utils):
+        qps = (qps_override[li] if qps_override is not None
+               else max(0.5, util * cap / len(nets)))
+        if qps_max is not None:
+            # Reduced-spec smokes cap the rate: past a few hundred QPS
+            # the per-decision Python cost (not the device) is what a
+            # CPU host saturates on, and that regime isn't what this
+            # benchmark studies.
+            qps = min(qps, qps_max)
+        trace = poisson_trace(nets, qps, n_per_net, seed + 10 + li,
+                              deadline_ms=deadline_ms, latents=latents)
+        level = {"util": util, "qps_per_net": round(qps, 3),
+                 "repeats": repeats}
+        level["drain"] = _median_run(
+            [run_drain(server, trace) for _ in range(repeats)])
+        level["async"] = _median_run(
+            [run_async(server, trace) for _ in range(repeats)])
+        a, d = level["async"], level["drain"]
+        level["p95_async_ms"] = a["latency_ms"]["p95"]
+        level["p95_drain_ms"] = d["latency_ms"]["p95"]
+        level["async_p95_better"] = (
+            a["latency_ms"]["p95"] is not None
+            and d["latency_ms"]["p95"] is not None
+            and a["latency_ms"]["p95"] <= d["latency_ms"]["p95"])
+        level["common_goodput"] = (
+            (a["goodput_ratio"] or 0) >= COMMON_GOODPUT
+            and (d["goodput_ratio"] or 0) >= COMMON_GOODPUT)
+        results["levels"].append(level)
+        for mode in ("async", "drain"):
+            s = level[mode]
+            line = [f"{util:.2f}", f"{qps:.1f}", mode,
+                    s["latency_ms"]["p50"], s["latency_ms"]["p95"],
+                    s["latency_ms"]["p99"], s["goodput_ratio"],
+                    s["shed"], s["mean_occupancy"]]
+            if report is not None:
+                report.row(line)
+            else:
+                print("  " + " | ".join(str(v) for v in line))
+
+    # Headline: the highest common-goodput level decides the p95 claim.
+    common = [i for i, lv in enumerate(results["levels"])
+              if lv["common_goodput"]]
+    hi = max(common) if common else None
+    results["headline"] = {
+        "highest_common_goodput_level": hi,
+        "async_beats_drain_p95": (
+            results["levels"][hi]["async_p95_better"]
+            if hi is not None else None),
+        "async_p95_ms": (results["levels"][hi]["p95_async_ms"]
+                         if hi is not None else None),
+        "drain_p95_ms": (results["levels"][hi]["p95_drain_ms"]
+                         if hi is not None else None),
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        msg = f"load sweep written to {out}"
+        if report is not None:
+            report.note(msg)
+        else:
+            print(msg)
+    if report is not None and hi is not None:
+        report.note(f"headline (util {utils[hi]}): async p95 "
+                    f"{results['headline']['async_p95_ms']}ms vs drain "
+                    f"{results['headline']['drain_p95_ms']}ms")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Hooks: benchmarks.run, CI smoke, committed-artifact gate
+# ---------------------------------------------------------------------------
+
+def run(report):
+    """benchmarks.run hook: reduced-spec smoke (2 levels, 8 req/net) so
+    the full driver stays fast; the standalone main sweeps the real
+    nets and writes BENCH_load.json."""
+    specs = {n: sp for n, sp in reduced_specs().items()
+             if n in ("dcgan-dryrun", "wavegan-dryrun")}
+    sweep(nets=sorted(specs), utils=(0.3, 0.6), n_per_net=8,
+          max_batch=4, qps_max=100.0, specs=specs, out=None,
+          report=report)
+
+
+def check(path=OUT_JSON):
+    """Gate on the committed artifact: every trace fully accounted for
+    (served + shed == submitted), >= 3 QPS levels for >= 2 nets, and
+    async beats drain on p95 at the highest common-goodput level."""
+    with open(path) as f:
+        data = json.load(f)
+    assert len(data["nets"]) >= 2, data["nets"]
+    assert len(data["levels"]) >= 3, "need >= 3 QPS levels"
+    n_total = data["n_per_net"] * len(data["nets"])
+    for lv in data["levels"]:
+        a, d = lv["async"], lv["drain"]
+        assert a["served"] + a["shed"] == n_total, \
+            f"async lost requests at util {lv['util']}: {a}"
+        assert d["served"] == n_total, \
+            f"drain lost requests at util {lv['util']}: {d}"
+    hl = data["headline"]
+    assert hl["highest_common_goodput_level"] is not None, \
+        "no QPS level had common goodput — trace too hot or too short"
+    assert hl["async_beats_drain_p95"], (
+        f"continuous batching lost on p95 at the highest common-"
+        f"goodput level: async {hl['async_p95_ms']}ms vs drain "
+        f"{hl['drain_p95_ms']}ms")
+    print(f"loadgen gate OK: async p95 {hl['async_p95_ms']}ms <= drain "
+          f"{hl['drain_p95_ms']}ms at level "
+          f"{hl['highest_common_goodput_level']}, "
+          f"{len(data['levels'])} levels x {len(data['nets'])} nets")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nets", default=",".join(NETS))
+    ap.add_argument("--utils", default=",".join(str(u)
+                                               for u in UTIL_LEVELS),
+                    help="QPS levels as fractions of measured capacity")
+    ap.add_argument("--qps", default=None,
+                    help="absolute per-net QPS list (overrides --utils)")
+    ap.add_argument("--n", type=int, default=32,
+                    help="requests per net per level")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-x", type=float, default=DEADLINE_X,
+                    help="deadline as a multiple of the max-batch "
+                         "launch time")
+    ap.add_argument("--out", default=OUT_JSON)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced specs, tiny trace (CI; gates async "
+                         f"goodput ratio >= {SMOKE_GOODPUT_MIN})")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the committed artifact and exit")
+    args = ap.parse_args(argv)
+    if args.check:
+        check(args.out)
+        return
+    utils = tuple(float(u) for u in args.utils.split(","))
+    qps_override = (tuple(float(q) for q in args.qps.split(","))
+                    if args.qps else None)
+    if args.smoke:
+        specs = {n: sp for n, sp in reduced_specs().items()
+                 if n in ("dcgan-dryrun", "wavegan-dryrun")}
+        res = sweep(nets=sorted(specs), utils=(0.3, 0.6), n_per_net=8,
+                    max_batch=4, seed=args.seed, qps_max=100.0,
+                    specs=specs, out=args.out,
+                    qps_override=qps_override)
+        worst = min((lv["async"]["goodput_ratio"] or 0)
+                    for lv in res["levels"])
+        assert worst >= SMOKE_GOODPUT_MIN, (
+            f"smoke goodput ratio {worst} < {SMOKE_GOODPUT_MIN}")
+        print(f"loadgen smoke OK: worst async goodput ratio {worst}")
+        return
+    sweep(nets=tuple(args.nets.split(",")), utils=utils, n_per_net=args.n,
+          max_batch=args.max_batch, seed=args.seed,
+          deadline_x=args.deadline_x, out=args.out,
+          qps_override=qps_override)
+
+
+if __name__ == "__main__":
+    main()

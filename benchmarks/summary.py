@@ -27,6 +27,7 @@ SUITE_FILES = {
     "train": "BENCH_train.json",
     "nd": "BENCH_nd.json",
     "quant": "BENCH_quant.json",
+    "load": "BENCH_load.json",
 }
 
 
@@ -164,12 +165,46 @@ def _quant_summary(data) -> dict:
     }
 
 
+def _load_summary(data) -> dict:
+    """Open-loop serving (benchmarks/loadgen.py): continuous batching
+    vs the legacy drain loop under Poisson arrivals with deadlines."""
+    levels = data.get("levels", [])
+    hl = data.get("headline", {})
+    n_total = (data.get("n_per_net") or 0) * len(data.get("nets", []))
+    accounted = bool(levels) and all(
+        lv.get("async", {}).get("served", 0)
+        + lv.get("async", {}).get("shed", 0) == n_total
+        and lv.get("drain", {}).get("served", 0) == n_total
+        for lv in levels)
+    shed_rates = [lv.get("async", {}).get("shed_rate")
+                  for lv in levels]
+    return {
+        "nets": len(data.get("nets", [])),
+        "qps_levels": len(levels),
+        "deadline_ms": data.get("deadline_ms"),
+        "async_p95_ms": hl.get("async_p95_ms"),
+        "drain_p95_ms": hl.get("drain_p95_ms"),
+        "async_beats_drain_p95": hl.get("async_beats_drain_p95"),
+        "highest_common_goodput_level":
+            hl.get("highest_common_goodput_level"),
+        "async_shed_rate_max": max(
+            (s for s in shed_rates if s is not None), default=None),
+        # the aggregate gate reads parity_all: for the serving suite it
+        # means no request was lost (served + shed == submitted on every
+        # level, both loops) AND continuous batching won the headline
+        # p95 comparison at the highest common-goodput level.
+        "parity_all": bool(accounted
+                           and hl.get("async_beats_drain_p95")),
+    }
+
+
 _DISTILL = {
     "kernels": _kernels_summary,
     "serve": _serve_summary,
     "train": _train_summary,
     "nd": _nd_summary,
     "quant": _quant_summary,
+    "load": _load_summary,
 }
 
 

@@ -34,6 +34,14 @@ echo "== generative serving smoke (serve_gen --dryrun: 2-D/1-D/3-D/seg; "
 echo "   --pretune warms the (net, bucket) plan cache, no-op on xla) =="
 python -m repro.launch.serve_gen --dryrun --pretune
 
+echo "== open-loop serving smoke (loadgen: Poisson arrivals, deadlines, "
+echo "   async-vs-drain on reduced specs; gates async goodput >= 0.9) =="
+python -m benchmarks.loadgen --smoke --seed 0 --out /tmp/BENCH_load_smoke.json
+
+echo "== open-loop serving gate: committed BENCH_load.json (no request "
+echo "   lost, >= 3 QPS levels, async beats drain on p95) =="
+python -m benchmarks.loadgen --check
+
 echo "== int8 serving smoke (quantized engines end to end) =="
 python -m repro.launch.serve_gen --dryrun --dtype int8
 

@@ -341,6 +341,33 @@ class SDEngine:
             self.bind(self._bound)
         return tuned
 
+    # ---- service-time model ---------------------------------------------
+    def estimate_ms(self, batch: int) -> Optional[float]:
+        """Estimated wall-clock (ms) of one forward pass at ``batch``,
+        summed from the autotuner's *measured* per-layer plan entries
+        for this engine's launch geometries (``pretune``/``kernel_bench``
+        populate them) — the cold-start seed for the serving
+        scheduler's admission control.  Honest about ignorance: None
+        unless **every** deconv layer has a measured entry on the
+        current backend (rank 1/3 layers resolve tiles at call time
+        and carry no measured entries), and a floor by construction —
+        fc/conv layers and dispatch overhead are not modelled.  The
+        scheduler's observed-launch EWMA takes over from the first real
+        launch."""
+        total = 0.0
+        for name, plan in self._plans.items():
+            layer = next(l for l in self.spec.layers if l.name == name)
+            geom = self.layer_geom(
+                layer, batch,
+                algo="wino" if plan.backend == "winograd" else "")
+            if geom is None:
+                return None
+            ms = autotune.measured_ms(geom)
+            if ms is None:
+                return None
+            total += ms
+        return total
+
     # ---- hot path --------------------------------------------------------
     def run(self, name: str, x: jax.Array) -> jax.Array:
         """Deconv + folded BN + activation for layer ``name`` from the

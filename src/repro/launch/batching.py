@@ -14,7 +14,7 @@ Two servers use these helpers:
 
 from __future__ import annotations
 
-from typing import Callable, List, Sequence, Tuple, TypeVar
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, TypeVar
 
 T = TypeVar("T")
 
@@ -52,21 +52,54 @@ def pow2_bucket(n: int, max_bucket: int | None = None) -> int:
 
 
 def take_group(queue: List[T], key_fn: Callable[[T], object],
-               max_group: int) -> Tuple[List[T], List[T]]:
+               max_group: int,
+               skip_counts: Optional[Dict[object, int]] = None,
+               max_skips: int = 0) -> Tuple[List[T], List[T]]:
     """Pop the next compatible group from a FIFO queue.
 
     Takes the queue head, then up to ``max_group - 1`` further items
     with the *same key* (preserving order), leaving everything else
-    queued.  Head-of-line requests are never starved: the group is
-    always built around the oldest waiting item.
+    queued.
+
+    **Starvation-bounded full-bucket preference** (``max_skips > 0``,
+    ``skip_counts`` a caller-held ``{key: times bypassed}`` dict): a
+    head whose group cannot fill its bucket no longer blocks a
+    *different* key that already has a full bucket waiting — the full
+    bucket launches first and the head's bypass count is incremented.
+    The bound is hard: once a key has been bypassed ``max_skips``
+    times, its group goes next regardless of what else is queued (the
+    count resets when it is served), so every take either serves the
+    current head or spends one of its finitely many bypasses.  With the
+    default ``max_skips=0`` the legacy strict head-of-line behaviour is
+    unchanged — the group is always built around the oldest waiting
+    item.
     """
     if not queue:
         return [], []
-    key = key_fn(queue[0])
+    head_key = key_fn(queue[0])
+    take_key = head_key
+    if max_skips > 0 and skip_counts is not None \
+            and skip_counts.get(head_key, 0) < max_skips:
+        counts: Dict[object, int] = {}
+        for item in queue:
+            k = key_fn(item)
+            counts[k] = counts.get(k, 0) + 1
+        if counts[head_key] < max_group:
+            # first key, in order of its oldest waiting item, with a
+            # full bucket ready (the head's own key was just ruled out)
+            for item in queue:
+                k = key_fn(item)
+                if k != head_key and counts[k] >= max_group:
+                    take_key = k
+                    skip_counts[head_key] = \
+                        skip_counts.get(head_key, 0) + 1
+                    break
+    if skip_counts is not None and take_key == head_key:
+        skip_counts.pop(head_key, None)          # served: bound resets
     group: List[T] = []
     rest: List[T] = []
     for item in queue:
-        if len(group) < max_group and key_fn(item) == key:
+        if len(group) < max_group and key_fn(item) == take_key:
             group.append(item)
         else:
             rest.append(item)

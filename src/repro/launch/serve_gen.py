@@ -22,8 +22,15 @@ single-sample generator calls waste the accelerator, so the server
   (net, bucket, layer) geometry at server start — bind-time
   ``plan_batch=1`` tiles no longer leak into batch-16 launches.
 
+Two serving loops share this machinery: the **async continuous-batching
+scheduler** (:mod:`repro.serving`, the default — re-forms a bucket at
+every launch boundary, honours ``--deadline-ms`` with admission
+control, supports live checkpoint hot-swap) and the **legacy drain
+loop** (:meth:`GenServer.serve`, ``--sched drain`` — kept as the
+closed-loop baseline ``benchmarks/loadgen.py`` measures against).
+
   PYTHONPATH=src python -m repro.launch.serve_gen --nets dcgan,sngan \
-      --requests 32 --max-batch 16
+      --requests 32 --max-batch 16 --deadline-ms 500
   PYTHONPATH=src python -m repro.launch.serve_gen --dryrun   # CI smoke
 """
 
@@ -203,6 +210,25 @@ class GenServer:
             tuned.update(model.engine.pretune(buckets, iters=iters))
         return tuned
 
+    def warmup(self, nets: Optional[List[str]] = None) -> int:
+        """Compile every ``(net, bucket, dtype)`` cell of the bucket
+        ladder up front (one tiny launch per cell), so live traffic
+        never pays a trace inside a request's latency — the serving
+        analogue of ``--pretune`` for the jit cache.  Returns the
+        number of cells compiled.  After warmup the compiled-shape set
+        is closed: the async scheduler asserts no launch ever retraces
+        an existing cell."""
+        before = self.compile_count
+        for net in (nets if nets is not None else list(self._specs)):
+            model, _ = self.model(net)
+            shape = model.input_shape(1)[1:]
+            for b in self.buckets():
+                z = jnp.zeros((b, *shape), self.dtype)
+                lean, plans = self._serving_args(net, b)
+                jax.block_until_ready(
+                    self.compiled(net, b)(lean, plans, z))
+        return self.compile_count - before
+
     def bucket(self, n: int) -> int:
         b = pow2_bucket(n, self.max_batch)
         if self.dp > 1:
@@ -241,6 +267,24 @@ class GenServer:
             self._compiled[key] = jax.jit(f)
         return self._compiled[key]
 
+    # ---- live checkpoint hot-swap ---------------------------------------
+    def swap_checkpoint(self, net: str, params) -> None:
+        """Rebind ``net`` to a new parameter set (live checkpoint
+        hot-swap).  The engine re-splits + BN-folds the new filters
+        (the once-per-checkpoint offline phase); every compiled
+        ``(net, bucket, dtype)`` executable is reused as-is, because
+        params and bound plans are jit *arguments*, not closures
+        (PR 3's rebind-without-recompile, wired end to end here).  The
+        per-bucket ``_serving`` snapshots invalidate themselves — they
+        are keyed on the live params object's identity.  Callers that
+        serve concurrently with swapping (the async scheduler) apply
+        this only at launch boundaries, so a single launch never mixes
+        weight sets."""
+        model, _ = self.model(net)
+        if model.engine is not None:
+            model.engine.bind(params)
+        self._models[net] = (model, params)
+
     # ---- serving ---------------------------------------------------------
     def run_group(self, net: str, latents: List[Any]):
         """Pad a same-net group to its bucket, run, crop the padding."""
@@ -255,7 +299,13 @@ class GenServer:
         return y[:n]
 
     def serve(self, requests: List[GenRequest]):
-        """FIFO batch serving: returns ({rid: output}, stats)."""
+        """LEGACY drain-the-group loop: partitions the whole queue into
+        per-net groups up front and runs them to completion — kept as
+        the closed-loop baseline the async scheduler is benchmarked
+        against (``benchmarks/loadgen.py``) and for batch-mode callers.
+        Live traffic should go through
+        :class:`repro.serving.ContinuousScheduler` (``--sched async``).
+        Returns ({rid: output}, stats)."""
         queue = list(requests)
         results: Dict[int, Any] = {}
         t0 = time.time()
@@ -286,6 +336,28 @@ class GenServer:
         return [GenRequest(rid=i, net=net, latent=z[i]) for i in range(n)]
 
 
+def serve_async(server: GenServer, requests: List[GenRequest],
+                deadline_ms: Optional[float] = None):
+    """Run ``requests`` through the continuous-batching scheduler
+    (:mod:`repro.serving`) — everything arrives at t0, deadlines are
+    relative to arrival.  Returns ({rid: output}, stats) in the same
+    shape as the legacy :meth:`GenServer.serve`."""
+    from repro.serving import ContinuousScheduler
+    sched = ContinuousScheduler(server)
+    t0 = sched.clock.now()
+    for r in requests:
+        sched.submit(r.net, r.latent, rid=r.rid, arrival_t=t0,
+                     deadline_ms=deadline_ms)
+    results = sched.run()
+    wall = sched.clock.now() - t0
+    stats = sched.stats(wall_s=wall)
+    stats["wall_s"] = wall
+    stats["requests"] = stats["served"]       # legacy stats key
+    stats["req_per_s"] = (stats["served"] / wall if wall
+                          else float("inf"))
+    return results, stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--nets", default="dcgan",
@@ -299,6 +371,14 @@ def main(argv=None):
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16", "int8"],
                     help="int8 = quantized engine plans (f32 IO)")
+    ap.add_argument("--sched", default="async",
+                    choices=["async", "drain"],
+                    help="async = continuous-batching scheduler "
+                         "(repro.serving); drain = legacy group loop")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (relative to arrival); "
+                         "the async scheduler sheds requests it cannot "
+                         "meet")
     ap.add_argument("--dryrun", action="store_true",
                     help="2 requests on a reduced arch (CI smoke)")
     ap.add_argument("--pretune", action="store_true",
@@ -318,6 +398,11 @@ def main(argv=None):
                             for l in sp.deconv_layers())}
         nets = sorted(specs)
         n_requests = 2
+        if args.deadline_ms is None:
+            # CI smokes the deadline machinery end to end (requests
+            # carry real deadlines through admission control), with a
+            # bound generous enough that a loaded CI box never sheds.
+            args.deadline_ms = 120_000.0
     else:
         nets = args.nets.split(",")
         specs = None
@@ -339,10 +424,23 @@ def main(argv=None):
             r.rid = len(requests)
             requests.append(r)
 
-    results, stats = server.serve(requests)
-    print(f"served {stats['requests']} requests in {stats['wall_s']:.2f}s "
-          f"({stats['req_per_s']:.1f} req/s, {stats['groups']} groups, "
-          f"{stats['compiles']} compiles)")
+    if args.sched == "async":
+        results, stats = serve_async(server, requests,
+                                     deadline_ms=args.deadline_ms)
+        print(f"served {stats['requests']} requests in "
+              f"{stats['wall_s']:.2f}s ({stats['req_per_s']:.1f} req/s, "
+              f"{stats['launches']} launches, {stats['compiles']} "
+              f"compiles, {stats['shed']} shed)")
+        lat = stats["latency_ms"]
+        print(f"  latency p50 {lat['p50']}ms p95 {lat['p95']}ms "
+              f"p99 {lat['p99']}ms; goodput "
+              f"{stats['goodput_rps']} req/s; mean occupancy "
+              f"{stats['mean_occupancy']}")
+    else:
+        results, stats = server.serve(requests)
+        print(f"served {stats['requests']} requests in "
+              f"{stats['wall_s']:.2f}s ({stats['req_per_s']:.1f} req/s, "
+              f"{stats['groups']} groups, {stats['compiles']} compiles)")
     for key in stats["compile_cache"]:
         print(f"  compiled cell: {key}")
     for rid in sorted(results)[:2]:
