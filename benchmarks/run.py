@@ -73,14 +73,15 @@ def main() -> None:
 
     from benchmarks import (commodity, kernel_bench, loadgen, nd_bench,
                             procmodel, quant_bench, roofline_report,
-                            sd_roofline, serve_bench, table4_ssim,
-                            tables123, train_bench)
+                            sd_roofline, serve_bench, shard_bench,
+                            table4_ssim, tables123, train_bench)
     mods = {"tables123": tables123, "table4_ssim": table4_ssim,
             "procmodel": procmodel, "commodity": commodity,
             "kernel_bench": kernel_bench, "sd_roofline": sd_roofline,
             "serve_bench": serve_bench, "train_bench": train_bench,
             "nd_bench": nd_bench, "quant_bench": quant_bench,
-            "loadgen": loadgen, "roofline_report": roofline_report}
+            "loadgen": loadgen, "shard_bench": shard_bench,
+            "roofline_report": roofline_report}
     wanted = (args.only.split(",") if args.only else list(mods))
     report = Report()
     t0 = time.time()

@@ -28,6 +28,7 @@ SUITE_FILES = {
     "nd": "BENCH_nd.json",
     "quant": "BENCH_quant.json",
     "load": "BENCH_load.json",
+    "shard": "BENCH_shard.json",
 }
 
 
@@ -198,6 +199,21 @@ def _load_summary(data) -> dict:
     }
 
 
+def _shard_summary(data) -> dict:
+    nets = data.get("nets", {})
+    parity = [bool(rec.get("parity_ok")) for rec in nets.values()]
+    speed = {name: rec.get("launch_speedup_mesh_vs_dp")
+             for name, rec in nets.items()}
+    return {
+        "nets": len(nets),
+        "devices": data.get("devices"),
+        "parity_all": bool(parity) and all(parity),
+        # best (data x model) config's single-request launch vs DP-only
+        "launch_speedup_mesh_vs_dp": speed,
+        "launch_speedup_geomean": _geomean(speed.values()),
+    }
+
+
 _DISTILL = {
     "kernels": _kernels_summary,
     "serve": _serve_summary,
@@ -205,6 +221,7 @@ _DISTILL = {
     "nd": _nd_summary,
     "quant": _quant_summary,
     "load": _load_summary,
+    "shard": _shard_summary,
 }
 
 

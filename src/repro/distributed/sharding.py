@@ -10,8 +10,17 @@ Logical axes:
   'batch'   -> (pod, data)   (all pure-DP axes)
   'tensor'  -> model          (TP: heads / ffn / vocab)
   'expert'  -> model          (EP, when cfg.moe_sharding == 'ep')
+  'channel' -> model          (Cout shards of the SD split filters —
+                               the generative stack's model parallelism;
+                               see repro.sd.DeconvPlan.bind(mesh=))
   'fsdp'    -> data           (param shards, ZeRO-3-style, optional)
   'seq'     -> data           (sequence parallelism for long-context)
+
+The generative half of the repo resolves its specs through the same
+machinery: :func:`gen_param_specs` maps a ``NetworkSpec``'s param tree
+to PartitionSpecs with each shardable deconv filter Cout-sharded over
+'channel' — the spec tree both the sharded train step
+(:mod:`repro.launch.train_gen`) and tests feed to ``shard_map``.
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ class MeshContext:
                 "batch": self.batch_axes,
                 "tensor": None,
                 "expert": "model" if "model" in names else None,
+                "channel": "model" if "model" in names else None,
                 "fsdp": tuple(a for a in ("data", "model") if a in names)
                 if fsdp else None,
             }
@@ -61,6 +71,7 @@ class MeshContext:
                 "batch": self.batch_axes,
                 "tensor": "model" if "model" in names else None,
                 "expert": "model" if "model" in names else None,
+                "channel": "model" if "model" in names else None,
                 "fsdp": "data" if (fsdp and "data" in names) else None,
             }
 
@@ -238,8 +249,34 @@ def param_shardings(params, mc: MeshContext, **kw):
 
 
 # ---------------------------------------------------------------------------
-# Cache + batch sharding
+# Generative (SD) parameter sharding — the (data x model) mesh's other half
 # ---------------------------------------------------------------------------
+
+def gen_param_specs(net_spec, mc: MeshContext):
+    """PartitionSpec tree for a generative net's params on ``mc``.
+
+    Each deconv layer whose ``cout`` divides the 'channel' (-> model)
+    axis size gets its filter Cout-sharded on the last axis — the same
+    slice :meth:`repro.sd.DeconvPlan.bind(mesh=)` places for serving,
+    so one layout serves and trains.  Everything else (fc weights,
+    biases, BN scales, narrow final layers) is replicated: the sharded
+    forward all-gathers each layer's output, so scale/bias apply to the
+    full-channel tensor and their grads are naturally replicated over
+    the model axis.  Returns ``{layer: {param: PartitionSpec}}``
+    matching :meth:`GenerativeModel.init`'s tree — feed to ``shard_map``
+    in/out_specs or :func:`param_shardings`-style placement.
+    """
+    n_channel = _axis_size(mc, "channel")
+    specs: Dict[str, Dict[str, P]] = {}
+    for layer in net_spec.layers:
+        entry = {"w": mc.spec(), "b": mc.spec()}
+        if layer.kind != "fc":
+            entry["scale"] = mc.spec()
+        if (layer.kind == "deconv" and n_channel > 1
+                and layer.cout % n_channel == 0):
+            entry["w"] = mc.spec(*(None,) * (layer.rank + 1), "channel")
+        specs[layer.name] = entry
+    return specs
 
 def _axis_size(mc: MeshContext, logical: str) -> int:
     n = 1

@@ -95,7 +95,9 @@ class SDEngine:
     """
 
     def __init__(self, spec: NetworkSpec, plan_batch: int = 1,
-                 backend: str = "fused", dtype: str = "native"):
+                 backend: str = "fused", dtype: str = "native",
+                 mesh=None, dp_axis: str = "data",
+                 mp_axis: str = "model"):
         from repro.sd.plan import DTYPES
         if dtype not in DTYPES:
             raise ValueError(f"unknown engine dtype {dtype!r}; "
@@ -104,9 +106,33 @@ class SDEngine:
         self.plan_batch = plan_batch     # batch used for plan-cache keys
         self.backend = resolve_backend(backend)
         self.dtype = dtype
+        # Mesh-aware engine: ``mesh`` (a (data, model) jax Mesh) makes
+        # bind() place each shardable layer's split filters Cout-sharded
+        # over ``mp_axis`` via NamedSharding, and makes every autotune
+        # geometry — hence tile keys AND estimate_ms — describe what one
+        # device actually launches: the per-device batch slice over
+        # ``dp_axis`` and the per-shard Cout slice over ``mp_axis``.
+        self.mesh = mesh
+        self.dp_axis, self.mp_axis = dp_axis, mp_axis
+        if mesh is not None:
+            self.dp = (int(mesh.shape[dp_axis])
+                       if dp_axis in mesh.axis_names else 1)
+            self.mp = (int(mesh.shape[mp_axis])
+                       if mp_axis in mesh.axis_names else 1)
+        else:
+            self.dp = self.mp = 1
         self._plans: Dict[str, DeconvPlan] = {}
         self._bound: Optional[Params] = None
         self._bound_leaves: Optional[tuple] = None
+
+    def _layer_shards(self, layer: LayerSpec) -> int:
+        """Cout shards this engine gives one layer: the mesh's model
+        degree when it divides the layer's output channels, else 1 —
+        narrow final layers (cout 3 or 1) replicate rather than forcing
+        the whole net off the mesh."""
+        if self.mp > 1 and layer.cout % self.mp == 0:
+            return self.mp
+        return 1
 
     def _plan_leaves(self, params: Params) -> Optional[tuple]:
         """The leaves the plans depend on, compared by *object identity*
@@ -194,9 +220,12 @@ class SDEngine:
                 continue
             p = params[layer.name]
             act = "linear" if i == len(layers) - 1 else "relu"
+            shards = self._layer_shards(layer)
             plans[layer.name] = self.layer_plan(layer, act).bind(
                 p["w"], scale=p.get("scale"),
-                bias=p["b"].astype(jnp.float32))
+                bias=p["b"].astype(jnp.float32),
+                mesh=self.mesh if shards > 1 else None,
+                axis=self.mp_axis)
         return plans
 
     def bind(self, params: Params) -> "SDEngine":
@@ -242,17 +271,30 @@ class SDEngine:
         lowered geometry.  Int8 engines tag the geometry, so their
         plans are keyed (and their VMEM footprint modelled) for 1-byte
         operands; ``algo="wino"`` tags the Winograd variant of the same
-        launch (separate cache key + transformed-tile footprint)."""
+        launch (separate cache key + transformed-tile footprint).
+
+        On a mesh engine the geometry is what ONE DEVICE launches:
+        ``batch`` is divided (ceil) over the data degree and ``cout``
+        over the layer's shard count, with ``shards`` tagged into the
+        key — so tiles, measurements and :meth:`estimate_ms` can never
+        be wrong by the parallelism factor, and an MP-measured entry
+        (which includes its all-gather) never steers a same-local-shape
+        unsharded layer."""
         if layer.rank != 2:
             return None
         pads = (same_deconv_pads(layer.k, layer.s)
                 if layer.padding == "same" else layer.pad)
         dtype = self.dtype if dtype is None else dtype
-        geom = ConvGeom.from_deconv(batch or self.plan_batch,
-                                    *layer.in_hw, layer.cin, layer.cout,
+        b = batch or self.plan_batch
+        b = max(1, -(-b // self.dp))
+        shards = self._layer_shards(layer)
+        geom = ConvGeom.from_deconv(b, *layer.in_hw, layer.cin,
+                                    layer.cout // shards,
                                     layer.k, layer.s, padding=pads,
                                     dtype="int8" if dtype == "int8"
                                     else "")
+        if shards > 1:
+            geom = dataclasses_replace(geom, shards=shards)
         return dataclasses_replace(geom, algo=algo) if algo else geom
 
     def plans_for_batch(self, batch: int) -> Dict[str, DeconvPlan]:
@@ -309,7 +351,14 @@ class SDEngine:
 
             def runner(tile, _x=x, _plan=plan):
                 p2 = _plan.with_tile(tile)
-                fn = jax.jit(sd_functional.execute)
+                if self.mesh is not None:
+                    # Sharded plans gather over a mesh axis: measure the
+                    # real SPMD launch (collective included) so the tile
+                    # that wins is the one serving actually runs.
+                    fn = jax.jit(lambda pp, xx: sd_functional.execute_spmd(
+                        pp, xx, self.mesh, dp_axis=self.dp_axis))
+                else:
+                    fn = jax.jit(sd_functional.execute)
                 return autotune.measure(
                     lambda: jax.block_until_ready(fn(p2, _x)),
                     iters=iters)
@@ -347,7 +396,11 @@ class SDEngine:
         summed from the autotuner's *measured* per-layer plan entries
         for this engine's launch geometries (``pretune``/``kernel_bench``
         populate them) — the cold-start seed for the serving
-        scheduler's admission control.  Honest about ignorance: None
+        scheduler's admission control.  ``batch`` is the *global*
+        launch bucket; on a mesh engine :meth:`layer_geom` keys the
+        lookup on what one device runs (per-device batch slice,
+        per-shard Cout, ``_mp`` suffix) — a DP=4 engine's estimate is
+        the batch/4 measurement, not the 4x-wrong global one.  Honest about ignorance: None
         unless **every** deconv layer has a measured entry on the
         current backend (rank 1/3 layers resolve tiles at call time
         and carry no measured entries), and a floor by construction —
@@ -379,16 +432,20 @@ class SDEngine:
         return dict(self._plans)
 
     def describe(self) -> str:
+        mesh = (f" mesh=dp{self.dp}xmp{self.mp}"
+                if self.mesh is not None else "")
         lines = [f"SDEngine[{self.spec.name}] backend={self.backend} "
-                 f"dtype={self.dtype} "
+                 f"dtype={self.dtype}{mesh} "
                  f"({len(self._plans)} deconv layers)"]
         for name, plan in self._plans.items():
             kt = -(-plan.kernel[0] // plan.s)
             tile = (f"tile=(th={plan.tile.th}, tw={plan.tile.tw}, "
                     f"tcin={plan.tile.tcin}, tcout={plan.tile.tcout})"
                     if plan.tile is not None else "tile=call-time")
+            sh = (f" shards={plan.shards}@{plan.shard_axis}"
+                  if plan.shards > 1 else "")
             lines.append(
                 f"  {name}: rank={plan.rank} K={plan.kernel[0]} "
                 f"s={plan.s} KT={kt} act={plan.act} "
-                f"backend={plan.backend} {tile}")
+                f"backend={plan.backend}{sh} {tile}")
         return "\n".join(lines)

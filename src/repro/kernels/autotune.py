@@ -127,6 +127,13 @@ class ConvGeom:
     # separately (their best tiles differ: the Winograd accumulator is
     # alpha^2/m^2 times larger per row) and change the footprint model.
     algo: str = ""
+    # Model-parallel degree of the launch (1 = unsharded, the historical
+    # default — keys unchanged).  A Cout-sharded plan launches with
+    # ``cout`` already divided by the shard count, but its measured time
+    # includes the epilogue all-gather, so an MP-measured entry must
+    # never steer a genuinely-small unsharded layer of the same local
+    # shape (or vice versa): shards > 1 keys separately.
+    shards: int = 1
 
     def key(self) -> str:
         base = (f"b{self.b}_h{self.h}w{self.w}_ci{self.cin}"
@@ -137,6 +144,8 @@ class ConvGeom:
             base += f"_{self.dtype}"
         if self.algo:
             base += f"_{self.algo}"
+        if self.shards > 1:
+            base += f"_mp{self.shards}"
         if self.tag:
             base += f"_{self.tag}"
         return base

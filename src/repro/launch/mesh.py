@@ -1,8 +1,11 @@
-"""Production mesh construction.
+"""Mesh construction — the one place jax version compat lives.
 
-Defined as functions (never module-level constants) so importing this
-module never touches jax device state — required because the dry-run
-must set XLA_FLAGS before the first jax initialisation.
+Every mesh in the repo (serving's (data, model) dev mesh, the sharded
+train step's, the production topology) comes from :func:`make_mesh`, so
+the ``AxisType`` compat shim exists exactly once.  Defined as functions
+(never module-level constants) so importing this module never touches
+jax device state — required because the dry-run must set XLA_FLAGS
+before the first jax initialisation.
 """
 
 from __future__ import annotations
@@ -10,9 +13,12 @@ from __future__ import annotations
 import jax
 
 
-def _make_mesh(shape, axes):
-    """jax.make_mesh across versions: axis_types (and AxisType) only
-    exist on newer jax; Auto is the default there anyway."""
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across versions: ``axis_types`` (and
+    ``AxisType``) only exist on newer jax; Auto is the default there
+    anyway.  ``shape`` entries must multiply to a divisor-compatible
+    device count — callers validate availability (e.g. serve_gen checks
+    ``dp * mp <= jax.device_count()``) before landing here."""
     if hasattr(jax.sharding, "AxisType"):
         return jax.make_mesh(
             shape, axes,
@@ -29,9 +35,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_dev_mesh(n_data: int = 1, n_model: int = 1):
-    """Small mesh for tests/examples on local devices."""
-    return _make_mesh((n_data, n_model), ("data", "model"))
+    """Small (data, model) mesh for serving/tests on local devices."""
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -13,9 +13,13 @@ single-sample generator calls waste the accelerator, so the server
   model — filters presplit + BN-folded exactly once at bind, nothing
   offline on the hot path — with the engine's execution backend chosen
   per jax backend (fused Pallas kernel on TPU, grouped-XLA elsewhere),
-* optionally shards the batch axis over a data-parallel device mesh
-  with ``shard_map`` (``--dp N``; reuses ``launch/mesh.make_dev_mesh``
-  and the 'data' axis the LM stack shards over),
+* optionally runs on a (data, model) device mesh
+  (``launch/mesh.make_dev_mesh``) under one ``shard_map`` per cell:
+  ``--dp N`` shards the batch axis over 'data', ``--mp N`` Cout-shards
+  each shardable deconv layer's split filters over 'model' (the
+  engine binds plans with ``NamedSharding`` placement; one all-gather
+  per sharded layer re-assembles the channel axis in the epilogue) —
+  DP adds request throughput, MP makes a *single* launch faster,
 * keys kernel tile plans to the *bucket* batch it launches
   (``engine.plans_for_batch``), and with ``--pretune`` measures and
   persists the winning ``(th, tw, tcin, tcout)`` tile for every
@@ -105,7 +109,7 @@ class GenServer:
 
     def __init__(self, nets=("dcgan",), dtype=jnp.float32,
                  backend: str = "auto", max_batch: int = 16, dp: int = 1,
-                 seed: int = 0,
+                 mp: int = 1, seed: int = 0,
                  specs: Optional[Dict[str, NetworkSpec]] = None):
         # dtype="int8" selects the quantized serving path: engines bind
         # int8 plans (per-channel weight quant at bind, per-sample
@@ -128,6 +132,7 @@ class GenServer:
         # used to leak non-pow2 bucket shapes into the compile cache).
         self.max_batch = pow2_floor(max(1, int(max_batch)))
         self.dp = int(dp)
+        self.mp = int(mp)
         self.seed = seed
         self._specs = dict(specs or {})
         for n in nets:
@@ -135,17 +140,22 @@ class GenServer:
                 self._specs[n] = WORKLOADS[n]()
         self._models: Dict[str, Tuple[GenerativeModel, Any]] = {}
         self._serving: Dict[str, Tuple[Any, Any, Any]] = {}
-        self._compiled: Dict[Tuple[str, int, str], Any] = {}
+        self._compiled: Dict[Tuple, Any] = {}
         self.compile_count = 0          # incremented at trace time
         self._mesh = None
-        if self.dp > 1:
-            if len(jax.devices()) < self.dp:
+        if self.dp > 1 or self.mp > 1:
+            need = self.dp * self.mp
+            if len(jax.devices()) < need:
                 raise ValueError(
-                    f"--dp {self.dp} needs {self.dp} devices, have "
-                    f"{len(jax.devices())} (set "
+                    f"--dp {self.dp} --mp {self.mp} needs {need} "
+                    f"devices, have {len(jax.devices())} (set "
                     "XLA_FLAGS=--xla_force_host_platform_device_count=N "
                     "to simulate on CPU)")
-            self._mesh = make_dev_mesh(self.dp, 1)
+            # (data, model) mesh: batches shard over 'data', each
+            # shardable deconv layer's Cout over 'model' (the engine
+            # binds plans with NamedSharding placement; narrow layers
+            # replicate, see SDEngine._layer_shards).
+            self._mesh = make_dev_mesh(self.dp, self.mp)
 
     # ---- model / compile caches -----------------------------------------
     def model(self, net: str) -> Tuple[GenerativeModel, Any]:
@@ -155,7 +165,8 @@ class GenServer:
             # head semantics ride on the spec (NetworkSpec.final_tanh)
             m = GenerativeModel(self._specs[net], deconv_impl="sd_kernel",
                                 engine_backend=self.backend,
-                                engine_dtype=self.engine_dtype)
+                                engine_dtype=self.engine_dtype,
+                                engine_mesh=self._mesh)
             params = m.init(jax.random.PRNGKey(self.seed),
                             dtype=self.dtype)
             self._models[net] = (m, params)
@@ -238,16 +249,49 @@ class GenServer:
             b = -(-max(b, self.dp) // self.dp) * self.dp
         return b
 
+    def cell_key(self, net: str, bucket: int) -> Tuple:
+        """Compile-cache key of one executable cell.  Mesh-less servers
+        keep the historical ``(net, bucket, dtype)`` key; on a mesh the
+        shape ``dpNxmpM`` is part of the key — the same (net, bucket)
+        compiled for a different mesh is a different executable, and
+        the scheduler's zero-recompile swap assertion checks *this* key
+        (via ``getattr``), so it stays honest under --dp/--mp."""
+        if self._mesh is None:
+            return (net, bucket, self.dtype_name)
+        return (net, bucket, self.dtype_name,
+                f"dp{self.dp}xmp{self.mp}")
+
+    def estimate_ms(self, net: str, bucket: int) -> Optional[float]:
+        """Cold-start service-time estimate for one (net, bucket) cell,
+        from the engine's measured per-layer plan entries.  The engine
+        keys lookups on what one device launches (per-device batch,
+        per-shard Cout, mesh degree), so the seed the scheduler's
+        admission control starts from is not wrong by the parallelism
+        factor."""
+        model, _ = self.model(net)
+        if model.engine is None:
+            return None
+        return model.engine.estimate_ms(bucket)
+
     def compiled(self, net: str, bucket: int):
-        """The jitted padded-batch executable for (net, bucket, dtype).
+        """The jitted padded-batch executable for one cell (see
+        :meth:`cell_key`).
 
         Since the ``repro.sd`` redesign the engine's bound plans are
         pytrees, so params AND plans are passed *through* jit as
         arguments (``GenerativeModel.apply_with_plans``) rather than
         closed over: rebinding weights (new checkpoint, dtype sweep)
         reuses the compiled executable — only shapes key the cache.
+
+        On a mesh the cell is one ``shard_map`` over the whole forward:
+        x/y batch-sharded over 'data', each bound plan's leaves carried
+        at its own ``shard_specs`` (ws/bias/wscale Cout-sharded over
+        'model' for sharded layers, replicated otherwise — the spec
+        tree mirrors the NamedSharding placement ``plan.bind(mesh=)``
+        already gave the arrays, so shard_map moves no filter bytes),
+        non-deconv params replicated.
         """
-        key = (net, bucket, self.dtype_name)
+        key = self.cell_key(net, bucket)
         if key not in self._compiled:
             model, _ = self.model(net)
 
@@ -258,11 +302,12 @@ class GenServer:
             if self._mesh is not None:
                 ndim = len(model.input_shape(bucket))
                 spec = P(*(("data",) + (None,) * (ndim - 1)))
+                _, plans = self._serving_args(net, bucket)
+                plan_specs = {name: p.shard_specs()
+                              for name, p in plans.items()}
                 from jax.experimental.shard_map import shard_map
-                # params/plans are replicated (P() prefix), the batch
-                # axis of x/y is sharded over the 'data' mesh axis
                 f = shard_map(f, mesh=self._mesh,
-                              in_specs=(P(), P(), spec),
+                              in_specs=(P(), plan_specs, spec),
                               out_specs=spec, check_rep=False)
             self._compiled[key] = jax.jit(f)
         return self._compiled[key]
@@ -366,6 +411,10 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--dp", type=int, default=1,
                     help="shard_map data-parallel degree over the batch")
+    ap.add_argument("--mp", type=int, default=1,
+                    help="model-parallel degree: Cout-shard each "
+                         "shardable deconv layer's split filters over "
+                         "the mesh's 'model' axis (needs dp*mp devices)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "fused", "xla", "winograd"])
     ap.add_argument("--dtype", default="float32",
@@ -411,7 +460,7 @@ def main(argv=None):
     dtype = "int8" if args.dtype == "int8" else jnp.dtype(args.dtype)
     server = GenServer(nets=nets, dtype=dtype,
                        backend=args.backend, max_batch=args.max_batch,
-                       dp=args.dp, specs=specs)
+                       dp=args.dp, mp=args.mp, specs=specs)
     if args.pretune:
         t0 = time.time()
         tuned = server.pretune()

@@ -1,0 +1,103 @@
+"""Sharded training step for the paper's generative nets.
+
+Serving got the (data x model) mesh first (``serve_gen --dp --mp``);
+this module is the training half: one ``shard_map``-wrapped SGD step
+where the batch is split over the 'data' axis and each shardable deconv
+layer's *raw* filter is Cout-split over the 'model' axis — the same
+slice the serving engine binds, so a checkpoint trained here lands on
+the serving mesh with zero resharding.
+
+The interesting part is the backward (see :mod:`repro.sd.grad`): under
+:func:`repro.sd.shard_scope` the models' traced-params path marks each
+shardable layer's plan ``with_shards``, ``conv_transpose`` all-gathers
+the layer output, and the ``custom_vjp`` backward keeps the filter
+grad **local to its Cout shard** — the gather's adjoint is a slice of
+the cotangent, so ``dw`` only ever touches local channels — while the
+input grad (a sum over all output channels) takes the one ``psum``
+over the model axis.  Data-parallel gradient averaging is the usual
+``pmean`` over 'data'; scale/bias/fc grads are computed from the
+gathered (replicated) activations and need no model-axis collective.
+
+    mesh = make_dev_mesh(2, 2)                    # (data, model)
+    step, specs = make_sharded_train_step(model, mesh, lr=1e-2)
+    params = place_params(params, mesh, specs)    # w: Cout slices
+    params, loss = step(params, z, target)
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sd
+from repro.distributed.sharding import MeshContext, gen_param_specs
+
+
+def _batch_spec(ndim: int, ax) -> P:
+    return P(*((ax,) + (None,) * (ndim - 1)))
+
+
+def _out_ndim(spec) -> int:
+    last = spec.layers[-1]
+    return 2 if last.kind == "fc" else last.rank + 2
+
+
+def place_params(params, mesh, specs):
+    """``device_put`` a param tree per its spec tree (sharded filters
+    become per-device Cout slices; everything else replicates)."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        params, specs)
+
+
+def make_sharded_train_step(model, mesh, lr: float = 1e-2,
+                            dp_axis: str = "data",
+                            mp_axis: str = "model") -> Tuple:
+    """Build the jitted SPMD SGD step for ``model`` on ``mesh``.
+
+    Returns ``(step, param_specs)``: ``step(params, z, target) ->
+    (new_params, loss)`` with ``params`` placed per ``param_specs``
+    (see :func:`place_params`) and ``z``/``target`` batch-sharded over
+    ``dp_axis`` (global batch must divide the data degree).  The loss
+    is the global-mean L2 to ``target``.  ``model`` must be an engine
+    impl (``sd_kernel``): the sharded path rides the traced-params
+    ``repro.sd.conv_transpose`` form.
+    """
+    if getattr(model, "engine", None) is None:
+        raise ValueError(
+            "make_sharded_train_step needs an engine-impl model "
+            "(deconv_impl='sd_kernel'): the sharded backward runs "
+            "through repro.sd.conv_transpose's custom_vjp")
+    dp = int(mesh.shape[dp_axis]) if dp_axis in mesh.axis_names else 1
+    mp = int(mesh.shape[mp_axis]) if mp_axis in mesh.axis_names else 1
+    pspecs = gen_param_specs(model.spec, MeshContext(mesh))
+    zspec = _batch_spec(len(model.input_shape(1)),
+                        dp_axis if dp > 1 else None)
+    yspec = _batch_spec(_out_ndim(model.spec),
+                        dp_axis if dp > 1 else None)
+
+    def local_step(params, z, target):
+        def loss_fn(ps):
+            with sd.shard_scope(mp, mp_axis):
+                out = model.apply(ps, z)
+            return jnp.mean((out - target) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if dp > 1:
+            loss = lax.pmean(loss, dp_axis)
+            grads = jax.tree_util.tree_map(
+                lambda g: lax.pmean(g, dp_axis), grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - lr * g, params, grads)
+        return new_params, loss
+
+    from jax.experimental.shard_map import shard_map
+    step = shard_map(local_step, mesh=mesh,
+                     in_specs=(pspecs, zspec, yspec),
+                     out_specs=(pspecs, P()),
+                     check_rep=False)
+    return jax.jit(step), pspecs

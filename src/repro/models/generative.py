@@ -43,7 +43,8 @@ class GenerativeModel:
     def __init__(self, spec: NetworkSpec, deconv_impl: str = "sd",
                  final_tanh: Optional[bool] = None,
                  engine_backend: str = "auto",
-                 engine_dtype: str = "native"):
+                 engine_dtype: str = "native",
+                 engine_mesh=None):
         self.spec = spec
         if final_tanh is None:          # head semantics live on the spec
             final_tanh = spec.final_tanh
@@ -54,10 +55,18 @@ class GenerativeModel:
                 f"engine_dtype={engine_dtype!r} needs an engine impl "
                 f"(e.g. 'sd_kernel'); {deconv_impl!r} is a plain "
                 "executor")
+        if engine_mesh is not None and not info.engine:
+            raise ValueError(
+                f"engine_mesh needs an engine impl (e.g. 'sd_kernel'); "
+                f"{deconv_impl!r} is a plain executor")
         if info.engine:
             from repro.engine import SDEngine
+            # engine_mesh: bind() Cout-shards each shardable layer's
+            # split filters over the mesh's 'model' axis and keys every
+            # autotune geometry per device (see SDEngine).
             self._engine: Optional["SDEngine"] = SDEngine(
-                spec, backend=engine_backend, dtype=engine_dtype)
+                spec, backend=engine_backend, dtype=engine_dtype,
+                mesh=engine_mesh)
             self._deconv = None
         else:
             self._engine = None
@@ -162,8 +171,17 @@ class GenerativeModel:
                 return self._engine.run(layer.name, h), True
         elif self._engine is not None:   # traced params: differentiable
             def step(layer, p, h):
-                h = sd.conv_transpose(self._functional_plan(layer), h,
-                                      p["w"])
+                fp = self._functional_plan(layer)
+                scope = sd.current_shard_scope()
+                if scope is not None:
+                    # Sharded train step (sd.shard_scope active): p["w"]
+                    # is this device's Cout slice, conv_transpose
+                    # all-gathers the channel axis, and scale/bias are
+                    # replicated — they apply to the gathered tensor.
+                    n, ax = scope
+                    if n > 1 and layer.cout % n == 0:
+                        fp = fp.with_shards(n, ax)
+                h = sd.conv_transpose(fp, h, p["w"])
                 return h * p["scale"] + p["b"], False
         else:                            # plain registry executor
             def step(layer, p, h):

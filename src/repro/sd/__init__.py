@@ -17,13 +17,15 @@ stack passes bound plans through ``jit`` as arguments.
 """
 
 from .compat import clear_plan_cache, functional_deconv, plan_for
-from .functional import conv_transpose, execute, split_weights
-from .plan import (BACKENDS, DeconvPlan, plan, resolve_backend,
-                   to_ocmajor, unsplit_filters)
+from .functional import conv_transpose, execute, execute_spmd, split_weights
+from .plan import (BACKENDS, DeconvPlan, current_shard_scope, plan,
+                   resolve_backend, shard_scope, to_ocmajor,
+                   to_shardblocked, unsplit_filters)
 
 __all__ = [
     "BACKENDS", "DeconvPlan", "plan", "resolve_backend", "to_ocmajor",
-    "unsplit_filters", "conv_transpose", "execute", "split_weights",
+    "to_shardblocked", "unsplit_filters", "conv_transpose", "execute",
+    "execute_spmd", "split_weights", "shard_scope", "current_shard_scope",
     "functional_deconv", "plan_for", "clear_plan_cache", "selfcheck",
 ]
 

@@ -33,6 +33,25 @@ from . import grad as _grad
 from .plan import DeconvPlan, to_ocmajor
 
 
+def _gather_cout(plan: DeconvPlan, y: jax.Array) -> jax.Array:
+    """Epilogue collective of a Cout-sharded plan: one tiled all-gather
+    re-assembles the channel axis from each device's Cout block.  The
+    all-gather (vs a reduce-scatter) is the right collective here: every
+    next-layer filter slice needs the *full* Cin, so the inter-layer
+    tensor must be whole on every model-axis device anyway, and the
+    shard-blocked channel order makes the tiled concatenation land each
+    block exactly where the unsharded layout would have it."""
+    try:
+        return jax.lax.all_gather(y, plan.shard_axis, axis=y.ndim - 1,
+                                  tiled=True)
+    except NameError as e:
+        raise ValueError(
+            f"plan is Cout-sharded {plan.shards} ways over mesh axis "
+            f"{plan.shard_axis!r}, which is not bound here — run it "
+            "under shard_map on a mesh with that axis (see "
+            "sd.execute_spmd), or rebind without mesh=") from e
+
+
 def _run_presplit(plan: DeconvPlan, x: jax.Array, ws: jax.Array,
                   layout: str, bias: Optional[jax.Array],
                   act: str) -> jax.Array:
@@ -177,6 +196,14 @@ def conv_transpose(plan: DeconvPlan, x: jax.Array, w: jax.Array,
     Differentiable in ``x``, ``w`` and ``b`` (see :mod:`repro.sd.grad`);
     no epilogue activation is applied (compose it outside, where it is
     differentiable for free).
+
+    A ``plan.with_shards(n, axis)`` plan is the SPMD training form:
+    under ``shard_map``, ``w`` is each device's ``cout/n`` slice of the
+    filter, the split conv runs on that slice only, and the output's
+    channel axis is all-gathered over ``axis`` — so the result (and the
+    cotangent flowing back in) is the full-channel tensor on every
+    device, while the ``custom_vjp`` backward keeps the filter grad
+    local to the shard and ``psum``\\ s only the input grad.
     """
     return _fwd_value(plan, x, w, b)
 
@@ -193,6 +220,8 @@ def _fwd_value(plan, x, w, b):
             "repro.sd.execute, or build a dtype='native' plan to train")
     ws = split_filters(w, plan.stride)
     y = _run_presplit(plan, x, ws, "nmajor", None, "linear")
+    if plan.shards > 1:
+        y = _gather_cout(plan, y)
     return y if b is None else y + b.astype(y.dtype)
 
 
@@ -235,6 +264,31 @@ def execute(plan: DeconvPlan, x: jax.Array) -> jax.Array:
                          "plan.bind(w, scale, bias) once offline, or use "
                          "conv_transpose(plan, x, w) for the stateless form")
     if plan.dtype == "int8":
-        return _run_presplit_int8(plan, x)
-    return _run_presplit(plan, x, plan.ws, plan.layout, plan.bias,
-                         plan.act)
+        y = _run_presplit_int8(plan, x)
+    else:
+        y = _run_presplit(plan, x, plan.ws, plan.layout, plan.bias,
+                          plan.act)
+    # Cout-sharded plan: bias + act above are per-local-channel, so the
+    # whole epilogue ran on the shard; one collective closes the layer.
+    if plan.shards > 1:
+        y = _gather_cout(plan, y)
+    return y
+
+
+def execute_spmd(plan: DeconvPlan, x: jax.Array, mesh,
+                 dp_axis: str = "data") -> jax.Array:
+    """Run a bound plan on a device mesh under ``shard_map``: batch
+    split over ``dp_axis`` (when it divides), Cout split per the plan's
+    own ``shards``/``shard_axis``.  This is the standalone entry point
+    — serving composes the same specs into its per-net executable
+    (see ``launch.serve_gen``); unsharded plans on a model axis simply
+    run replicated.  Output matches single-device :func:`execute`."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    dp = int(mesh.shape[dp_axis]) if dp_axis in mesh.axis_names else 1
+    batch_ax = dp_axis if (dp > 1 and x.shape[0] % dp == 0) else None
+    xspec = P(*((batch_ax,) + (None,) * (x.ndim - 1)))
+    f = shard_map(lambda p, xx: execute(p, xx), mesh=mesh,
+                  in_specs=(plan.shard_specs(), xspec),
+                  out_specs=xspec, check_rep=False)
+    return f(plan, x)

@@ -119,11 +119,25 @@ def conv_transpose_vjp(plan: DeconvPlan, x: jax.Array, w: jax.Array,
     is pixel-unshuffled once and the two convolutions above run on
     ``K_T``-tap stride-1 geometry, so the backward enjoys the same
     no-inserted-zeros property as the forward.
+
+    Cout-sharded plans (``plan.shards > 1`` under ``shard_map``): ``w``
+    is this device's Cout slice and ``dy`` the full-channel cotangent
+    of the all-gathered forward output (replicated over the shard
+    axis).  The gather's adjoint is a slice: take this device's channel
+    block of ``dy`` and run the identical local backward — the filter
+    grad then *stays local to the shard* (it only ever touches local
+    channels, mirroring the sharded filter primal), and only the input
+    grad, a sum over all output channels, needs one ``psum``.
     """
     rank = plan.rank
     kt, pk, pi = sd_geometry(plan.kernel, plan.stride)
     space = x.shape[1:1 + rank]
     ws = split_filters(w, plan.stride)
+    if plan.shards > 1:
+        # all_gather^T: this shard's Cout block of the cotangent.
+        coutl = w.shape[-1]
+        start = lax.axis_index(plan.shard_axis) * coutl
+        dy = lax.dynamic_slice_in_dim(dy, start, coutl, axis=dy.ndim - 1)
 
     # crop^T: embed dy at offset (P_K + low crop); the trailing margin
     # per dim is (high crop - output_padding).  When output_padding grew
@@ -153,4 +167,7 @@ def conv_transpose_vjp(plan: DeconvPlan, x: jax.Array, w: jax.Array,
         xp = jnp.pad(x, [(0, 0)] + [(p, p) for p in pi] + [(0, 0)])
         dws = _conv_valid_filter_grad(xp, dy1)
     dw = unsplit_filters(dws, plan.kernel, plan.stride)    # split^T
+    if plan.shards > 1:
+        # dx sums over *all* output channels; each shard saw its own.
+        dx = lax.psum(dx, plan.shard_axis)
     return dx.astype(x.dtype), dw.astype(w.dtype)

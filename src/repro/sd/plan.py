@@ -26,6 +26,8 @@ points live in :mod:`repro.sd.functional`.
 from __future__ import annotations
 
 import math
+import threading
+from contextlib import contextmanager
 from dataclasses import dataclass, replace
 from typing import Any, Optional, Sequence, Tuple
 
@@ -60,6 +62,28 @@ def resolve_backend(backend: str) -> str:
         raise ValueError(f"unknown SD backend {backend!r}; "
                          f"choose from {('auto',) + BACKENDS}")
     return backend
+
+
+def to_shardblocked(ws: jax.Array, s, shards: int,
+                    phases: Optional[int] = None) -> jax.Array:
+    """Permute n-major split filters so that a contiguous 1/``shards``
+    slice of the channel axis is itself n-major over a Cout block.
+
+    Plain n-major order (channel ``c = phase*Cout + oc``) interleaves
+    every device's output channels across the phase blocks, so a
+    contiguous ``NamedSharding`` slice would mix phases.  Shard-blocked
+    order is ``c = shard*(phases*Coutl) + phase*Coutl + ocl`` — device
+    ``d``'s slice is exactly the n-major layout of its own Cout block,
+    so the per-device kernel body needs no relayout at all.  (oc-major
+    and wino layouts are already contiguous per Cout block.)"""
+    rank = ws.ndim - 2
+    if phases is None:
+        phases = math.prod(_ntuple(s, rank))
+    kt = ws.shape[:rank]
+    cin, nc = ws.shape[rank], ws.shape[rank + 1]
+    coutl = nc // phases // shards
+    w = ws.reshape(*kt, cin, phases, shards, coutl)
+    return jnp.swapaxes(w, -2, -3).reshape(*kt, cin, nc)
 
 
 def to_ocmajor(ws: jax.Array, s, phases: Optional[int] = None) -> jax.Array:
@@ -109,6 +133,8 @@ class DeconvPlan:
     tile: Optional[KernelPlan] = None      # autotuned (th, tw, tcin, tcout)
     output_padding: Tuple[int, ...] = None  # normalised in plan()
     dtype: str = "native"                  # "native" | "int8"
+    shards: int = 1                        # Cout shards over shard_axis
+    shard_axis: str = "model"              # mesh axis name of the shards
     ws: Optional[jax.Array] = None         # leaf: pre-split filters
     bias: Optional[jax.Array] = None       # leaf: per-oc bias
     wscale: Optional[jax.Array] = None     # leaf: int8 per-channel scales
@@ -178,9 +204,62 @@ class DeconvPlan:
             return "ocmajor"
         return "nmajor"
 
+    @property
+    def cout_local(self) -> int:
+        """Output channels each shard computes (== cout when unsharded)."""
+        return self.cout // self.shards
+
+    def with_shards(self, shards: int,
+                    axis: Optional[str] = None) -> "DeconvPlan":
+        """Mark this plan as Cout-sharded ``shards`` ways over mesh axis
+        ``axis``.  Geometry-only marking: inside ``shard_map`` each
+        device then runs its 1/``shards`` Cout slice and ``execute`` /
+        ``conv_transpose`` all-gather the channel axis in the epilogue.
+        Binding with ``mesh=`` sets this automatically."""
+        shards = int(shards)
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards > 1 and self.cout % shards:
+            raise ValueError(
+                f"cout {self.cout} not divisible by {shards} shards")
+        return replace(self, shards=shards,
+                       shard_axis=self.shard_axis if axis is None
+                       else str(axis))
+
+    def shard_specs(self, P=None) -> "DeconvPlan":
+        """This plan's pytree with each array leaf replaced by its
+        ``PartitionSpec`` — ``ws`` sharded over its channel (last) axis,
+        ``bias``/``wscale`` over their only axis, everything replicated
+        when ``shards == 1``.  Feed directly to ``shard_map`` in_specs
+        (the plan's aux_data rides along in the treedef) or zip with the
+        leaves for ``NamedSharding`` placement."""
+        if P is None:
+            from jax.sharding import PartitionSpec as P
+        ax = self.shard_axis if self.shards > 1 else None
+        leaves = []
+        if self.ws is not None:
+            leaves.append(P(*(None,) * (self.ws.ndim - 1), ax))
+        if self.bias is not None:
+            leaves.append(P(ax))
+        if self.wscale is not None:
+            leaves.append(P(ax))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(self), leaves)
+
+    def shard_put(self, mesh) -> "DeconvPlan":
+        """Place a bound plan's leaves on ``mesh`` via ``NamedSharding``
+        per :meth:`shard_specs` — each device materialises only its Cout
+        slice of the split filters (and bias/``wscale``)."""
+        from jax.sharding import NamedSharding
+        return jax.tree_util.tree_map(
+            lambda arr, spec: jax.device_put(
+                arr, NamedSharding(mesh, spec)),
+            self, self.shard_specs())
+
     def bind(self, w: jax.Array, scale: Optional[jax.Array] = None,
              bias: Optional[jax.Array] = None,
-             act: Optional[str] = None) -> "DeconvPlan":
+             act: Optional[str] = None,
+             mesh=None, axis: str = "model") -> "DeconvPlan":
         """Split ``w`` once (the paper's offline transform) and return a
         bound plan.  ``scale`` (folded inference-BN gamma/sqrt(var)) is
         multiplied into the split filters — a deconv is linear in its
@@ -195,6 +274,15 @@ class DeconvPlan:
         and the BN gamma, exactly the one-multiply epilogue the fused
         kernel runs.  The stored ``ws`` is int8; ``wscale`` follows the
         same (oc-major or n-major) channel order as ``ws``.
+
+        ``mesh`` (a ``jax.sharding.Mesh``) requests a Cout-sharded
+        binding: the split filters (and ``wscale``/``bias``) are
+        relaid so a contiguous slice over the channel axis is one
+        device's Cout block, then placed with ``NamedSharding`` over
+        mesh axis ``axis`` — each device holds only its slice.  The
+        bound plan records ``shards``/``shard_axis`` in aux_data, and
+        ``execute`` all-gathers the channel axis when run under
+        ``shard_map``.  Requires ``cout % mesh.shape[axis] == 0``.
         """
         if w.shape != (*self.kernel, self.cin, self.cout):
             raise ValueError(f"filter shape {w.shape} does not match plan "
@@ -221,9 +309,32 @@ class DeconvPlan:
             # ws becomes (alpha_h, alpha_w, Cin, Cout*N).
             from repro.kernels.winograd import transform_filters
             ws = transform_filters(ws)
-        return replace(self, ws=ws, bias=bias, layout=layout,
-                       wscale=wscale,
-                       act=self.act if act is None else act)
+        shards, shard_axis = self.shards, self.shard_axis
+        if mesh is not None:
+            if axis not in mesh.axis_names:
+                raise ValueError(f"mesh has no axis {axis!r}; "
+                                 f"axes are {tuple(mesh.axis_names)}")
+            shards, shard_axis = int(mesh.shape[axis]), axis
+            if shards > 1 and self.cout % shards:
+                raise ValueError(
+                    f"cout {self.cout} not divisible by mesh axis "
+                    f"{axis!r} size {shards}; bind without mesh= to "
+                    "replicate this layer")
+        if shards > 1 and layout == "nmajor":
+            # oc-major/wino channel order is already contiguous per Cout
+            # block; n-major needs the shard-blocked permutation so each
+            # device's NamedSharding slice is locally n-major.
+            ws = to_shardblocked(ws, self.stride, shards, self.phases)
+            if wscale is not None:
+                wscale = wscale.reshape(self.phases, shards, -1)
+                wscale = jnp.swapaxes(wscale, 0, 1).reshape(-1)
+        bound = replace(self, ws=ws, bias=bias, layout=layout,
+                        wscale=wscale, shards=shards,
+                        shard_axis=shard_axis,
+                        act=self.act if act is None else act)
+        if mesh is not None and not isinstance(ws, jax.core.Tracer):
+            bound = bound.shard_put(mesh)
+        return bound
 
     def unbind(self) -> "DeconvPlan":
         return replace(self, ws=None, bias=None, wscale=None,
@@ -298,18 +409,49 @@ def _flatten(p: DeconvPlan):
     # so float bound plans still flatten to exactly (ws, bias) leaves.
     children = (p.ws, p.bias, p.wscale)
     aux = (p.kernel, p.stride, p.padding, p.output_padding, p.cin, p.cout,
-           p.backend, p.act, p.layout, p.tile, p.dtype)
+           p.backend, p.act, p.layout, p.tile, p.dtype, p.shards,
+           p.shard_axis)
     return children, aux
 
 
 def _unflatten(aux, children) -> DeconvPlan:
     ws, bias, wscale = children
     (kernel, stride, padding, output_padding, cin, cout, backend, act,
-     layout, tile, dtype) = aux
+     layout, tile, dtype, shards, shard_axis) = aux
     return DeconvPlan(kernel=kernel, stride=stride, padding=padding,
                       output_padding=output_padding, cin=cin, cout=cout,
                       backend=backend, act=act, layout=layout, tile=tile,
-                      dtype=dtype, ws=ws, bias=bias, wscale=wscale)
+                      dtype=dtype, shards=shards, shard_axis=shard_axis,
+                      ws=ws, bias=bias, wscale=wscale)
 
 
 jax.tree_util.register_pytree_node(DeconvPlan, _flatten, _unflatten)
+
+
+# ---------------------------------------------------------------------------
+# shard_scope: trace-time Cout-shard marking for the stateless form.
+# ---------------------------------------------------------------------------
+
+_SHARD_SCOPE = threading.local()
+
+
+@contextmanager
+def shard_scope(shards: int, axis: str = "model"):
+    """Trace-time context: while active, model code that builds
+    geometry-only plans (e.g. the generative models' traced-params
+    path) marks shardable deconv layers ``with_shards(shards, axis)``,
+    so ``conv_transpose`` inside ``shard_map`` consumes the local Cout
+    slice of ``w`` and all-gathers the output.  Layers whose cout does
+    not divide ``shards`` stay replicated — the model decides per
+    layer via :func:`current_shard_scope`."""
+    prev = getattr(_SHARD_SCOPE, "value", None)
+    _SHARD_SCOPE.value = (int(shards), str(axis))
+    try:
+        yield
+    finally:
+        _SHARD_SCOPE.value = prev
+
+
+def current_shard_scope() -> Optional[Tuple[int, str]]:
+    """The active ``(shards, axis)`` of :func:`shard_scope`, or None."""
+    return getattr(_SHARD_SCOPE, "value", None)

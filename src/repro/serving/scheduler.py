@@ -181,6 +181,14 @@ class ContinuousScheduler:
 
     # ---- service-time model ---------------------------------------------
     def _engine_seed(self, net: str, bucket: int) -> Optional[float]:
+        # Prefer the server's own estimate (GenServer.estimate_ms keys
+        # the lookup on what one device launches under its mesh — the
+        # per-device batch and shard degree — so admission control on a
+        # --dp/--mp server is not seeded wrong by the parallelism
+        # factor); fall back to the engine for bare-engine servers.
+        est_fn = getattr(self.server, "estimate_ms", None)
+        if est_fn is not None:
+            return est_fn(net, bucket)
         model_fn = getattr(self.server, "model", None)
         if model_fn is None:
             return None
@@ -270,9 +278,16 @@ class ContinuousScheduler:
     # ---- launching -------------------------------------------------------
     def _launch_group(self, net: str, reqs: List[ServeRequest]) -> None:
         bucket = self.server.bucket(len(reqs))
-        dtype = getattr(self.server, "dtype_name", "")
         cells = getattr(self.server, "_compiled", None)
-        key = (net, bucket, dtype)
+        # The server owns its cell-key format (GenServer.cell_key adds
+        # the mesh shape under --dp/--mp); building the key here with a
+        # different format would silently disable the zero-recompile
+        # assertion below.
+        key_fn = getattr(self.server, "cell_key", None)
+        if key_fn is not None:
+            key = key_fn(net, bucket)
+        else:
+            key = (net, bucket, getattr(self.server, "dtype_name", ""))
         fresh = cells is None or key not in cells
         count0 = getattr(self.server, "compile_count", None)
 

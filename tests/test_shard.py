@@ -1,0 +1,269 @@
+"""Channel-sharded split-deconv plans on the (data x model) mesh.
+
+Single-device tests cover the pure pieces (shard-blocked layout
+permutation, spec trees, validation, autotune keying, per-device
+geometry).  The actual SPMD behaviour — bind-time placement, the
+epilogue all-gather, compile-cell closure, sharded grads — runs on
+simulated multi-device CPU backends via the ``multi_device_run``
+fixture (tests/conftest.py), since jax fixes the device count at
+backend init.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.sd as sd
+from repro.kernels.autotune import ConvGeom
+from repro.launch.serve_gen import GenServer, reduced_spec
+
+
+# ---------------------------------------------------------------------------
+# single-device: layout permutation, spec trees, validation
+# ---------------------------------------------------------------------------
+
+def test_to_shardblocked_permutation():
+    """Shard s's contiguous Cout block of the blocked layout must hold
+    phase-major channels  c = phase*cout + (s*coutl + oc)  of the
+    plain n-major layout — that is what makes a contiguous device
+    slice locally n-major."""
+    rng = np.random.RandomState(0)
+    phases, cout, shards = 4, 6, 2
+    coutl = cout // shards
+    ws = jnp.asarray(rng.randn(2, 2, 3, phases * cout), jnp.float32)
+    blocked = np.asarray(sd.to_shardblocked(ws, (2, 2), shards,
+                                            phases=phases))
+    wsn = np.asarray(ws)
+    for s in range(shards):
+        blk = blocked[..., s * phases * coutl:(s + 1) * phases * coutl]
+        for p in range(phases):
+            for oc in range(coutl):
+                np.testing.assert_array_equal(
+                    blk[..., p * coutl + oc],
+                    wsn[..., p * cout + s * coutl + oc])
+
+
+def test_with_shards_validation():
+    p = sd.plan((4, 4, 3, 8), 2, 1)
+    assert p.with_shards(1).shards == 1
+    p2 = p.with_shards(2, "model")
+    assert p2.shards == 2 and p2.cout_local == 4
+    with pytest.raises(ValueError, match="divisible"):
+        p.with_shards(3)
+    with pytest.raises(ValueError, match="shards"):
+        p.with_shards(0)
+
+
+def test_shard_aux_survives_flatten():
+    rng = np.random.RandomState(1)
+    w = jnp.asarray(rng.randn(4, 4, 3, 8), jnp.float32)
+    p = sd.plan(w.shape, 2, 1).bind(w).with_shards(2, "mp")
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    q = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert q.shards == 2 and q.shard_axis == "mp"
+
+
+def test_shard_specs_tree():
+    from jax.sharding import PartitionSpec as P
+    rng = np.random.RandomState(2)
+    w = jnp.asarray(rng.randn(4, 4, 3, 8), jnp.float32)
+    b = jnp.asarray(rng.randn(8), jnp.float32)
+    p = sd.plan(w.shape, 2, 1).bind(w, bias=b)
+    # replicated when unsharded (every spec entry None)
+    specs = jax.tree_util.tree_leaves(
+        p.shard_specs(), is_leaf=lambda x: isinstance(x, P))
+    assert all(e is None for s in specs for e in s)
+    ps = p.with_shards(2, "model")
+    sp = ps.shard_specs()
+    assert sp.ws == P(*(None,) * (ps.ws.ndim - 1), "model")
+    assert sp.bias == P("model")
+
+
+def test_convgeom_mp_key_distinct():
+    """An MP-measured entry (its timing includes the all-gather) must
+    never steer an unsharded layer of the same local shape."""
+    from dataclasses import replace
+    g = ConvGeom.from_deconv(2, 8, 8, 4, 8, 4, 2, padding=((1, 1),) * 2)
+    g2 = replace(g, shards=2)
+    assert "_mp2" in g2.key()
+    assert g.key() != g2.key()
+
+
+def test_engine_per_device_geometry():
+    """On a mesh engine, autotune geometry is what one device launches:
+    batch ceil-divided over dp, cout over the layer's shard count."""
+    from repro.engine import SDEngine
+    spec = reduced_spec()
+    eng = SDEngine(spec, backend="xla")
+    layer = [l for l in spec.deconv_layers() if l.rank == 2
+             and l.cout % 2 == 0][0]
+    base = eng.layer_geom(layer, batch=4)
+    eng.dp, eng.mp = 2, 2          # what a (2,2) mesh engine would set
+    g = eng.layer_geom(layer, batch=4)
+    assert g.b == max(1, base.b // 2)
+    assert g.cout == base.cout // 2
+    assert g.shards == 2 and "_mp2" in g.key()
+    narrow = [l for l in spec.deconv_layers() if l.cout % 2 == 1]
+    for l in narrow:
+        assert eng._layer_shards(l) == 1    # replicate, don't split
+
+
+def test_cell_key_formats():
+    srv = GenServer(nets=["g"], specs={"g": reduced_spec()})
+    assert srv.cell_key("g", 4) == ("g", 4, "float32")
+    srv._mesh = object()                     # what a live mesh sets
+    srv.dp, srv.mp = 2, 2
+    assert srv.cell_key("g", 4) == ("g", 4, "float32", "dp2xmp2")
+
+
+def test_bind_mesh_axis_validation():
+    import jax.sharding
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    p = sd.plan((4, 4, 3, 7), 2, 1)
+    w = jnp.zeros((4, 4, 3, 7), jnp.float32)
+    with pytest.raises(ValueError, match="axis"):
+        p.bind(w, mesh=mesh, axis="tensor")
+    # 1-sized model axis always divides: bind replicates, shards == 1
+    assert p.bind(w, mesh=mesh).shards == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-device (subprocess): parity, compile closure, grads
+# ---------------------------------------------------------------------------
+
+_PARITY_2DEV = """
+import numpy as np, jax, jax.numpy as jnp
+import repro.sd as sd
+assert jax.device_count() == 2
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+rng = np.random.RandomState(0)
+cases = [  # (x shape, w shape, stride, backend, dtype)
+    ((2, 5, 6, 3),  (4, 4, 3, 8),  2, "xla",      "native"),
+    ((2, 5, 6, 3),  (4, 4, 3, 8),  2, "fused",    "native"),
+    ((2, 5, 6, 3),  (4, 4, 3, 8),  2, "winograd", "native"),
+    ((2, 5, 6, 3),  (5, 5, 3, 6),  3, "xla",      "native"),
+    ((2, 7, 4),     (4, 4, 8),     2, "xla",      "native"),
+    ((1, 3, 4, 5, 2), (4, 4, 4, 2, 4), 2, "xla",  "native"),
+    ((2, 5, 6, 3),  (4, 4, 3, 8),  2, "xla",      "int8"),
+]
+for xs, wshape, s, backend, dt in cases:
+    x = jnp.asarray(rng.randn(*xs), jnp.float32)
+    w = jnp.asarray(rng.randn(*wshape), jnp.float32)
+    b = jnp.asarray(rng.randn(wshape[-1]), jnp.float32)
+    p = sd.plan(wshape, s, 1, backend=backend, act="relu", dtype=dt)
+    ref = np.asarray(sd.execute(p.bind(w, bias=b), x))
+    bp = p.bind(w, bias=b, mesh=mesh, axis="model")
+    assert bp.shards == 2, (backend, bp.shards)
+    out = np.asarray(sd.execute_spmd(bp, x, mesh))
+    assert (out == ref).all(), (backend, dt, np.abs(out - ref).max())
+print("PARITY_OK", len(cases))
+"""
+
+
+def test_cout_shard_parity_2dev(multi_device_run):
+    """2-device Cout-sharded execution is bit-exact vs unsharded across
+    backends, ranks, odd strides and the int8 path."""
+    out = multi_device_run(_PARITY_2DEV, ndev=2)
+    assert "PARITY_OK 7" in out
+
+
+_GRAD_2DEV = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+import repro.sd as sd
+from repro.launch.mesh import make_dev_mesh
+from repro.launch.train_gen import make_sharded_train_step, place_params
+from repro.models.generative import GenerativeModel
+from repro.launch.serve_gen import reduced_spec
+assert jax.device_count() == 2
+mesh = make_dev_mesh(1, 2)
+rng = np.random.RandomState(0)
+x = jnp.asarray(rng.randn(2, 5, 6, 3), jnp.float32)
+w = jnp.asarray(rng.randn(4, 4, 3, 8), jnp.float32)
+p = sd.plan(w.shape, 2, 1, backend="xla")
+ps = p.with_shards(2, "model")
+def step(xx, wl):
+    f = lambda a, b: jnp.sum(sd.conv_transpose(ps, a, b) ** 2)
+    return jax.value_and_grad(f, argnums=(0, 1))(xx, wl)
+l, (gx, gw) = jax.jit(shard_map(
+    step, mesh=mesh,
+    in_specs=(P(), P(None, None, None, "model")),
+    out_specs=((P(), (P(), P(None, None, None, "model")))),
+    check_rep=False))(x, w)
+rl, (rgx, rgw) = jax.value_and_grad(
+    lambda a, b: jnp.sum(sd.conv_transpose(p, a, b) ** 2),
+    argnums=(0, 1))(x, w)
+np.testing.assert_allclose(float(l), float(rl), rtol=1e-5)
+np.testing.assert_allclose(np.asarray(gx), np.asarray(rgx),
+                           rtol=1e-4, atol=1e-4)
+np.testing.assert_allclose(np.asarray(gw), np.asarray(rgw),
+                           rtol=1e-4, atol=1e-4)
+# full train step on the paper-net spec
+spec = reduced_spec()
+model = GenerativeModel(spec, deconv_impl="sd_kernel",
+                        engine_backend="auto")
+params = model.init(jax.random.PRNGKey(0))
+z = jax.random.normal(jax.random.PRNGKey(1), model.input_shape(2))
+t = jax.random.normal(jax.random.PRNGKey(2),
+                      (2, *spec.layers[-1].out_hw(),
+                       spec.layers[-1].cout))
+def ref_step(psx):
+    f = lambda q: jnp.mean((model.apply(q, z) - t) ** 2)
+    loss, g = jax.value_and_grad(f)(psx)
+    return jax.tree_util.tree_map(lambda a, b: a - 1e-2 * b, psx, g), loss
+new_ref, lr = jax.jit(ref_step)(params)
+stepf, specs = make_sharded_train_step(model, mesh, lr=1e-2)
+new_sh, ls = stepf(place_params(params, mesh, specs), z, t)
+np.testing.assert_allclose(float(lr), float(ls), rtol=1e-5)
+worst = max(float(jnp.max(jnp.abs(new_ref[n][k] - new_sh[n][k])))
+            for n in params for k in params[n])
+assert worst < 1e-4, worst
+print("GRAD_OK", worst)
+"""
+
+
+def test_sharded_grad_and_train_parity_2dev(multi_device_run):
+    """custom_vjp backward keeps dw local per Cout shard and psums dx:
+    grads and a full sharded train step match native to 1e-4."""
+    out = multi_device_run(_GRAD_2DEV, ndev=2)
+    assert "GRAD_OK" in out
+
+
+_SERVE_4DEV = """
+import numpy as np, jax
+from repro.launch.serve_gen import GenServer, reduced_specs
+specs = reduced_specs()
+nets = list(specs)
+ref = GenServer(nets=nets, specs=specs, backend="auto", seed=3)
+srv = GenServer(nets=nets, specs=specs, backend="auto", seed=3,
+                dp=2, mp=2)
+for net in nets:
+    zs = [r.latent for r in ref.random_requests(net, 2, seed=7)]
+    y0 = np.asarray(ref.run_group(net, zs))
+    y1 = np.asarray(srv.run_group(net, zs))
+    d = float(np.max(np.abs(y0 - y1)))
+    assert d <= 1e-5, (net, d)
+net = nets[0]
+key = srv.cell_key(net, srv.bucket(2))
+assert key[-1] == "dp2xmp2", key
+n0 = srv.compile_count
+m, _ = srv.model(net)
+srv.swap_checkpoint(net, m.init(jax.random.PRNGKey(99)))
+zs = [r.latent for r in srv.random_requests(net, 2, seed=11)]
+srv.run_group(net, zs)
+assert srv.compile_count == n0, (n0, srv.compile_count)
+est = srv.estimate_ms(net, srv.bucket(2))
+print("SERVE_OK", n0, est)
+"""
+
+
+def test_serve_mesh_parity_and_compile_closure_4dev(multi_device_run):
+    """GenServer on a (2,2) mesh matches the single-device server on
+    every reduced net, keys its compile cells per mesh shape, and a
+    checkpoint swap re-uses the compiled cells (zero recompiles)."""
+    out = multi_device_run(_SERVE_4DEV, ndev=4)
+    assert "SERVE_OK" in out
