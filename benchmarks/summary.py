@@ -149,20 +149,42 @@ def _quant_summary(data) -> dict:
     ssims = {n: r.get("ssim") for n, r in nets.items()}
     speed = [r.get("speedup") for r in nets.values()]
     bytes_flags = [r.get("bytes_lower_all") for r in nets.values()]
+    # Chained column (PR 10): static calibration + int8 activations
+    # through HBM — the activation-byte headline of the quant suite.
+    chained = {n: r.get("chained") for n, r in nets.items()
+               if r.get("chained")}
+    ch_speed = [c.get("speedup") for c in chained.values()]
+    ch_bytes = {n: c.get("bytes_total") for n, c in chained.items()}
+    i8_bytes = {n: nets[n].get("bytes_int8_total") for n in chained}
     return {
         "nets": len(nets),
         "ssim_min_gate": data.get("ssim_min"),
         "ssim_per_net": ssims,
         "ssim_worst": min((s for s in ssims.values() if s is not None),
                           default=None),
-        # the aggregate gate reads parity_all: here it means every
-        # net's int8 output clears the SSIM accuracy gate
-        "parity_all": bool(nets) and all(r.get("ssim_ok")
-                                         for r in nets.values()),
+        # the aggregate gate reads parity_all: every net's int8 output
+        # clears the SSIM accuracy gate, on the dynamic AND (when the
+        # artifact carries the column) the chained path
+        "parity_all": (bool(nets)
+                       and all(r.get("ssim_ok") for r in nets.values())
+                       and all(c.get("ssim_ok")
+                               for c in chained.values())),
         "hbm_bytes_lower_all": bool(bytes_flags) and all(bytes_flags),
         # memory-bound projection (bytes_f32/bytes_int8 of the fused
         # zero-copy launches), not CPU wall-clock — see quant_bench
         "speedup_geomean": _geomean(speed),
+        # activation-byte headline: chained vs dynamic-int8 launch
+        # bytes per net, and the all-layers-strictly-lower flag
+        "chained_nets": len(chained),
+        "chained_ssim_worst": min(
+            (c.get("ssim") for c in chained.values()
+             if c.get("ssim") is not None), default=None),
+        "chained_bytes_lower_all": bool(chained) and all(
+            c.get("lower_all") for c in chained.values()),
+        "chained_bytes_saved_pct_per_net": {
+            n: round(100.0 * (1 - ch_bytes[n] / i8_bytes[n]), 1)
+            for n in chained if i8_bytes.get(n)},
+        "chained_speedup_geomean": _geomean(ch_speed),
     }
 
 

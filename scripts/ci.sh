@@ -45,8 +45,14 @@ python -m benchmarks.loadgen --check
 echo "== int8 serving smoke (quantized engines end to end) =="
 python -m repro.launch.serve_gen --dryrun --dtype int8
 
+echo "== int8 calibration smoke (static scales swept at bind, chained "
+echo "   plans served end to end; cache redirected to /tmp) =="
+REPRO_SD_CALIB_CACHE=/tmp/ci_sd_calib.json \
+python -m repro.launch.serve_gen --dryrun --dtype int8 --calib 8
+
 echo "== int8 accuracy gate: committed BENCH_quant.json (every net's "
-echo "   SSIM >= 0.99 vs the f32 engine, int8 launch bytes < f32) =="
+echo "   SSIM >= 0.99 vs the f32 engine — dynamic AND chained — int8 "
+echo "   launch bytes < f32, chained bytes < int8 per layer) =="
 python -m benchmarks.quant_bench --check
 
 echo "== int8 accuracy gate: live SSIM on dcgan + sngan =="
@@ -67,6 +73,31 @@ for name in ("dcgan", "sngan"):
     assert s >= SSIM_MIN, f"{name}: int8 SSIM {s:.4f} < {SSIM_MIN}"
     print(f"  {name}: int8 vs f32 SSIM {s:.4f} (gate {SSIM_MIN})")
 print("int8 SSIM gate: OK")
+PY
+
+echo "== chained-int8 accuracy gate: live SSIM >= 0.999 on dcgan + "
+echo "   sngan (static calibration, int8 activations through HBM) =="
+python - <<'PY'
+import jax, jax.numpy as jnp
+from repro.core.ssim import ssim
+from repro.models.generative import build
+
+for name in ("dcgan", "sngan"):
+    f32m = build(name, "sd_kernel")
+    params = f32m.init(jax.random.PRNGKey(0))
+    i8c = build(name, "sd_kernel", engine_dtype="int8")
+    i8c.calibrate(params, n=32, seed=7)
+    plans = i8c.engine.plans()
+    chained = sum(p.chain_out for p in plans.values())
+    assert chained, f"{name}: no layer chained — wiring broken"
+    z = jax.random.normal(jax.random.PRNGKey(1), f32m.input_shape(4))
+    ref = jnp.asarray(f32m.apply(params, z))
+    out = jnp.asarray(i8c.apply(params, z))
+    s = float(ssim(ref, out))
+    assert s >= 0.999, f"{name}: chained int8 SSIM {s:.4f} < 0.999"
+    print(f"  {name}: chained SSIM {s:.4f} "
+          f"({chained}/{len(plans)} layers chain int8 through HBM)")
+print("chained-int8 SSIM gate: OK")
 PY
 
 echo "== N-D sweep smoke (nd_bench --smoke, parity-gated) =="

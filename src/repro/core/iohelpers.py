@@ -1,0 +1,54 @@
+"""Shared filesystem helpers for the on-disk caches.
+
+One durable-write idiom, used by every JSON artifact that multiple
+processes may write concurrently (the autotune plan cache, the
+calibration-scale cache): a *unique* temp file in the target directory
+(``mkstemp`` — a fixed ``.tmp`` name would let two writers interleave
+into one temp file), fsynced, then ``os.replace``\\ d over the target in
+one atomic rename.  Readers therefore only ever see a complete JSON
+document: last writer wins, no torn files.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def atomic_write_json(path: str, obj, *, indent: int = 1,
+                      sort_keys: bool = True) -> str:
+    """Atomically serialize ``obj`` as JSON to ``path``.
+
+    Creates the parent directory if needed.  On any failure the temp
+    file is removed and the existing ``path`` (if any) is untouched.
+    Returns ``path``.
+    """
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=indent, sort_keys=sort_keys)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path
+
+
+def read_json(path: str):
+    """Load a JSON document, returning ``None`` on a missing or torn
+    file (the atomic writer makes torn files impossible in practice,
+    but a foreign truncated file must not crash the reader)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None

@@ -92,6 +92,19 @@ class SDEngine:
     the hot path runs int8 activations with the dequant epilogue (see
     :mod:`repro.core.quant`).  Plan-cache/jit keys include the dtype,
     so one process can serve float and int8 engines side by side.
+
+    :meth:`set_calibration` installs static per-layer activation
+    scales on an int8 engine (from ``GenerativeModel.calibrate`` or the
+    on-disk calibration cache): every calibrated layer quantizes its
+    input statically (no per-sample amax on the hot path), and each
+    pair of *consecutive* deconv layers chains — layer i's epilogue
+    folds ``1/sx_{i+1}`` and re-quantizes to int8 in VMEM, so the
+    inter-layer tensor crosses HBM as int8.  An intervening non-deconv
+    layer (segnet's mid-net conv) breaks the chain there; the first
+    layer quantizes its f32 input statically and the last keeps f32
+    output (tanh does not commute with the scale).  Chained layers'
+    tiles key under ``_q8out`` (their output tile is 4x smaller in
+    VMEM).
     """
 
     def __init__(self, spec: NetworkSpec, plan_batch: int = 1,
@@ -124,6 +137,7 @@ class SDEngine:
         self._plans: Dict[str, DeconvPlan] = {}
         self._bound: Optional[Params] = None
         self._bound_leaves: Optional[tuple] = None
+        self._calib: Optional[Dict[str, float]] = None
 
     def _layer_shards(self, layer: LayerSpec) -> int:
         """Cout shards this engine gives one layer: the mesh's model
@@ -180,7 +194,8 @@ class SDEngine:
         return self.backend
 
     def layer_plan(self, layer: LayerSpec, act: str,
-                   dtype: Optional[str] = None) -> DeconvPlan:
+                   dtype: Optional[str] = None,
+                   qout: bool = False) -> DeconvPlan:
         """Geometry-only plan for one deconv layer: split layout +
         autotuned kernel tile, no filter data.  Static and trace-safe.
         Rank follows the layer's input spatial shape (1-D/2-D/3-D);
@@ -199,7 +214,7 @@ class SDEngine:
                 if layer.padding == "same" else layer.pad)
         dtype = self.dtype if dtype is None else dtype
         tile = None
-        geom = self.layer_geom(layer, dtype=dtype)
+        geom = self.layer_geom(layer, dtype=dtype, qout=qout)
         backend = self._layer_backend(layer, dtype, geom)
         if geom is not None:
             if backend == "winograd":
@@ -209,11 +224,36 @@ class SDEngine:
             (*kernel, layer.cin, layer.cout), stride, pads,
             backend=backend, act=act, tile=tile, dtype=dtype)
 
+    def _chain_next(self) -> Dict[str, str]:
+        """Chaining wiring from the installed calibration: maps each
+        deconv layer's name to the *next* layer's name when the two are
+        consecutive in the spec, both deconv, and both calibrated — the
+        pairs whose inter-layer tensor crosses HBM as int8.  A non-last
+        engine layer always runs a fold-compatible relu epilogue; the
+        last layer has no successor, so it never chains out (its f32
+        output feeds the model-level tanh)."""
+        out: Dict[str, str] = {}
+        if not self._calib or self.dtype != "int8":
+            return out
+        layers = self.spec.layers
+        for i, layer in enumerate(layers[:-1]):
+            nxt = layers[i + 1]
+            if (layer.kind == "deconv" and nxt.kind == "deconv"
+                    and layer.name in self._calib
+                    and nxt.name in self._calib):
+                out[layer.name] = nxt.name
+        return out
+
     def build_plans(self, params: Params) -> Dict[str, DeconvPlan]:
         """Bound plans for every deconv layer — pure (no engine-state
         mutation), so it also works on traced params inside a jit: the
-        resulting plans are pytrees of the trace's tracers."""
+        resulting plans are pytrees of the trace's tracers.  With
+        calibration installed (int8 engines), plans pick up static
+        ``sx_in`` scales and consecutive deconv pairs chain (see
+        :meth:`set_calibration`)."""
         layers = self.spec.layers
+        calib = self._calib if self.dtype == "int8" else None
+        chain_next = self._chain_next()
         plans: Dict[str, DeconvPlan] = {}
         for i, layer in enumerate(layers):
             if layer.kind != "deconv":
@@ -221,12 +261,36 @@ class SDEngine:
             p = params[layer.name]
             act = "linear" if i == len(layers) - 1 else "relu"
             shards = self._layer_shards(layer)
-            plans[layer.name] = self.layer_plan(layer, act).bind(
+            tgt = chain_next.get(layer.name)
+            bound = self.layer_plan(layer, act, qout=tgt is not None).bind(
                 p["w"], scale=p.get("scale"),
                 bias=p["b"].astype(jnp.float32),
                 mesh=self.mesh if shards > 1 else None,
                 axis=self.mp_axis)
+            if calib and layer.name in calib:
+                bound = bound.with_chain(
+                    sx_in=calib[layer.name],
+                    sx_out=calib[tgt] if tgt is not None else None,
+                    chain_out=tgt is not None)
+            plans[layer.name] = bound
         return plans
+
+    def set_calibration(
+            self, scales: Optional[Dict[str, float]]) -> "SDEngine":
+        """Install static per-layer activation scales — ``{layer name:
+        input amax/127}`` as produced by ``GenerativeModel.calibrate``
+        or loaded from the calibration cache (``quant.load_calib``).
+        Rebinds in place when params are already bound, so
+        ``swap_checkpoint -> engine.bind`` keeps the calibration: the
+        new plans carry the same scale leaves and the chained jit cache
+        entries are reused without retrace.  ``None`` clears
+        calibration (back to dynamic per-sample scales)."""
+        if scales is not None and self.dtype != "int8":
+            raise ValueError("calibration applies to int8 engines only")
+        self._calib = dict(scales) if scales is not None else None
+        if self._bound is not None:
+            self.bind(self._bound)
+        return self
 
     def bind(self, params: Params) -> "SDEngine":
         """Build and cache all layer plans from ``params`` (called once
@@ -264,7 +328,8 @@ class SDEngine:
     def layer_geom(self, layer: LayerSpec,
                    batch: Optional[int] = None,
                    dtype: Optional[str] = None,
-                   algo: str = "") -> Optional[ConvGeom]:
+                   algo: str = "",
+                   qout: bool = False) -> Optional[ConvGeom]:
         """Autotune geometry of one deconv layer's fused launch at
         ``batch`` (defaults to ``plan_batch``).  Rank-2 only — the 1-D
         and 3-D lowerings resolve their tiles at call time from the
@@ -295,6 +360,10 @@ class SDEngine:
                                     else "")
         if shards > 1:
             geom = dataclasses_replace(geom, shards=shards)
+        if qout:
+            # Chained launch: int8 output tile — separate plan-cache
+            # key (``_q8out``) and a 4x smaller output in the footprint.
+            geom = dataclasses_replace(geom, qout=True)
         return dataclasses_replace(geom, algo=algo) if algo else geom
 
     def plans_for_batch(self, batch: int) -> Dict[str, DeconvPlan]:
@@ -314,7 +383,8 @@ class SDEngine:
         for name, plan in self._plans.items():
             geom = self.layer_geom(
                 layers[name], batch,
-                algo="wino" if plan.backend == "winograd" else "")
+                algo="wino" if plan.backend == "winograd" else "",
+                qout=plan.chain_out)
             out[name] = (plan if geom is None
                          else plan.with_tile(get_plan(geom)))
         return out
@@ -347,7 +417,8 @@ class SDEngine:
 
         def tune_variant(plan, layer, b, x):
             algo = "wino" if plan.backend == "winograd" else ""
-            geom = self.layer_geom(layer, b, algo=algo)
+            geom = self.layer_geom(layer, b, algo=algo,
+                                   qout=plan.chain_out)
 
             def runner(tile, _x=x, _plan=plan):
                 p2 = _plan.with_tile(tile)
@@ -412,7 +483,8 @@ class SDEngine:
             layer = next(l for l in self.spec.layers if l.name == name)
             geom = self.layer_geom(
                 layer, batch,
-                algo="wino" if plan.backend == "winograd" else "")
+                algo="wino" if plan.backend == "winograd" else "",
+                qout=plan.chain_out)
             if geom is None:
                 return None
             ms = autotune.measured_ms(geom)

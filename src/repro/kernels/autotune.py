@@ -53,12 +53,13 @@ from __future__ import annotations
 
 import json
 import os
-import tempfile
 import time
 from dataclasses import asdict, dataclass, replace as dataclasses_replace
 from typing import Callable, Dict, List, Optional
 
 import jax
+
+from repro.core.iohelpers import atomic_write_json
 
 _ENV_CACHE = "REPRO_SD_PLAN_CACHE"
 _DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache", "repro",
@@ -127,6 +128,14 @@ class ConvGeom:
     # separately (their best tiles differ: the Winograd accumulator is
     # alpha^2/m^2 times larger per row) and change the footprint model.
     algo: str = ""
+    # Int8-*output* launches (the activation-chained epilogue requants
+    # the tile to int8 in VMEM before the interleave write).  False is
+    # the historical default — keys unchanged.  True keys separately AND
+    # changes the footprint model: the interleaved output tile is 1 byte
+    # per element (4x smaller), so wider output tiles become legal; and
+    # the launch's HBM write traffic is a quarter of the f32-output
+    # launch, which is exactly what the chained path buys.
+    qout: bool = False
     # Model-parallel degree of the launch (1 = unsharded, the historical
     # default — keys unchanged).  A Cout-sharded plan launches with
     # ``cout`` already divided by the shard count, but its measured time
@@ -144,6 +153,8 @@ class ConvGeom:
             base += f"_{self.dtype}"
         if self.algo:
             base += f"_{self.algo}"
+        if self.qout:
+            base += "_q8out"
         if self.shards > 1:
             base += f"_mp{self.shards}"
         if self.tag:
@@ -298,7 +309,10 @@ def vmem_plan_bytes(geom: ConvGeom, plan: KernelPlan) -> int:
     filt = kt * ktw * plan.tcin * plan.tcout * phases
     acc = (th + 1) * (tw + 1) * plan.tcout * phases
     out = th * s * tw * sw * plan.tcout
-    return isz * (band + filt) + 4 * (acc + out)
+    # Chained launches write an int8 output tile: 1 byte per element
+    # (the accumulator stays int32/f32 — requant happens at the write).
+    osz = 1 if geom.qout else 4
+    return isz * (band + filt) + 4 * acc + osz * out
 
 
 def _fits_budget(geom: ConvGeom, plan: KernelPlan) -> bool:
@@ -420,30 +434,12 @@ def save_cache(plans: Dict[str, dict], path: Optional[str] = None) -> str:
     """Atomically persist the plan cache.
 
     Concurrent benchmark/serve processes all write the same JSON file;
-    each writer gets a *unique* temp file in the target directory
-    (``mkstemp`` — a fixed ``.tmp`` name would let two writers
-    interleave into one temp file), fsyncs it, then ``os.replace``\\ s it
-    over the cache in one atomic rename.  Readers therefore only ever
-    see a complete JSON document: last writer wins, no torn files.
+    the shared :func:`repro.core.iohelpers.atomic_write_json` idiom
+    (unique mkstemp + fsync + ``os.replace``) guarantees readers only
+    ever see a complete document: last writer wins, no torn files.
     """
     p = cache_path(path)
-    d = os.path.dirname(p) or "."
-    os.makedirs(d, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(p) + ".",
-                               suffix=".tmp")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump({"version": 1, "plans": plans}, f, indent=1,
-                      sort_keys=True)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, p)
-    except BaseException:
-        try:
-            os.unlink(tmp)
-        except OSError:
-            pass
-        raise
+    atomic_write_json(p, {"version": 1, "plans": plans})
     _MEM[p] = dict(plans)
     return p
 

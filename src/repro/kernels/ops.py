@@ -126,15 +126,18 @@ def ws_to_ocmajor(ws: jax.Array, s: int) -> jax.Array:
 
 @functools.partial(jax.jit,
                    static_argnames=("s", "act", "th", "tw", "tcin",
-                                    "tcout", "pad", "crop", "out_space"))
+                                    "tcout", "pad", "crop", "out_space",
+                                    "out_dtype"))
 def _sd_fused_jit(x: jax.Array, ws_ocmajor: jax.Array, s,
                   bias: jax.Array | None, act: str, th: int, tw: int,
                   tcin: int, tcout: int, pad, crop,
-                  out_space, scale: jax.Array | None = None) -> jax.Array:
+                  out_space, scale: jax.Array | None = None,
+                  out_dtype: str | None = None) -> jax.Array:
     return _k.sd_fused_pallas(x, ws_ocmajor, s, bias=bias, act=act,
                               scale=scale,
                               th=th, tw=tw, tcin=tcin, tcout=tcout,
                               pad=pad, crop=crop, out_space=out_space,
+                              out_dtype=out_dtype,
                               interpret=not _on_tpu())
 
 
@@ -168,6 +171,7 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
                              bias: jax.Array | None = None,
                              act: str = "linear",
                              scale: jax.Array | None = None,
+                             out_dtype=None,
                              plan: KernelPlan | None = None,
                              zero_copy: bool = True) -> jax.Array:
     """2-D transposed conv from *pre-split* oc-major filters via the
@@ -186,9 +190,13 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
     folded BN scale), ``bias`` and ``plan`` come from the per-layer plan
     cache, so nothing here touches ``split_filters``.
 
-    Int8 launches (int8 ``x`` and ``ws_ocmajor``, with the (B, Cout*ss)
-    combined dequant ``scale``) require the zero-copy path: the
-    pad -> kernel -> crop reference has no in-kernel dequant epilogue.
+    Int8 launches (int8 ``x`` and ``ws_ocmajor``, with the combined
+    dequant ``scale`` — (B, Cout*ss) dynamic or (1, Cout*ss) static)
+    require the zero-copy path: the pad -> kernel -> crop reference has
+    no in-kernel dequant epilogue.  ``out_dtype="int8"`` (chained
+    launches) makes the epilogue re-quantize in VMEM so the output
+    tensor lands in HBM as int8; the autotune key then carries
+    ``_q8out`` (the output tile is 4x smaller in VMEM).
     """
     s = _ntuple(stride, 2)
     op = _ntuple(output_padding, 2)
@@ -205,6 +213,7 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
         raise ValueError("int8 presplit execution requires the "
                          "zero-copy fused path (the reference "
                          "composition has no dequant epilogue)")
+    qout = out_dtype is not None and jnp.dtype(out_dtype) == jnp.int8
     if zero_copy:
         b, h, wd, cin = x.shape
         cout = ws_ocmajor.shape[-1] // (s[0] * s[1])
@@ -212,8 +221,9 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
             # Degenerate geometry (a zero-extent output dim passes
             # padding validation): nothing to launch — match the
             # pad->kernel->crop reference, which crops to empty.
-            return jnp.zeros((b, *out_space, cout),
-                             jnp.float32 if quant else x.dtype)
+            dt = out_dtype if out_dtype is not None else (
+                jnp.float32 if quant else x.dtype)
+            return jnp.zeros((b, *out_space, cout), dt)
         crop = tuple(pki + lo for pki, (lo, _) in zip(pk, pads))
         rplan = plan if plan is not None else _resolve_plan(
             ConvGeom(b, h + 2 * pih, wd + 2 * piw, cin, cout, kth, s[0],
@@ -221,12 +231,13 @@ def sd_deconv_presplit_fused(x: jax.Array, ws_ocmajor: jax.Array,
                      sw=0 if s[1] == s[0] else s[1],
                      out_h=out_space[0], out_w=out_space[1],
                      crop_h=crop[0], crop_w=crop[1],
-                     dtype="int8" if quant else ""),
+                     dtype="int8" if quant else "", qout=qout),
             None, None, None)
         return _sd_fused_jit(x, ws_ocmajor, sarg, bias, act, rplan.th,
                              rplan.tw, rplan.tcin, rplan.tcout,
                              ((pih, pih), (piw, piw)), crop,
-                             tuple(out_space), scale)
+                             tuple(out_space), scale,
+                             "int8" if qout else None)
 
     # ---- reference composition: pad -> uncropped kernel -> crop ------
     xp = jnp.pad(x, ((0, 0), (pih, pih), (piw, piw), (0, 0)))
@@ -350,6 +361,7 @@ def sd_deconv_presplit_fused_1d(x: jax.Array, ws_ocmajor: jax.Array,
                                 bias: jax.Array | None = None,
                                 act: str = "linear",
                                 scale: jax.Array | None = None,
+                                out_dtype=None,
                                 plan: KernelPlan | None = None
                                 ) -> jax.Array:
     """1-D SD through the fused kernel, lowered as H=1 2-D.
@@ -368,7 +380,7 @@ def sd_deconv_presplit_fused_1d(x: jax.Array, ws_ocmajor: jax.Array,
     y = sd_deconv_presplit_fused(
         x[:, None], ws_ocmajor[None], (1, k), (1, s),
         ((0, 0), (lo, hi)), output_padding=(0, op), bias=bias, act=act,
-        scale=scale, plan=plan)
+        scale=scale, out_dtype=out_dtype, plan=plan)
     return y[:, 0]
 
 
@@ -378,6 +390,7 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
                                 bias: jax.Array | None = None,
                                 act: str = "linear",
                                 scale: jax.Array | None = None,
+                                out_dtype=None,
                                 plan: KernelPlan | None = None
                                 ) -> jax.Array:
     """3-D SD: depth folded into batch for the intra-slice convs.
@@ -430,9 +443,10 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
         if scale is None:
             scale = jnp.ones((b, nco), jnp.float32)
         # Dequant before the interleave: n-major phase channels carry
-        # distinct scales (per-sample activation x per-channel filter).
+        # distinct scales (per-sample activation x per-channel filter;
+        # a single static row broadcasts over the batch).
         y = y.astype(jnp.float32) * scale.astype(jnp.float32).reshape(
-            b, 1, 1, 1, nco)
+            -1, 1, 1, 1, nco)
     full = depth_to_space(y, s)
     out = crop_interleaved(full, pk, pads, out_space)
     if bias is not None:
@@ -441,6 +455,11 @@ def sd_deconv_presplit_fused_3d(x: jax.Array, ws_nmajor: jax.Array,
         out = jax.nn.relu(out)
     elif act == "tanh":
         out = jnp.tanh(out)
+    if quant and out_dtype is not None and jnp.dtype(out_dtype) == jnp.int8:
+        # Chained launch: 1/sx_next is already folded into scale+bias —
+        # re-quantize with the same round + saturating clamp as the
+        # fused kernel's epilogue.
+        return jnp.clip(jnp.round(out), -127.0, 127.0).astype(jnp.int8)
     return out.astype(jnp.float32 if quant else x.dtype)
 
 

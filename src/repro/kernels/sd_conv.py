@@ -340,6 +340,12 @@ def _sd_fused_body(x_ref, w_ref, b_ref, *rest, kth: int,
         y = _apply_act(y, act)
         # Residual crop: a *static* slice of the interleaved VMEM tile.
         y = y[res_h:res_h + th * sh, res_w:res_w + tw * sw]
+        if o_ref.dtype == jnp.int8:
+            # Chained launch: the next layer's 1/sx is already folded
+            # into scale+bias, so re-quantizing is a round + saturating
+            # clamp (never a wrapping cast) — the tile leaves VMEM as
+            # the next layer's int8 input, f32 never touches HBM.
+            y = jnp.clip(jnp.round(y), -127.0, 127.0)
         o_ref[0] = y.astype(o_ref.dtype)
 
 
@@ -363,10 +369,12 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
         ``(sh, sw)`` pair (the 1-D lowering passes ``(1, s)``).
     bias: (Cout,) added per output channel in the epilogue (folded-BN
           beta); ``act`` in {"linear", "relu", "tanh"} applied after.
-    scale: int8 launches only — (B, Cout*sh*sw) f32 combined dequant
-          scale per (sample, oc-major phase channel): the per-sample
-          activation scale times the per-channel filter scale.  Staged
-          once per (batch, cout-tile) and multiplied into the int32
+    scale: int8 launches only — f32 combined dequant scale per oc-major
+          phase channel, either (B, Cout*sh*sw) (dynamic per-sample
+          activation scales) or (1, Cout*sh*sw) (one *static*
+          calibrated row shared by every sample).  Staged once per
+          (batch, cout-tile) — the static row binds with a
+          batch-independent index map — and multiplied into the int32
           accumulator in the epilogue, before interleave/bias/act.
     crop: low-side crop per dim in interleaved coordinates (``P_K`` +
           user padding); folded into the launch as a ``c // s`` input
@@ -379,7 +387,11 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
 
     returns (B, *out_space, Cout) — final deconv output geometry, one
     HBM write per element.  ``out_dtype`` defaults to ``x.dtype`` for
-    float launches and f32 (the dequantized value) for int8 launches.
+    float launches and f32 (the dequantized value) for int8 launches;
+    an int8 ``out_dtype`` (int8 launches only) makes the epilogue
+    re-quantize the activated tile in VMEM — round + saturating clamp
+    to ±127 — so the inter-layer tensor lives in HBM as int8 (the
+    caller must have folded ``1/sx_next`` into ``scale`` and ``bias``).
     """
     sh, sw = (s, s) if isinstance(s, int) else (int(s[0]), int(s[1]))
     b, h, wd, cin = x.shape
@@ -392,6 +404,9 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
         raise ValueError("scale requires an int8 (x, ws) pair")
     if out_dtype is None:
         out_dtype = jnp.float32 if quant else x.dtype
+    out_dtype = jnp.dtype(out_dtype)
+    if out_dtype == jnp.int8 and not quant:
+        raise ValueError("int8 out_dtype requires an int8 (x, ws) pair")
     (plo_h, phi_h), (plo_w, phi_w) = pad
     full_oh = h + plo_h + phi_h - kth + 1     # conv rows incl. pad
     full_ow = wd + plo_w + phi_w - ktw + 1
@@ -447,10 +462,15 @@ def sd_fused_pallas(x: jax.Array, ws_ocmajor: jax.Array, s, *,
     ]
     operands = [x, ws_ocmajor, bias2d]
     if quant:
-        # Per-sample dequant scales: one (1, TCout*ss) row staged per
-        # (batch, cout-tile) grid step.
-        in_specs.append(pl.BlockSpec(
-            (1, tcout * ss), lambda bi, i, j, co, ci: (bi, co)))
+        # Dequant scales: one (1, TCout*ss) row staged per (batch,
+        # cout-tile) grid step.  A single-row scale is the *static*
+        # calibrated case — bind it with a batch-independent index map
+        # so all samples share the one HBM row.
+        if scale.shape[0] == 1:
+            smap = lambda bi, i, j, co, ci: (0, co)
+        else:
+            smap = lambda bi, i, j, co, ci: (bi, co)
+        in_specs.append(pl.BlockSpec((1, tcout * ss), smap))
         operands.append(scale.astype(jnp.float32))
     return pl.pallas_call(
         body,

@@ -110,13 +110,21 @@ class GenServer:
     def __init__(self, nets=("dcgan",), dtype=jnp.float32,
                  backend: str = "auto", max_batch: int = 16, dp: int = 1,
                  mp: int = 1, seed: int = 0,
-                 specs: Optional[Dict[str, NetworkSpec]] = None):
+                 specs: Optional[Dict[str, NetworkSpec]] = None,
+                 calib: int = 0):
         # dtype="int8" selects the quantized serving path: engines bind
         # int8 plans (per-channel weight quant at bind, per-sample
         # activation quant + dequant epilogue on the hot path), while
         # latents/params/outputs stay f32 — int8 is an execution dtype,
         # not an IO dtype.  The compile-cache key says "int8", so float
         # and int8 cells of the same (net, bucket) coexist.
+        #
+        # calib=N (int8 only) additionally runs an N-latent calibration
+        # sweep per net at bind: static per-layer activation scales
+        # replace the per-sample amax pass, and consecutive deconv
+        # layers chain int8 activations through HBM (the scales are
+        # persisted to the calibration cache under "<net>/max").
+        self.calib = int(calib)
         self.engine_dtype = "native"
         if isinstance(dtype, str) and dtype == "int8":
             self.engine_dtype = "int8"
@@ -169,6 +177,12 @@ class GenServer:
                                 engine_mesh=self._mesh)
             params = m.init(jax.random.PRNGKey(self.seed),
                             dtype=self.dtype)
+            if self.engine_dtype == "int8" and self.calib > 0:
+                # Static activation calibration: one deterministic sweep
+                # per server lifetime, before any cell compiles — every
+                # (net, bucket) executable traces against chained plans.
+                m.calibrate(params, n=self.calib, seed=self.seed,
+                            save_key=f"{net}/max")
             self._models[net] = (m, params)
         return self._models[net]
 
@@ -420,6 +434,11 @@ def main(argv=None):
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16", "int8"],
                     help="int8 = quantized engine plans (f32 IO)")
+    ap.add_argument("--calib", type=int, default=0, metavar="N",
+                    help="int8 only: calibrate static activation "
+                         "scales on N latents per net and chain int8 "
+                         "activations between consecutive deconv "
+                         "layers (0 = dynamic per-sample scales)")
     ap.add_argument("--sched", default="async",
                     choices=["async", "drain"],
                     help="async = continuous-batching scheduler "
@@ -458,9 +477,12 @@ def main(argv=None):
         n_requests = args.requests
 
     dtype = "int8" if args.dtype == "int8" else jnp.dtype(args.dtype)
+    if args.calib and args.dtype != "int8":
+        ap.error("--calib requires --dtype int8")
     server = GenServer(nets=nets, dtype=dtype,
                        backend=args.backend, max_batch=args.max_batch,
-                       dp=args.dp, mp=args.mp, specs=specs)
+                       dp=args.dp, mp=args.mp, specs=specs,
+                       calib=args.calib)
     if args.pretune:
         t0 = time.time()
         tuned = server.pretune()

@@ -210,6 +210,70 @@ class GenerativeModel:
     def __call__(self, params: Params, x: jax.Array) -> jax.Array:
         return self.apply(params, x)
 
+    # ---- static activation calibration -----------------------------------
+    def calibrate(self, params: Params, n: int = 64, seed: int = 0,
+                  policy: str = "max", pct: float = 99.9,
+                  save_key: Optional[str] = None,
+                  path: Optional[str] = None,
+                  latents: Optional[jax.Array] = None
+                  ) -> Dict[str, float]:
+        """Calibrate static per-layer activation scales for the int8
+        chained path and install them on the engine.
+
+        Runs ``n`` latents (one deterministic batch from
+        ``PRNGKey(seed)`` — fixed seed => bit-identical scales) through
+        the *float* functional forward and records, per deconv layer,
+        the amax statistic of that layer's **input** activation
+        (``policy="max"`` exact, ``"pct"`` percentile — see
+        :func:`repro.core.quant.amax_stat`).  The resulting
+        ``{layer: amax/127}`` scales go to
+        :meth:`repro.engine.SDEngine.set_calibration`, which rebinds
+        the plans with chaining wired between consecutive deconv
+        layers; ``save_key`` additionally persists them to the
+        calibration cache (``quant.save_calib``) next to the autotune
+        plan cache, so servers can skip the sweep on warm starts.
+
+        Pass ``latents`` to calibrate on a caller-supplied batch
+        instead of unit-normal noise — static scales are only as good
+        as the distribution they were swept on, so callers whose
+        serving latents are scaled (or real data) should feed a
+        representative batch here.
+        """
+        from repro.core.quant import amax_stat, save_calib, scale_from_amax
+        engine = self._engine
+        if engine is None or engine.dtype != "int8":
+            raise ValueError("calibrate() needs an int8 engine impl "
+                             "(deconv_impl='sd_kernel', "
+                             "engine_dtype='int8')")
+        if latents is None:
+            key = jax.random.PRNGKey(seed)
+            x = jax.random.normal(key, self.input_shape(int(n)),
+                                  jnp.float32)
+        else:
+            x = jnp.asarray(latents, jnp.float32)
+        stats: Dict[str, jax.Array] = {}
+
+        def step(layer, p, h):
+            # Record the layer's INPUT amax on the f32 reference path,
+            # then run the float deconv (same numerics the unquantized
+            # model serves) so downstream layers see faithful inputs.
+            stats[layer.name] = amax_stat(h, policy, pct)
+            fp = self._functional_plan(layer)
+            h = sd.conv_transpose(fp, h, p["w"])
+            return h * p["scale"] + p["b"], False
+
+        self._forward(params, x, step)
+        scales = {name: scale_from_amax(v) for name, v in stats.items()}
+        if save_key is not None:
+            save_calib(save_key, scales, path)
+        engine.set_calibration(scales)
+        # A never-bound engine only stored the scales above — bind now
+        # (we have the params in hand) so callers see chained plans
+        # immediately instead of after the first apply().
+        if not engine.bound_to(params):
+            engine.bind(params)
+        return scales
+
     # ---- convenience -----------------------------------------------------
     @property
     def engine(self):

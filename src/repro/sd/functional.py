@@ -120,26 +120,54 @@ def _run_presplit(plan: DeconvPlan, x: jax.Array, ws: jax.Array,
 def _run_presplit_int8(plan: DeconvPlan, x: jax.Array) -> jax.Array:
     """Quantized deployment path of a bound int8 plan.
 
-    Activations are quantized *dynamically, per sample* (the zero rows
-    a bucketed server pads a batch with can never perturb real
-    samples), the stride-1 conv runs int8 x int8 -> int32, and the
-    combined dequant scale — per-sample activation scale times the
-    plan's per-channel filter scale (BN already folded in) — is applied
-    before the interleave, where each phase channel still has its own
-    scale.  Output is f32.
+    Without calibration (``plan.sx_in is None``) activations are
+    quantized *dynamically, per sample* (the zero rows a bucketed
+    server pads a batch with can never perturb real samples), the
+    stride-1 conv runs int8 x int8 -> int32, and the combined dequant
+    scale — per-sample activation scale times the plan's per-channel
+    filter scale (BN already folded in) — is applied before the
+    interleave, where each phase channel still has its own scale.
+    Output is f32.
+
+    A *calibrated* plan (``sx_in`` set) replaces the per-sample amax
+    pass with the static scale: an f32 input quantizes elementwise
+    against ``sx_in`` (saturating clamp, no reduction anywhere on the
+    path), and an int8 input — the previous layer's chained epilogue
+    output — is consumed directly.  With ``chain_out`` the epilogue
+    additionally folds ``1/sx_out`` into the combined scale *and* the
+    bias (``act(y)/s == act(y/s)`` for linear/relu, ``s > 0``) and
+    re-quantizes the activated tile to int8 in VMEM, so the
+    inter-layer tensor lives in HBM as int8.
 
     The fused backend does all of this inside the zero-copy Pallas
-    kernel (int32 VMEM accumulator, scale staged once per tile).  The
-    xla backend keeps the same quantization numerics but computes the
-    conv on f32-cast operands — XLA's CPU int8 conv path is orders of
-    magnitude slower than its f32 conv, so off-TPU the honest-int8
-    wall-clock would be nonsense; numerically the two differ only by
-    f32-vs-int32 accumulation order.
+    kernel (int32 VMEM accumulator, scale staged once per tile — one
+    static row for calibrated plans).  The xla backend keeps the same
+    quantization numerics but computes the conv on f32-cast operands —
+    XLA's CPU int8 conv path is orders of magnitude slower than its
+    f32 conv, so off-TPU the honest-int8 wall-clock would be nonsense;
+    numerically the two differ only by f32-vs-int32 accumulation order.
     """
-    from repro.core.quant import quantize_act
-    xq, sx = quantize_act(x)
+    from repro.core.quant import quantize_act, quantize_static
+    wscale = plan.wscale.astype(jnp.float32)
+    if plan.sx_in is not None:
+        sx = plan.sx_in.astype(jnp.float32)
+        xq = x if x.dtype == jnp.int8 else quantize_static(x, sx)
+        comb = (sx * wscale)[None, :]              # (1, NC): one static row
+    else:
+        if x.dtype == jnp.int8:
+            raise ValueError("int8 input requires a calibrated plan "
+                             "(sx_in) — the dynamic path has no scale "
+                             "for it")
+        xq, sx = quantize_act(x)
+        comb = sx[:, None] * wscale[None, :]
     bias, act = plan.bias, plan.act
-    comb = sx[:, None] * plan.wscale[None, :].astype(jnp.float32)
+    out_dtype = None
+    if plan.chain_out:
+        sn = plan.sx_out.astype(jnp.float32)
+        comb = comb / sn
+        if bias is not None:
+            bias = bias.astype(jnp.float32) / sn
+        out_dtype = "int8"
     if plan.backend == "fused":
         from repro.kernels import ops
         if plan.rank == 3:
@@ -147,13 +175,13 @@ def _run_presplit_int8(plan: DeconvPlan, x: jax.Array) -> jax.Array:
             return ops.sd_deconv_presplit_fused_3d(
                 xq, plan.ws, plan.kernel, plan.stride, plan.padding,
                 output_padding=plan.output_padding, bias=bias, act=act,
-                scale=comb, plan=plan.tile)
+                scale=comb, out_dtype=out_dtype, plan=plan.tile)
         assert plan.layout == "ocmajor"
         fn = (ops.sd_deconv_presplit_fused_1d if plan.rank == 1
               else ops.sd_deconv_presplit_fused)
         return fn(xq, plan.ws, plan.kernel, plan.stride, plan.padding,
                   output_padding=plan.output_padding, bias=bias, act=act,
-                  scale=comb, plan=plan.tile)
+                  scale=comb, out_dtype=out_dtype, plan=plan.tile)
     assert plan.layout == "nmajor"
     rank = plan.rank
     space1 = (1,) * rank
@@ -165,7 +193,8 @@ def _run_presplit_int8(plan: DeconvPlan, x: jax.Array) -> jax.Array:
             xp.astype(jnp.float32), wsq.astype(jnp.float32),
             window_strides=(1,) * rank, padding="VALID",
             dimension_numbers=conv_dimension_numbers(rank))
-        # dequant per (sample, n-major channel) BEFORE depth_to_space.
+        # dequant per (sample, n-major channel) BEFORE depth_to_space;
+        # a static (1, NC) comb broadcasts over the batch.
         return y * comb.reshape(comb.shape[0], *space1, comb.shape[1])
 
     y = sd_deconv_presplit(xq, plan.ws, plan.kernel, plan.stride,
@@ -177,6 +206,9 @@ def _run_presplit_int8(plan: DeconvPlan, x: jax.Array) -> jax.Array:
         y = jax.nn.relu(y)
     elif act == "tanh":
         y = jnp.tanh(y)
+    if out_dtype is not None:
+        # Chained epilogue: same round + saturating clamp as the kernel.
+        y = jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
     return y
 
 

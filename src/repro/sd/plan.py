@@ -121,6 +121,18 @@ class DeconvPlan:
     ``dtype`` is aux_data, so float and int8 bindings of the same layer
     hash to *different* jit cache entries — a server can hold both
     without retrace collisions.
+
+    Activation chaining (static calibration): ``sx_in`` / ``sx_out``
+    are optional scalar f32 **leaves** — the calibrated static
+    activation scales of this layer's input and output.  With ``sx_in``
+    set, execution quantizes the f32 input statically (no per-sample
+    amax pass) — or consumes an int8 input directly.  ``chain_out``
+    (**aux**, it decides the launch's output dtype) marks the epilogue
+    to fold ``1/sx_out`` into the dequant scale + bias and re-quantize
+    the activated tile to int8 in VMEM, so the inter-layer tensor lives
+    in HBM as int8 and the next layer's plan (whose ``sx_in`` ==
+    ``sx_out``) consumes it with no round-trip.  The scales are leaves
+    so recalibration / checkpoint swap never retraces.
     """
     kernel: Tuple[int, ...]
     stride: Tuple[int, ...]
@@ -135,9 +147,12 @@ class DeconvPlan:
     dtype: str = "native"                  # "native" | "int8"
     shards: int = 1                        # Cout shards over shard_axis
     shard_axis: str = "model"              # mesh axis name of the shards
+    chain_out: bool = False                # aux: epilogue requantizes to int8
     ws: Optional[jax.Array] = None         # leaf: pre-split filters
     bias: Optional[jax.Array] = None       # leaf: per-oc bias
     wscale: Optional[jax.Array] = None     # leaf: int8 per-channel scales
+    sx_in: Optional[jax.Array] = None      # leaf: static input act scale
+    sx_out: Optional[jax.Array] = None     # leaf: static output act scale
 
     def __post_init__(self):
         if self.output_padding is None:
@@ -243,6 +258,10 @@ class DeconvPlan:
             leaves.append(P(ax))
         if self.wscale is not None:
             leaves.append(P(ax))
+        if self.sx_in is not None:          # scalar scales: replicated
+            leaves.append(P())
+        if self.sx_out is not None:
+            leaves.append(P())
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(self), leaves)
 
@@ -338,10 +357,42 @@ class DeconvPlan:
 
     def unbind(self) -> "DeconvPlan":
         return replace(self, ws=None, bias=None, wscale=None,
+                       sx_in=None, sx_out=None, chain_out=False,
                        layout="nmajor")
 
     def with_tile(self, tile: Optional[KernelPlan]) -> "DeconvPlan":
         return replace(self, tile=tile)
+
+    def with_chain(self, sx_in: Optional[Any] = None,
+                   sx_out: Optional[Any] = None,
+                   chain_out: bool = False) -> "DeconvPlan":
+        """Attach static calibrated activation scales (see class doc).
+
+        ``sx_in`` — the input's static scale: execution quantizes the
+        f32 input against it with *no* amax reduction, or consumes an
+        already-int8 input produced by the previous layer's chained
+        epilogue.  ``sx_out`` + ``chain_out=True`` — fold ``1/sx_out``
+        into the epilogue and emit int8.  Scales are stored as scalar
+        f32 leaves; ``chain_out`` is aux (it keys the jit cache — the
+        launch's output dtype is static).  Chained output requires a
+        fold-compatible activation: ``relu(y)/s == relu(y/s)`` for
+        ``s > 0``, and linear trivially — tanh does not commute with
+        the scale, so a tanh layer can head a chain but never emit one.
+        """
+        if self.dtype != "int8":
+            raise ValueError("activation chaining requires an int8 plan")
+        if chain_out:
+            if sx_out is None:
+                raise ValueError("chain_out requires sx_out")
+            if self.act not in ("linear", "relu"):
+                raise ValueError(
+                    f"chain_out cannot fold 1/sx_out through act "
+                    f"{self.act!r}; only linear/relu commute with a "
+                    "positive scale")
+        def _sc(v):
+            return None if v is None else jnp.asarray(v, jnp.float32)
+        return replace(self, sx_in=_sc(sx_in), sx_out=_sc(sx_out),
+                       chain_out=bool(chain_out))
 
 
 DTYPES = ("native", "int8")
@@ -405,24 +456,26 @@ def plan(filter_shape: Sequence[int], stride, padding=0,
 # ---------------------------------------------------------------------------
 
 def _flatten(p: DeconvPlan):
-    # wscale is None on float plans; None children are empty subtrees,
-    # so float bound plans still flatten to exactly (ws, bias) leaves.
-    children = (p.ws, p.bias, p.wscale)
+    # wscale/sx_* are None on float (or unchained) plans; None children
+    # are empty subtrees, so float bound plans still flatten to exactly
+    # (ws, bias) leaves.
+    children = (p.ws, p.bias, p.wscale, p.sx_in, p.sx_out)
     aux = (p.kernel, p.stride, p.padding, p.output_padding, p.cin, p.cout,
            p.backend, p.act, p.layout, p.tile, p.dtype, p.shards,
-           p.shard_axis)
+           p.shard_axis, p.chain_out)
     return children, aux
 
 
 def _unflatten(aux, children) -> DeconvPlan:
-    ws, bias, wscale = children
+    ws, bias, wscale, sx_in, sx_out = children
     (kernel, stride, padding, output_padding, cin, cout, backend, act,
-     layout, tile, dtype, shards, shard_axis) = aux
+     layout, tile, dtype, shards, shard_axis, chain_out) = aux
     return DeconvPlan(kernel=kernel, stride=stride, padding=padding,
                       output_padding=output_padding, cin=cin, cout=cout,
                       backend=backend, act=act, layout=layout, tile=tile,
                       dtype=dtype, shards=shards, shard_axis=shard_axis,
-                      ws=ws, bias=bias, wscale=wscale)
+                      chain_out=chain_out, ws=ws, bias=bias,
+                      wscale=wscale, sx_in=sx_in, sx_out=sx_out)
 
 
 jax.tree_util.register_pytree_node(DeconvPlan, _flatten, _unflatten)
